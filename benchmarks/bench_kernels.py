@@ -1,0 +1,84 @@
+"""Kernel-path microbenchmarks (CPU).
+
+Wall-times on CPU do NOT represent TPU performance (the Pallas kernels run
+in interpret mode); what IS meaningful here:
+  * the pure-jnp production paths (chunked flash attention, SSD chunked
+    scan, fused-vs-naive topic decoder) in steady jit state,
+  * the DERIVED column: analytic FLOPs and bytes per call, i.e. the
+    roofline inputs the TPU projection uses.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.models.layers.attention import chunked_attention
+from repro.models.layers.mamba2 import ssd_chunked
+
+
+def _time(fn, *args, n=10):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(quick=False):
+    rows = []
+    rng = np.random.default_rng(0)
+    b, s, h, hkv, d = (1, 512, 4, 2, 64) if quick else (2, 1024, 8, 2, 64)
+
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    flops = 4 * b * h * s * s * d // 2   # causal
+
+    f_flash = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, pos, pos, causal=True, window=0, scale=d ** -0.5))
+    rows.append((f"flash_attention_jnp_b{b}s{s}", _time(f_flash, q, k, v),
+                 f"flops={flops:.3e}"))
+
+    f_ref = jax.jit(lambda q, k, v: ref.flash_attention_ref(
+        jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2)))
+    rows.append((f"sdpa_naive_b{b}s{s}", _time(f_ref, q, k, v),
+                 f"scores_bytes={b*h*s*s*4:.3e}"))
+
+    # SSD
+    hs, p, n_state = 4, 32, 32
+    x = jnp.asarray(rng.standard_normal((b, s, hs, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, s, hs)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.5, 2, (hs,)), jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((b, s, n_state)), jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((b, s, n_state)), jnp.float32)
+    f_ssd = jax.jit(lambda *t: ssd_chunked(*t, chunk=128))
+    rows.append((f"ssd_chunked_b{b}s{s}", _time(f_ssd, x, dt, a, bb, cc),
+                 f"state_bytes={b*hs*p*n_state*4}"))
+    f_naive = jax.jit(ref.ssd_scan_ref)
+    rows.append((f"ssd_naive_scan_b{b}s{s}",
+                 _time(f_naive, x, dt, a, bb, cc),
+                 "sequential reference"))
+
+    # topic decoder: fused (never materializes B x V logits) vs naive
+    bt, kt, vt = (64, 20, 2000) if quick else (256, 50, 5000)
+    theta = jax.nn.softmax(jnp.asarray(
+        rng.standard_normal((bt, kt)), jnp.float32))
+    beta = jnp.asarray(rng.standard_normal((kt, vt)), jnp.float32)
+    bow = jnp.asarray(rng.poisson(0.1, (bt, vt)).astype(np.float32))
+    f_naive_td = jax.jit(lambda *t: ref.topic_decoder_ref(*t))
+    rows.append((f"topic_decoder_naive_B{bt}V{vt}",
+                 _time(f_naive_td, theta, beta, bow),
+                 f"logits_bytes={bt*vt*4}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,101 @@
+"""Protocol microbenchmarks: per-round cost of the gFedNTM machinery.
+
+Times (CPU wall-clock, jit-compiled steady state):
+  * Eq. (2) aggregation over L clients,
+  * secure-aggregation masking overhead,
+  * top-k compression + error feedback,
+  * one full federated round (ProdLDA) vs one centralized step,
+  * FedAvg local-steps rounds (the collective-volume knob) — also reports
+    the analytic bytes-on-the-wire per round for each mode.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import FederatedConfig
+from repro.core.aggregation import (aggregate_host,
+                                    compress_with_error_feedback,
+                                    secure_mask_grads, topk_sparsify)
+from repro.core.ntm import prodlda
+from repro.core.protocol import (ClientState, FedAvgTrainer,
+                                 FederatedTrainer)
+from repro.data.synthetic_lda import generate_lda_corpus
+
+
+def _time(fn, *args, n=20, **kw):
+    fn(*args, **kw)   # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6   # us
+
+
+def payload_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def run(quick=False):
+    rows = []
+    cfg = get_config("prodlda-synthetic").reduced()
+    params = prodlda.init_params(jax.random.PRNGKey(0), cfg)
+    n_clients = 5
+    grads = [jax.tree_util.tree_map(
+        lambda p: jnp.asarray(np.random.default_rng(i).standard_normal(
+            p.shape), jnp.float32), params) for i in range(n_clients)]
+    weights = [float(16 * (i + 1)) for i in range(n_clients)]
+
+    agg = jax.jit(lambda gs: aggregate_host(gs, weights))
+    rows.append(("aggregate_eq2_5clients", _time(agg, grads),
+                 f"payload={payload_bytes(grads[0])}B"))
+
+    mask = jax.jit(lambda g: secure_mask_grads(
+        g, jax.random.PRNGKey(0), 2, n_clients, 16.0))
+    rows.append(("secure_mask_per_client", _time(mask, grads[0]),
+                 "pairwise PRG masks"))
+
+    spars = jax.jit(lambda g: topk_sparsify(g, 0.1))
+    rows.append(("topk_sparsify_10pct", _time(spars, grads[0]),
+                 f"kept~{int(0.1 * payload_bytes(grads[0]))}B"))
+
+    # full rounds
+    syn = generate_lda_corpus(vocab_size=cfg.vocab_size,
+                              num_topics=cfg.num_topics, num_nodes=3,
+                              shared_topics=3, docs_per_node=200,
+                              val_docs_per_node=20, seed=0)
+    loss = lambda p, b: prodlda.elbo_loss(p, cfg, b, train=False)  # noqa
+    clients = [ClientState(data={"bow": b}, num_docs=len(b))
+               for b in syn.node_bows]
+    fed = FederatedConfig(learning_rate=1e-2, max_rounds=3)
+    tr = FederatedTrainer(loss, params, clients, fed, batch_size=32)
+    tr.round()
+    t0 = time.perf_counter()
+    reps = 2 if quick else 5
+    for _ in range(reps):
+        tr.round()
+    rows.append(("federated_round_syncopt",
+                 (time.perf_counter() - t0) / reps * 1e6,
+                 f"wire/round={2 * payload_bytes(params)}B"))
+
+    fa = FedAvgTrainer(loss, params, clients,
+                       FederatedConfig(learning_rate=1e-2, local_steps=4),
+                       batch_size=32)
+    fa.round()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fa.round()
+    rows.append(("fedavg_round_4localsteps",
+                 (time.perf_counter() - t0) / reps * 1e6,
+                 f"wire/4steps={2 * payload_bytes(params)}B (4x less/step)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,79 @@
+"""Roofline table builder: experiments/dryrun/*.json -> markdown table.
+
+Reads every dry-run report and emits the EXPERIMENTS.md §Roofline table:
+per (arch x shape x mesh) the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and the per-device memory proof.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import List
+
+
+def load_reports(path="experiments/dryrun") -> List[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def table(reports: List[dict], *, mesh=None) -> str:
+    rows = []
+    header = ("| arch | shape | mesh | compute (ms) | memory (ms) | "
+              "collective (ms) | bound | useful-FLOPs | args+temp GiB/dev |")
+    sep = "|" + "---|" * 9
+    rows.append(header)
+    rows.append(sep)
+    reports = [r for r in reports if mesh is None or r["mesh"] == mesh]
+    reports.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9),
+                                r["mesh"]))
+    for r in reports:
+        mem = r.get("memory_per_device", {})
+        gib = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)) / 2 ** 30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+            f"| {r['collective_s']*1e3:.2f} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.3f} | {gib:.2f} |")
+    return "\n".join(rows)
+
+
+def summarize(reports: List[dict]) -> str:
+    lines = []
+    from collections import Counter
+    c = Counter(r["bottleneck"] for r in reports)
+    lines.append(f"pairs: {len(reports)}; bottleneck mix: {dict(c)}")
+    worst = sorted(reports, key=lambda r: -max(
+        r["compute_s"], r["memory_s"], r["collective_s"]))[:3]
+    for r in worst:
+        lines.append(f"  worst roofline: {r['arch']} x {r['shape']} "
+                     f"({r['mesh']}): {r['bottleneck']} "
+                     f"{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e3:.1f}ms")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--path", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args(argv)
+    reports = load_reports(args.path)
+    if not reports:
+        print("no dry-run reports found; run python -m repro.launch.dryrun")
+        return
+    print(table(reports, mesh=args.mesh))
+    print()
+    print(summarize(reports))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the repo convention:
+  * protocol microbenchmarks (gFedNTM round costs, Eq. 2 aggregation,
+    secure-agg/compression overheads),
+  * kernel-path timings with analytic roofline inputs,
+  * Fig. 3 (synthetic DSS/TSS, quick setting) summary rows,
+  * Fig. 4 (AMWMD, quick setting) summary rows,
+  * roofline-table availability from the dry-run artifacts.
+
+Full-scale versions: ``python -m benchmarks.bench_synthetic --full`` etc.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    rows = []
+
+    from benchmarks import bench_protocol
+    rows += bench_protocol.run(quick=True)
+
+    from benchmarks import bench_kernels
+    rows += bench_kernels.run(quick=True)
+
+    # paper Fig. 3 (quick scale): report the headline comparisons
+    from benchmarks import bench_synthetic
+    t0 = time.time()
+    res = bench_synthetic.run(quick=True,
+                              out_path="experiments/bench_synthetic.json")
+    dt = (time.time() - t0) * 1e6
+    a = res["setting_A"]
+    rows.append(("fig3_dss_gain_smallKprime", dt / max(len(a), 1),
+                 f"central={a[0]['dss_central']:.3f},"
+                 f"noncollab={a[0]['dss_noncollab']:.3f}"))
+    rows.append(("fig3_tss_gain_smallKprime", dt / max(len(a), 1),
+                 f"central={a[0]['tss_central']:.2f},"
+                 f"noncollab={a[0]['tss_noncollab']:.2f},"
+                 f"baseline={a[0]['tss_baseline']:.2f}"))
+    rows.append(("fig3_fed_eq_centralized", 0.0,
+                 f"max_grad_err={res['fed_equals_centralized_maxerr']:.2e}"))
+
+    # paper Fig. 4 (quick scale)
+    from benchmarks import bench_wmd
+    t0 = time.time()
+    wres = bench_wmd.run(quick=True,
+                         out_path="experiments/bench_wmd.json")
+    dt = (time.time() - t0) * 1e6
+    fed_keys = [k for k in wres["amwmd"] if k.startswith("federated")]
+    fed_avg = min(float(np.mean(wres["amwmd"][k])) for k in fed_keys)
+    rows.append(("fig4_amwmd_federated_avg", dt, f"avg={fed_avg:.3f},"
+                 f"claim_holds={wres['fig4_claim_holds']}"))
+
+    # roofline artifacts (built by the dry-run, reported by roofline.py)
+    from benchmarks import roofline
+    reports = roofline.load_reports()
+    rows.append(("roofline_pairs_available", 0.0,
+                 f"n={len(reports)} (see EXPERIMENTS.md)"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

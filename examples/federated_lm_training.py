@@ -1,0 +1,67 @@
+"""End-to-end driver: federated training of a ~100M-parameter LM.
+
+Trains a reduced-but-real llama-family model (phi3 family, ~25-110M params
+depending on --width) for a few hundred steps on CPU under the gFedNTM
+protocol semantics: 4 federated clients with non-IID token distributions,
+Eq. (2) sample-weighted gradient aggregation (via the global-mean loss,
+exactly equivalent — tests/test_protocol.py), Eq. (3) SGD server update.
+
+Run:  PYTHONPATH=src python examples/federated_lm_training.py \
+          --steps 300 --width 512
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.lm_data import SyntheticLMStream
+from repro.launch.steps import make_train_step
+from repro.models import transformer as tfm
+from repro.optim import sgd, warmup_cosine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--width", type=int, default=384)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--clients", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    cfg = dataclasses.replace(
+        cfg, num_layers=args.layers, d_model=args.width,
+        num_heads=args.width // 64, num_kv_heads=args.width // 64,
+        head_dim=64, d_ff=args.width * 4, vocab_size=8192)
+    n_params = cfg.num_params()
+    print(f"model: {cfg.num_layers}L d={cfg.d_model} "
+          f"(~{n_params/1e6:.1f}M params), {args.clients} federated clients")
+
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    opt = sgd(warmup_cosine(0.5, 20, args.steps), momentum=0.9)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt, dtype=jnp.float32))
+    stream = SyntheticLMStream(cfg, args.batch, args.seq,
+                               num_clients=args.clients)
+
+    t0 = time.time()
+    losses = []
+    for step, batch in zip(range(args.steps), stream):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, loss = step_fn(params, opt_state, batch, step)
+        losses.append(float(loss))
+        if step % 25 == 0:
+            tps = args.batch * args.seq * (step + 1) / (time.time() - t0)
+            print(f"[{step:4d}] loss={float(loss):.4f} tok/s={tps:,.0f}")
+    print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"in {time.time()-t0:.1f}s")
+    assert losses[-1] < losses[0], "training should reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Serving demo: batched prefill + autoregressive decode across families.
+
+Exercises the three cache disciplines in production serving:
+  * full KV cache            (phi3 — dense GQA),
+  * ring-buffer window cache (granite with the long_500k sliding-window
+    variant — constant memory at any context length),
+  * recurrent SSM state      (mamba2 — no KV cache at all).
+
+Run:  PYTHONPATH=src python examples/serve_demo.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as tfm
+
+
+def demo(arch, *, window=0, prompt_len=48, max_new=16):
+    cfg = get_config(arch).reduced()
+    if window:
+        cfg = dataclasses.replace(cfg, sliding_window=window)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, prompt_len)),
+                          jnp.int32)
+    prefill = jax.jit(lambda p, b: tfm.prefill(
+        p, cfg, b, dtype=jnp.float32, max_len=prompt_len + max_new))
+    decode = jax.jit(lambda p, c, t: tfm.decode_step(p, cfg, c, t,
+                                                     dtype=jnp.float32))
+    logits, cache = prefill(params, {"tokens": prompts})
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for _ in range(max_new - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    cache_desc = {k: tuple(v.shape) for k, v in cache.items()
+                  if hasattr(v, "shape") and v.ndim > 0}
+    print(f"{arch:18s} window={window or '-':>5} "
+          f"{2 * (max_new - 1) / dt:6.1f} tok/s  cache={cache_desc}")
+    return np.asarray(jnp.concatenate(out, axis=1))
+
+
+def main():
+    print("arch               window  tok/s   cache layout")
+    demo("phi3-mini-3.8b")                 # full KV cache
+    demo("granite-34b", window=32)         # ring buffer (long-context mode)
+    demo("mamba2-1.3b")                    # recurrent state only
+    demo("minicpm3-4b")                    # MLA latent cache
+    demo("hymba-1.5b")                     # hybrid: window KV + SSM state
+
+
+if __name__ == "__main__":
+    main()

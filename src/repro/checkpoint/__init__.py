@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    load_checkpoint, save_checkpoint, latest_step)

@@ -1,0 +1,87 @@
+"""Pytree checkpointing (npz-based, no external deps).
+
+Flattens an arbitrary params/opt-state pytree into path-keyed arrays.
+Works with the sharded-training flow: arrays are pulled to host with
+``jax.device_get`` (on a real multi-host pod each host saves its
+addressable shards; here the process-local view is the whole array).
+Atomic write (tmp + rename) so a killed run never leaves a torn file.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def _unflatten_into(template, flat: Dict[str, Any]):
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves:
+        key = _SEP.join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint shape mismatch at {key}: "
+                f"{arr.shape} vs template {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *, prefix="ckpt") -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(ckpt_dir, f"{prefix}_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def latest_step(ckpt_dir: str, *, prefix="ckpt") -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    pat = re.compile(rf"{re.escape(prefix)}_(\d+)\.npz$")
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := pat.match(f))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
+                    *, prefix="ckpt") -> Tuple[Any, int]:
+    if step is None:
+        step = latest_step(ckpt_dir, prefix=prefix)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"{prefix}_{step:08d}.npz")
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten_into(template, flat), step

@@ -1,0 +1,8 @@
+"""The paper's contribution: gFedNTM — federated neural topic modeling."""
+from repro.core import aggregation, protocol, vocab  # noqa: F401
+from repro.core.protocol import (  # noqa: F401
+    ClientState, FedAvgTrainer, FederatedTrainer,
+    make_federated_train_step, train_centralized, train_non_collaborative,
+    weighted_global_loss)
+from repro.core.vocab import (  # noqa: F401
+    Vocabulary, consensus_token_map, merge_vocabularies, reindex_bow)

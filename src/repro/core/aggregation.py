@@ -1,0 +1,146 @@
+"""Gradient aggregation: paper Eq. (2) plus the beyond-paper extensions.
+
+Two execution flavors of the same math:
+  * host-side (``aggregate_host``) — explicit list-of-client-grads, used by
+    the Algorithm-1-faithful ``FederatedTrainer`` that runs the NTM
+    experiments (one process simulating L nodes + server);
+  * in-graph (``aggregate_psum``) — ``jax.lax.psum`` over the mesh client
+    axis inside ``shard_map``, used by ``federated_train_step`` for the
+    production architectures.  On TPU the ICI all-reduce IS the server
+    rendezvous (DESIGN.md §2).
+
+Beyond-paper (each is an EXPERIMENTS.md §Perf / privacy feature, all
+composable with Eq. (2)):
+  * secure aggregation — pairwise antisymmetric PRG masks that cancel in
+    the sum: the server (or the wire) only ever sees masked gradients;
+  * top-k sparsification with error feedback — collective-bytes reduction;
+  * local differential privacy — per-client clip + Gaussian noise
+    [Wang et al. 2020 ref 25].
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import clip_by_global_norm
+
+Pytree = Any
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (2): weighted average
+# ---------------------------------------------------------------------------
+def aggregate_host(grads: Sequence[Pytree],
+                   weights: Sequence[float]) -> Pytree:
+    """G = sum_l n_l G_l / sum_l n_l  over an explicit client list."""
+    w = jnp.asarray(weights, jnp.float32)
+    total = jnp.sum(w)
+
+    def combine(*gs):
+        acc = sum(wi * g.astype(jnp.float32) for wi, g in zip(w, gs))
+        return acc / total
+
+    return _tmap(combine, *grads)
+
+
+def aggregate_psum(grad: Pytree, n_samples, axis_name) -> Pytree:
+    """In-graph Eq. (2): every client holds its local grad and sample count;
+    returns the identical weighted average on all clients."""
+    n = jnp.asarray(n_samples, jnp.float32)
+    total = jax.lax.psum(n, axis_name)
+    return _tmap(
+        lambda g: jax.lax.psum(n * g.astype(jnp.float32), axis_name) / total,
+        grad)
+
+
+# ---------------------------------------------------------------------------
+# secure aggregation (pairwise antisymmetric masks)
+# ---------------------------------------------------------------------------
+def pairwise_mask(tree: Pytree, round_key, client: int,
+                  num_clients: int, scale: float = 1.0) -> Pytree:
+    """Mask for one client such that the sum over clients is exactly zero.
+
+    mask_l = sum_{m>l} PRG(l,m) - sum_{m<l} PRG(m,l):  every pair (l,m)
+    contributes +PRG to one side and -PRG to the other, so psum cancels.
+    The PRG seed folds in (round, min, max) — both parties can derive it
+    from a shared secret without revealing gradients to the server.
+    """
+    client = jnp.asarray(client)   # may be a traced axis_index
+
+    def mask_leaf(path_idx, leaf):
+        total = jnp.zeros_like(leaf, jnp.float32)
+        for other in range(num_clients):
+            lo = jnp.minimum(client, other)
+            hi = jnp.maximum(client, other)
+            k = jax.random.fold_in(jax.random.fold_in(
+                jax.random.fold_in(round_key, lo), hi), path_idx)
+            noise = scale * jax.random.normal(k, leaf.shape, jnp.float32)
+            sign = jnp.where(client < other, 1.0,
+                             jnp.where(client > other, -1.0, 0.0))
+            total = total + sign * noise
+        return total
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    masked = [mask_leaf(i, l) for i, l in enumerate(leaves)]
+    return jax.tree_util.tree_unflatten(treedef, masked)
+
+
+def secure_mask_grads(grads: Pytree, round_key, client: int,
+                      num_clients: int, n_samples,
+                      scale: float = 1.0) -> Pytree:
+    """Apply the cancelling mask to the Eq. (2) numerator contribution.
+
+    Masks must be added to ``n_l * G_l`` (the summed quantity), so the
+    caller passes the already-weighted gradient... to keep call sites
+    simple we mask g and divide the mask by n_l, which is equivalent.
+    """
+    mask = pairwise_mask(grads, round_key, client, num_clients, scale)
+    n = jnp.maximum(jnp.asarray(n_samples, jnp.float32), 1e-9)
+    return _tmap(lambda g, m: g + m / n, grads, mask)
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification + error feedback
+# ---------------------------------------------------------------------------
+def topk_sparsify(tree: Pytree, frac: float) -> Pytree:
+    """Keep the top ``frac`` fraction (by magnitude) of each leaf."""
+    def spars(leaf):
+        flat = leaf.reshape(-1)
+        k = max(int(frac * flat.size), 1)
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        return jnp.where(jnp.abs(leaf) >= thresh, leaf, 0.0)
+    return _tmap(spars, tree)
+
+
+def compress_with_error_feedback(grads: Pytree, error: Optional[Pytree],
+                                 frac: float) -> Tuple[Pytree, Pytree]:
+    """(compressed grad, new error memory).  error may be None (round 0)."""
+    if error is None:
+        error = _tmap(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    corrected = _tmap(lambda g, e: g.astype(jnp.float32) + e, grads, error)
+    sent = topk_sparsify(corrected, frac)
+    new_error = _tmap(lambda c, s: c - s, corrected, sent)
+    return sent, new_error
+
+
+# ---------------------------------------------------------------------------
+# local differential privacy
+# ---------------------------------------------------------------------------
+def dp_privatize(grads: Pytree, key, *, clip_norm: float,
+                 noise_multiplier: float) -> Pytree:
+    """Per-client clip to ``clip_norm`` + Gaussian noise (local DP)."""
+    clipped, _ = clip_by_global_norm(grads, clip_norm)
+    if noise_multiplier <= 0:
+        return clipped
+    leaves, treedef = jax.tree_util.tree_flatten(clipped)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [l + noise_multiplier * clip_norm
+             * jax.random.normal(k, l.shape, jnp.float32)
+             for l, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, noisy)

@@ -1,0 +1,2 @@
+from repro.core.ntm import prodlda  # noqa: F401
+from repro.core.ntm import ctm  # noqa: F401

@@ -1,0 +1,42 @@
+"""Contextualized Topic Models: CombinedTM and ZeroShotTM.
+
+[Bianchi et al. 2021 x2]  Both reuse the ProdLDA variational graph with a
+different input representation (DESIGN.md §1):
+  * CombinedTM  — concat(BoW, contextual embedding)   (paper's gFedNTM-CTM)
+  * ZeroShotTM  — contextual embedding only
+
+The contextual embedding is SBERT in the paper; offline benchmarks use the
+fixed-random-projection stand-in from ``repro.data.synthetic_lda``
+(documented data gate).
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.core.ntm import prodlda
+
+
+def init_combined(key, cfg: ModelConfig):
+    assert cfg.contextual_dim > 0, "CombinedTM needs contextual_dim"
+    return prodlda.init_params(key, cfg, input_mode="combined")
+
+
+def init_zeroshot(key, cfg: ModelConfig):
+    assert cfg.contextual_dim > 0, "ZeroShotTM needs contextual_dim"
+    return prodlda.init_params(key, cfg, input_mode="zeroshot")
+
+
+def loss_combined(params, cfg, batch, **kw):
+    return prodlda.elbo_loss(params, cfg, batch, input_mode="combined", **kw)
+
+
+def loss_zeroshot(params, cfg, batch, **kw):
+    return prodlda.elbo_loss(params, cfg, batch, input_mode="zeroshot", **kw)
+
+
+def get_topics(params):
+    return prodlda.get_topics(params)
+
+
+def infer_theta(params, cfg, bow, contextual, *, zeroshot=False):
+    mode = "zeroshot" if zeroshot else "combined"
+    return prodlda.infer_theta(params, cfg, bow, contextual, input_mode=mode)

@@ -1,0 +1,204 @@
+"""ProdLDA (AVITM) in JAX — the NTM the paper federates.
+
+[Srivastava & Sutton 2017, arXiv:1703.01488]  An encoder MLP maps the BoW
+(bag-of-words) document vector to the mean/log-variance of a logistic-
+normal posterior; the Dirichlet prior is handled via its Laplace
+approximation in softmax basis; the decoder is a product-of-experts:
+``p(w|theta) = softmax(theta @ beta)`` with *unnormalized* topic-word
+weights beta.
+
+CombinedTM [Bianchi et al. 2021] reuses this exact graph with the input
+representation swapped: ``concat(BoW, SBERT)`` ("combined") or SBERT only
+("zeroshot") — see ``input_mode``.
+
+Batch normalization: the reference AVITM applies BN to mu / logvar / the
+decoder logits.  Batch statistics couple documents *within a minibatch*,
+which would make federated and centralized training differ (per-client
+vs global batch stats).  We default to ``use_batchnorm=False`` (affine
+scale only) so the paper's federated==centralized equivalence holds
+EXACTLY (tested); ``use_batchnorm=True`` reproduces the reference
+behaviour and is what the fidelity benchmark uses.  The paper's own claim
+("equivalent to centralized") carries the same caveat for its PyTorch BN.
+
+All functions are pure; dropout randomness comes from an explicit rng in
+the batch dict (deterministic == reproducible across the federation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers.init import dense_init
+
+
+def _input_dim(cfg: ModelConfig, input_mode: str) -> int:
+    if input_mode == "bow":
+        return cfg.vocab_size
+    if input_mode == "combined":
+        return cfg.vocab_size + cfg.contextual_dim
+    if input_mode == "zeroshot":
+        return cfg.contextual_dim
+    raise ValueError(input_mode)
+
+
+def infer_input_mode(cfg: ModelConfig) -> str:
+    return "combined" if cfg.contextual_dim else "bow"
+
+
+def init_params(key, cfg: ModelConfig,
+                input_mode: Optional[str] = None) -> Dict[str, Any]:
+    input_mode = input_mode or infer_input_mode(cfg)
+    k = cfg.num_topics
+    dims = [_input_dim(cfg, input_mode)] + list(cfg.ntm_hidden)
+    keys = jax.random.split(key, len(dims) + 3)
+    enc = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        enc.append({"w": dense_init(keys[i], (a, b)),
+                    "b": jnp.zeros((b,), jnp.float32)})
+    h = dims[-1]
+    params: Dict[str, Any] = {
+        "encoder": enc,
+        "mu_head": {"w": dense_init(keys[-3], (h, k)),
+                    "b": jnp.zeros((k,), jnp.float32)},
+        "lv_head": {"w": dense_init(keys[-2], (h, k)),
+                    "b": jnp.zeros((k,), jnp.float32)},
+        # unnormalized topic-word matrix (the product of experts)
+        "beta": dense_init(keys[-1], (k, cfg.vocab_size)),
+        # affine scales standing in for the reference BN affine params
+        "mu_scale": jnp.ones((k,), jnp.float32),
+        "lv_scale": jnp.ones((k,), jnp.float32),
+        "dec_scale": jnp.ones((cfg.vocab_size,), jnp.float32),
+    }
+    if cfg.learn_priors:
+        a = 1.0 / max(k, 1)  # symmetric Dirichlet(1/K) default, as AVITM
+        var0 = (1.0 / a) * (1.0 - 2.0 / k) + 1.0 / (a * k)
+        params["prior_mu"] = jnp.zeros((k,), jnp.float32)
+        params["prior_logvar"] = jnp.full((k,), jnp.log(var0), jnp.float32)
+    return params
+
+
+def dirichlet_prior(k: int, alpha: float):
+    """Laplace approximation of Dirichlet(alpha) in softmax basis."""
+    mu = jnp.zeros((k,), jnp.float32)  # symmetric: log a - mean log a = 0
+    var = (1.0 / alpha) * (1.0 - 2.0 / k) + 1.0 / (k * alpha)
+    return mu, jnp.full((k,), jnp.log(var), jnp.float32)
+
+
+def _batchnorm(x, eps=1e-5):
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    var = jnp.var(x, axis=0, keepdims=True)
+    return (x - mu) * (var + eps) ** -0.5
+
+
+def encode(params, cfg: ModelConfig, x, *, dropout_rng=None,
+           use_batchnorm=False, train=True):
+    """x (B, input_dim) -> (mu, logvar) of the logistic-normal posterior."""
+    h = x
+    for layer in params["encoder"]:
+        h = jax.nn.softplus(h @ layer["w"] + layer["b"])
+    if train and dropout_rng is not None and cfg.ntm_dropout > 0:
+        keep = jax.random.bernoulli(dropout_rng, 1 - cfg.ntm_dropout, h.shape)
+        h = h * keep / (1 - cfg.ntm_dropout)
+    mu = h @ params["mu_head"]["w"] + params["mu_head"]["b"]
+    lv = h @ params["lv_head"]["w"] + params["lv_head"]["b"]
+    if use_batchnorm:
+        mu = _batchnorm(mu)
+        lv = _batchnorm(lv)
+    mu = mu * params["mu_scale"]
+    lv = lv * params["lv_scale"]
+    return mu, lv
+
+
+def decode(params, theta, *, use_batchnorm=False):
+    """theta (B, K) -> word distribution (B, V): product of experts."""
+    logits = theta @ params["beta"]
+    if use_batchnorm:
+        logits = _batchnorm(logits)
+    logits = logits * params["dec_scale"]
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def forward(params, cfg: ModelConfig, batch, *, use_batchnorm=False,
+            train=True, input_mode: Optional[str] = None):
+    """Returns dict(theta, mu, logvar, log_recon) for a batch.
+
+    batch keys: ``bow`` (B, V); optional ``contextual`` (B, C);
+    ``rng`` PRNGKey for reparametrization + dropout (train mode).
+    """
+    input_mode = input_mode or infer_input_mode(cfg)
+    bow = batch["bow"]
+    if input_mode == "bow":
+        x = bow
+    elif input_mode == "combined":
+        x = jnp.concatenate([bow, batch["contextual"]], axis=-1)
+    else:
+        x = batch["contextual"]
+    rng = batch.get("rng")
+    d_rng = s_rng = None
+    if rng is not None:
+        d_rng, s_rng = jax.random.split(rng)
+    mu, lv = encode(params, cfg, x, dropout_rng=d_rng,
+                    use_batchnorm=use_batchnorm, train=train)
+    if train and s_rng is not None:
+        eps = jax.random.normal(s_rng, mu.shape)
+        z = mu + jnp.exp(0.5 * lv) * eps
+    else:
+        z = mu
+    theta = jax.nn.softmax(z, axis=-1)
+    log_recon = decode(params, theta, use_batchnorm=use_batchnorm)
+    return {"theta": theta, "mu": mu, "logvar": lv, "log_recon": log_recon}
+
+
+def kl_to_prior(params, cfg: ModelConfig, mu, lv):
+    """KL(q(z|x) || p(z)) vs the (learned or fixed) Laplace-approx prior."""
+    k = cfg.num_topics
+    if cfg.learn_priors and "prior_mu" in params:
+        pm, plv = params["prior_mu"], params["prior_logvar"]
+    else:
+        pm, plv = dirichlet_prior(k, 1.0 / k)
+    var_ratio = jnp.exp(lv - plv)
+    diff = mu - pm
+    return 0.5 * jnp.sum(
+        var_ratio + diff * diff / jnp.exp(plv) - 1.0 + (plv - lv), axis=-1)
+
+
+def elbo_parts(params, cfg: ModelConfig, batch, **kw):
+    out = forward(params, cfg, batch, **kw)
+    recon = -jnp.sum(batch["bow"] * out["log_recon"], axis=-1)   # (B,)
+    kl = kl_to_prior(params, cfg, out["mu"], out["logvar"])      # (B,)
+    return recon, kl
+
+
+def elbo_loss(params, cfg: ModelConfig, batch, **kw):
+    """Per-document mean negative ELBO (the training loss)."""
+    recon, kl = elbo_parts(params, cfg, batch, **kw)
+    return jnp.mean(recon + kl)
+
+
+def elbo_loss_sum(params, cfg: ModelConfig, batch, **kw):
+    """(sum, count) form used by the exact Eq. (2) federated weighting."""
+    recon, kl = elbo_parts(params, cfg, batch, **kw)
+    per_doc = recon + kl
+    mask = batch.get("doc_mask")
+    if mask is not None:
+        per_doc = per_doc * mask
+        return jnp.sum(per_doc), jnp.sum(mask)
+    return jnp.sum(per_doc), jnp.asarray(per_doc.shape[0], jnp.float32)
+
+
+def get_topics(params) -> jnp.ndarray:
+    """Normalized topic-word distributions beta (K, V) for evaluation."""
+    return jax.nn.softmax(params["beta"], axis=-1)
+
+
+def infer_theta(params, cfg: ModelConfig, bow, contextual=None,
+                input_mode: Optional[str] = None):
+    """Posterior-mean document-topic mixtures for evaluation (no sampling)."""
+    batch = {"bow": bow}
+    if contextual is not None:
+        batch["contextual"] = contextual
+    out = forward(params, cfg, batch, train=False, input_mode=input_mode)
+    return out["theta"]

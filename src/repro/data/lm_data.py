@@ -1,0 +1,91 @@
+"""Synthetic token pipeline for the architecture zoo.
+
+Real deployments stream tokenized documents; offline we generate
+deterministic synthetic batches with a realistic structure: Zipfian token
+marginals, per-client disjoint-ish token subranges (mirroring the paper's
+"topic diversity across nodes"), document boundaries, and loss masks.
+Every batch dict matches ``launch.input_specs`` shape-for-shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import AUDIO, VLM, ModelConfig
+
+
+def _zipf_tokens(rng, vocab: int, shape, a: float = 1.2, lo: int = 0,
+                 hi: Optional[int] = None) -> np.ndarray:
+    hi = hi or vocab
+    ranks = np.arange(1, hi - lo + 1, dtype=np.float64)
+    p = ranks ** -a
+    p /= p.sum()
+    return (rng.choice(hi - lo, size=shape, p=p) + lo).astype(np.int32)
+
+
+def synthetic_lm_batch(cfg: ModelConfig, batch: int, seq: int, *,
+                       seed: int = 0, client_id: int = 0,
+                       num_clients: int = 1) -> Dict[str, np.ndarray]:
+    """One training batch for any assigned architecture.
+
+    Clients draw from overlapping-but-shifted Zipf token windows, giving
+    the non-IID across-client structure the federated experiments need.
+    """
+    rng = np.random.default_rng(seed * 1009 + client_id)
+    if cfg.kind == AUDIO:
+        frames = rng.standard_normal(
+            (batch, seq, cfg.frontend_embed_dim)).astype(np.float32)
+        mask = rng.random((batch, seq)) < 0.08     # HuBERT-style mask rate
+        targets = _zipf_tokens(rng, cfg.vocab_size, (batch, seq))
+        return {"frame_embeds": frames, "frame_mask": mask,
+                "targets": targets}
+
+    # non-IID client windows over the vocabulary
+    span = cfg.vocab_size
+    shift = (client_id * span) // max(2 * num_clients, 1)
+    lo = shift
+    hi = min(span, lo + max(span // 2, 1024))
+    toks = _zipf_tokens(rng, cfg.vocab_size, (batch, seq + 1), lo=lo, hi=hi)
+    out = {"tokens": toks[:, :-1],
+           "labels": toks[:, 1:],
+           "loss_mask": np.ones((batch, seq), np.float32)}
+    if cfg.kind == VLM:
+        n_patch = max(seq // 16, 1)
+        out["patch_embeds"] = rng.standard_normal(
+            (batch, n_patch, cfg.d_model)).astype(np.float32)
+        pos = np.stack([rng.choice(seq // 2, size=n_patch, replace=False)
+                        for _ in range(batch)]).astype(np.int32)
+        out["patch_positions"] = pos
+        # M-RoPE positions: text ramp with a 2-D grid for the patch span
+        mrope = np.broadcast_to(np.arange(seq, dtype=np.int32),
+                                (3, batch, seq)).copy()
+        out["mrope_positions"] = mrope
+    return out
+
+
+class SyntheticLMStream:
+    """Iterator over per-client batches (the launcher's data source)."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int, *,
+                 num_clients: int = 1, seed: int = 0):
+        self.cfg, self.batch, self.seq = cfg, batch, seq
+        self.num_clients, self.seed = num_clients, seed
+        self._step = 0
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        assert self.batch % self.num_clients == 0
+        per = self.batch // self.num_clients
+        parts = [synthetic_lm_batch(self.cfg, per, self.seq,
+                                    seed=self.seed + self._step,
+                                    client_id=c, num_clients=self.num_clients)
+                 for c in range(self.num_clients)]
+        self._step += 1
+        # client batches concatenate along the batch axis; for M-RoPE
+        # positions the batch axis is 1 (leading axis is the t/h/w stream)
+        return {k: np.concatenate([p[k] for p in parts],
+                                  axis=1 if k == "mrope_positions" else 0)
+                for k in parts[0]}

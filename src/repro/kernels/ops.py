@@ -1,0 +1,55 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to auto-detect: False on real TPU backends, True on
+CPU (this container) where the kernel body executes in Python for
+validation.  Model code imports from here, never from the kernel modules.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.topic_decoder import topic_decoder_pallas
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q (B,S,Hq,D), k/v (B,S,Hkv,D) -> (B,S,Hq,D)."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return jnp.moveaxis(out, 1, 2)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 128,
+             interpret: bool | None = None):
+    """x (B,S,H,P), dt (B,S,H), a (H,), b/c (B,S,N) -> (y, h_last)."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    return ssd_scan_pallas(x, dt, a, b, c, chunk=chunk, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_b", "block_v", "interpret"))
+def topic_decoder_loss(theta, beta, bow, dec_scale=None, *,
+                       block_b: int = 128, block_v: int = 512,
+                       interpret: bool | None = None):
+    """Fused ProdLDA reconstruction loss, per document (B,)."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    return topic_decoder_pallas(theta, beta, bow, dec_scale,
+                                block_b=block_b, block_v=block_v,
+                                interpret=interpret)

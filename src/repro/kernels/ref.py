@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Each function is the mathematically-direct implementation with no tiling,
+no online accumulation, fp32 math — deliberately simple so a human can
+audit it against the equations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q (B,H,S,D), k/v (B,Hkv,S,D) -> (B,H,S,D).  GQA by head repeat."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    rep = h // hkv
+    kf = jnp.repeat(k.astype(jnp.float32), rep, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), rep, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, a, b, c, h0=None):
+    """Naive per-step SSD recurrence (the definition, O(S) sequential).
+
+    x (B,S,H,P), dt (B,S,H), a (H,), b/c (B,S,N).
+    Returns (y (B,S,H,P), h_last (B,H,P,N)).
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    f32 = jnp.float32
+    xf, dtf = x.astype(f32), dt.astype(f32)
+    bf, cf = b.astype(f32), c.astype(f32)
+
+    def step(hst, inp):
+        xt, dtt, bt, ct = inp                       # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * a)                    # (B,H)
+        hst = hst * decay[:, :, None, None] \
+            + jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, hst)
+        return hst, y
+
+    if h0 is None:
+        h0 = jnp.zeros((bs, h, p, n), f32)
+    hl, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+         jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1)
+    return y.astype(x.dtype), hl
+
+
+def topic_decoder_ref(theta, beta, bow, dec_scale=None):
+    """ProdLDA reconstruction term, materialized:
+        recon_d = -sum_v bow_dv * log softmax_v(theta_d . beta_v * scale)
+    theta (B,K), beta (K,V), bow (B,V) -> (B,) fp32.
+    """
+    logits = theta.astype(jnp.float32) @ beta.astype(jnp.float32)
+    if dec_scale is not None:
+        logits = logits * dec_scale.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.sum(bow.astype(jnp.float32) * logp, axis=-1)

@@ -1,0 +1,140 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+Grid (batch*heads, num_chunks) with chunks innermost: the recurrent
+(P, N) head state lives in VMEM scratch across the sequential chunk axis
+— the HBM traffic is exactly one read of (x, dt, B, C) and one write of y
+per token, the state never spills.  Within a chunk the quadratic SSD form
+runs on the MXU:
+
+    y_diag = ((C B^T) . exp(segsum(dtA)) . dt) X
+    y_off  = exp(cum) C h_prev^T
+    h_new  = exp(cum_Q) h_prev + (B . dt exp(cum_Q - cum))^T X
+
+TPU adaptation (DESIGN.md §2): chunk length is the BlockSpec tile (default
+128 to match MXU tiling); B/C are ngroups=1 (shared across heads) and are
+re-read per head group — on real hardware one would block heads to
+amortize, noted in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_scr,
+                *, chunk: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0].astype(jnp.float32)          # scalar
+    bmat = b_ref[0].astype(jnp.float32)       # (Q, N)
+    cmat = c_ref[0].astype(jnp.float32)       # (Q, N)
+
+    da = dt * a                               # (Q,)
+    cum = jnp.cumsum(da)                      # (Q,)
+    # decay matrix L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, None] - cum[None, :]
+    tril = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tril, jnp.exp(diff), 0.0)
+
+    # intra-chunk: W = (C B^T) * L * dt_j ;  y = W X
+    G = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    W = G * L * dt[None, :]
+    y = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    h_prev = h_scr[...]                       # (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cmat, h_prev, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update
+    decay_end = jnp.exp(cum[-1] - cum)        # (Q,)
+    weighted_b = bmat * (dt * decay_end)[:, None]       # (Q, N)
+    new_state = jax.lax.dot_general(
+        x, weighted_b, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)   # (P, N)
+    h_scr[...] = jnp.exp(cum[-1]) * h_prev + new_state
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        hout_ref[0] = h_scr[...]
+
+
+def ssd_scan_pallas(x, dt, a, b, c, *, chunk: int = 128,
+                    interpret: bool = True
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,H,P), dt (B,S,H), a (H,), b/c (B,S,N) -> (y, h_last).
+
+    Matches ``ref.ssd_scan_ref`` (zero initial state).  S is padded to a
+    chunk multiple (dt=0 padding is a no-op on the state).
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    s_pad = -(-s // q) * q
+    if s_pad != s:
+        x = jnp.pad(x, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, s_pad - s), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, s_pad - s), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, s_pad - s), (0, 0)))
+    nc = s_pad // q
+
+    # flatten (B,H) and move head axis out of x
+    xf = jnp.moveaxis(x, 2, 1).reshape(bs * h, s_pad, p)
+    dtf = jnp.moveaxis(dt, 2, 1).reshape(bs * h, s_pad)
+    af = jnp.tile(a, bs)                                 # (B*H,)
+
+    def xh_index(bh, ci):
+        return (bh, ci, 0)
+
+    def dt_index(bh, ci):
+        return (bh, ci)
+
+    def a_index(bh, ci):
+        return (bh,)
+
+    def bc_index(bh, ci):
+        return (bh // h, ci, 0)
+
+    kernel = functools.partial(_ssd_kernel, chunk=q)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(bs * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, p), xh_index),
+            pl.BlockSpec((1, q), dt_index),
+            pl.BlockSpec((1,), a_index),
+            pl.BlockSpec((1, q, n), bc_index),
+            pl.BlockSpec((1, q, n), bc_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, p), xh_index),
+            pl.BlockSpec((1, p, n), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bs * h, s_pad, p), x.dtype),
+            jax.ShapeDtypeStruct((bs * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, b, c)
+
+    y = jnp.moveaxis(y.reshape(bs, h, s_pad, p), 1, 2)[:, :s]
+    return y, h_last.reshape(bs, h, p, n)

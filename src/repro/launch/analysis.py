@@ -1,0 +1,176 @@
+"""Compiled-artifact analysis: collective-bytes parsing + roofline terms.
+
+``cost_analysis()`` supplies HLO_FLOPs and HLO_bytes; collective bytes are
+NOT in cost_analysis, so we parse the optimized HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (async *-start variants included, *-done skipped so
+nothing double-counts).
+
+Roofline terms (seconds), TPU v5e constants from launch.mesh:
+    compute    = HLO_FLOPs   / (chips x 197e12)
+    memory     = HLO_bytes   / (chips x 819e9)
+    collective = coll_bytes  / (chips x 50e9)
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|\S+))\s+"
+    r"((?:all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?)\(")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device wire bytes per collective opcode over the optimized HLO.
+
+    Result shapes are parsed from each op's type annotation; ``g`` is the
+    replica-group size.  Wire-byte model (ring algorithms):
+      all-reduce:          2 * result * (g-1)/g
+      all-gather:          result * (g-1)/g     (result = gathered)
+      reduce-scatter:      operand * (g-1)/g  = result * (g-1)
+      all-to-all:          result * (g-1)/g
+      collective-permute:  result
+    Async ``-start`` variants are counted; ``-done`` pairs are skipped so
+    nothing double-counts.  Trip counts of while loops are NOT corrected
+    here — the analysis lowering unrolls its loops (dryrun.py).
+    """
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_type, opcode = m.group(1), m.group(2).replace("-start", "")
+        result = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(result_type))
+        gm = _GROUP_RE.search(line)
+        g = max(int(gm.group(2)), 1) if gm else 2
+        frac = (g - 1) / g
+        if opcode == "all-reduce":
+            wire = 2.0 * result * frac
+        elif opcode == "reduce-scatter":
+            wire = result * (g - 1)
+        elif opcode == "collective-permute":
+            wire = result
+        else:  # all-gather, all-to-all
+            wire = result * frac
+        out[opcode] += int(wire)
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # per-device (XLA reports the SPMD module)
+    hlo_bytes: float            # per-device bytes accessed
+    collective_bytes: float     # per-device wire bytes (operand sums)
+    collective_breakdown: Dict[str, int] = field(default_factory=dict)
+    model_flops: float = 0.0    # 6*N*D (active params x tokens)
+    memory_per_device: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW_PER_LINK
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips) — remat/redundancy waste."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_device": self.hlo_flops,
+            "hlo_bytes_per_device": self.hlo_bytes,
+            "collective_bytes_per_device": self.collective_bytes,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "memory_per_device": self.memory_per_device,
+        }
+
+
+def memory_analysis_dict(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    out["total_bytes"] = (out.get("argument_size_in_bytes", 0.0)
+                          + out.get("output_size_in_bytes", 0.0)
+                          + out.get("temp_size_in_bytes", 0.0)
+                          - out.get("alias_size_in_bytes", 0.0))
+    return out
+
+
+def build_report(*, arch: str, shape: str, mesh_name: str, chips: int,
+                 compiled, model_flops: float,
+                 hlo_text: Optional[str] = None) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):   # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collective_bytes(text)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        collective_bytes=float(coll["total"]),
+        collective_breakdown=coll,
+        model_flops=model_flops,
+        memory_per_device=memory_analysis_dict(compiled),
+    )

@@ -1,0 +1,143 @@
+"""Step functions + ShapeDtypeStruct input specs for every (arch, shape).
+
+``input_specs`` follows the assignment: precomputed frame/patch embeddings
+stand in for the stubbed audio/vision frontends; decode shapes describe
+ONE new token + a ``seq_len`` cache.  ``resolve_arch_for_shape`` applies
+the sliding-window variant that gates ``long_500k`` for quadratic
+architectures (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (AUDIO, HYBRID, SSM, VLM, ModelConfig,
+                                ShapeConfig)
+from repro.models import transformer as tfm
+from repro.optim.optimizers import Optimizer
+
+LONG_CONTEXT_WINDOW = 8192   # sliding-window size for long_500k dense archs
+
+
+def resolve_arch_for_shape(cfg: ModelConfig, shape: ShapeConfig
+                           ) -> ModelConfig:
+    """Apply the sub-quadratic variant required by long_500k (if any)."""
+    if shape.name == "long_500k" and cfg.kind not in (SSM, HYBRID) \
+            and cfg.sliding_window == 0:
+        cfg = dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    if shape.seq_len > cfg.max_seq_len:
+        cfg = dataclasses.replace(cfg, max_seq_len=shape.seq_len)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct — shardable, no allocation)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch specs for train/prefill; (tokens, cache) specs for decode."""
+    b, s = shape.global_batch, shape.seq_len
+    act = cfg.dtype
+    if shape.mode in ("train", "prefill"):
+        if cfg.kind == AUDIO:
+            specs = {
+                "frame_embeds": _sds((b, s, cfg.frontend_embed_dim), act),
+                "frame_mask": _sds((b, s), jnp.bool_),
+                "targets": _sds((b, s), jnp.int32),
+            }
+            return specs
+        specs = {"tokens": _sds((b, s), jnp.int32)}
+        if shape.mode == "train":
+            specs["labels"] = _sds((b, s), jnp.int32)
+            specs["loss_mask"] = _sds((b, s), jnp.float32)
+        if cfg.kind == VLM:
+            n_patch = max(s // 16, 1)
+            specs["patch_embeds"] = _sds((b, n_patch, cfg.d_model), act)
+            specs["patch_positions"] = _sds((b, n_patch), jnp.int32)
+            specs["mrope_positions"] = _sds((3, b, s), jnp.int32)
+        return specs
+    # decode: ONE token + a cache covering seq_len positions
+    assert not cfg.encoder_only, "encoder-only archs have no decode step"
+    cache = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, b, s, dtype=jnp.dtype(act)))
+    return {"tokens": _sds((b, 1), jnp.int32), "cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *, dtype=None,
+                    remat: str = "none", cast_params: bool = False):
+    """Synchronous federated/data-parallel train step.
+
+    The loss is the global token-weighted mean, whose gradient equals the
+    paper's Eq. (2) client-weighted aggregate exactly (DESIGN.md §2); the
+    optimizer update is Eq. (3) when ``optimizer == sgd``.
+
+    ``remat`` — activation rematerialization policy ("dots" saves matmul
+    outputs only; "full" recomputes everything).
+    ``cast_params`` — mixed-precision parameter gathering: parameters are
+    cast to the activation dtype BEFORE use, so under the fsdp profile the
+    per-layer all-gathers (and the gradient reduce) move bf16, halving the
+    collective volume; the Eq. (3) update still runs on fp32 masters
+    (EXPERIMENTS.md §Perf A3).
+    """
+    act_dtype = dtype or jnp.dtype(cfg.dtype)
+    if remat == "layer":
+        cfg = dataclasses.replace(cfg, remat_layers=True)
+
+    def raw_loss(p, batch):
+        return tfm.train_loss(p, cfg, batch, dtype=dtype)
+
+    if remat == "full":
+        raw_loss = jax.checkpoint(raw_loss)
+    elif remat == "dots":
+        raw_loss = jax.checkpoint(
+            raw_loss, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    def step(params, opt_state, batch, step_idx):
+        if cast_params:
+            def loss_of_cast(p_cast):
+                return raw_loss(p_cast, batch)
+
+            p_cast = jax.tree_util.tree_map(
+                lambda p: p.astype(act_dtype) if p.dtype == jnp.float32
+                else p, params)
+            loss, grads_c = jax.value_and_grad(loss_of_cast)(p_cast)
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g.astype(p.dtype), grads_c, params)
+        else:
+            loss, grads = jax.value_and_grad(raw_loss)(params, batch)
+        new_params, new_opt = optimizer.update(params, grads, opt_state,
+                                               step_idx)
+        return new_params, new_opt, loss
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, *, dtype=None):
+    if cfg.encoder_only:
+        def step(params, batch):
+            logits, _ = tfm.forward_train(params, cfg, batch, dtype=dtype)
+            return logits
+        return step
+
+    def step(params, batch):
+        logits, cache = tfm.prefill(params, cfg, batch, dtype=dtype)
+        # serving returns only the last-position logits + the cache
+        return logits[:, -1:], cache
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, *, dtype=None):
+    def step(params, cache, tokens):
+        return tfm.decode_step(params, cfg, cache, tokens, dtype=dtype)
+    return step

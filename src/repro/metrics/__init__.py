@@ -1,0 +1,4 @@
+from repro.metrics.similarity import (  # noqa: F401
+    hellinger_affinity, dss, tss, tss_baseline)
+from repro.metrics.wmd import wmd, amwmd  # noqa: F401
+from repro.metrics.coherence import npmi_coherence, topic_diversity  # noqa: F401

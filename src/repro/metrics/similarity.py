@@ -1,0 +1,75 @@
+"""The paper's quantitative metrics: DSS (Eq. 5) and TSS (Eq. 6).
+
+Both are built on the Hellinger affinity between distributions
+    w_ij = 1 - H^2(p, q) = sum_k sqrt(p_k q_k)         (Eq. 4)
+
+DSS — document similarity-based score: mean absolute difference between
+the true and inferred pairwise document-similarity matrices (lower is
+better).  TSS — topic similarity score: each true topic matched to its
+closest inferred topic, affinities summed (closer to K is better).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def hellinger_affinity(p, q):
+    """Pairwise 1 - H^2: p (A, K), q (B, K) -> (A, B)."""
+    return jnp.sqrt(jnp.clip(p, 0, None)) @ jnp.sqrt(jnp.clip(q, 0, None)).T
+
+
+@jax.jit
+def _dss_jit(theta_true, theta_inf):
+    w_true = hellinger_affinity(theta_true, theta_true)
+    w_inf = hellinger_affinity(theta_inf, theta_inf)
+    d = jnp.abs(w_true - w_inf)
+    # exclude the diagonal (j != i in Eq. 5)
+    d = d - jnp.diag(jnp.diag(d))
+    return jnp.sum(d) / theta_true.shape[0]
+
+
+def dss(theta_true, theta_inferred, *, block: int = 2048) -> float:
+    """Eq. (5).  Blocked so the paper-scale 5000x5000 case fits memory."""
+    theta_true = np.asarray(theta_true, np.float32)
+    theta_inferred = np.asarray(theta_inferred, np.float32)
+    d_docs = theta_true.shape[0]
+    if d_docs <= block:
+        return float(_dss_jit(theta_true, theta_inferred))
+    st_true = np.sqrt(np.clip(theta_true, 0, None))
+    st_inf = np.sqrt(np.clip(theta_inferred, 0, None))
+    total = 0.0
+    for i0 in range(0, d_docs, block):
+        wt = st_true[i0:i0 + block] @ st_true.T
+        wi = st_inf[i0:i0 + block] @ st_inf.T
+        d = np.abs(wt - wi)
+        rows = np.arange(i0, min(i0 + block, d_docs)) - i0
+        d[rows, rows + i0] = 0.0
+        total += float(d.sum())
+    return total / d_docs
+
+
+@jax.jit
+def _tss_jit(beta_true, beta_inf):
+    aff = hellinger_affinity(beta_true, beta_inf)    # (K_true, K_inf)
+    return jnp.sum(jnp.max(aff, axis=1))
+
+
+def tss(beta_true, beta_inferred) -> float:
+    """Eq. (6): sum over true topics of the best inferred-topic affinity."""
+    return float(_tss_jit(np.asarray(beta_true, np.float32),
+                          np.asarray(beta_inferred, np.float32)))
+
+
+def tss_baseline(vocab_size: int, num_topics: int, eta: float,
+                 *, runs: int = 5, seed: int = 0) -> float:
+    """The paper's TSS baseline: expected TSS between two independent
+    models sampled from the same Dirichlet(eta) prior."""
+    rng = np.random.default_rng(seed)
+    vals = []
+    for _ in range(runs):
+        a = rng.dirichlet(np.full(vocab_size, eta), size=num_topics)
+        b = rng.dirichlet(np.full(vocab_size, eta), size=num_topics)
+        vals.append(tss(a, b))
+    return float(np.mean(vals))

@@ -1,0 +1,2 @@
+from repro.models import transformer  # noqa: F401
+from repro.models.registry import build_model  # noqa: F401

@@ -1,0 +1,71 @@
+"""Token embeddings, LM head, and the modality-frontend stubs.
+
+Per the assignment, the audio conv/mel frontend and the VLM ViT encoder are
+STUBS: callers provide precomputed frame/patch embeddings of the documented
+shape; everything downstream is real.  ``merge_patch_embeds`` performs the
+real early-fusion interleave of Qwen2-VL: patch embeddings are scattered
+into the token-embedding sequence at the image-placeholder positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.init import embed_init, dense_init
+
+
+def embedding_init(key, vocab_size: int, d_model: int):
+    return {"table": embed_init(key, (vocab_size, d_model), scale=0.02)}
+
+
+def embed(params, tokens, dtype):
+    return params["table"].astype(dtype)[tokens]
+
+
+def lm_head_init(key, d_model: int, vocab_size: int):
+    return {"w": dense_init(key, (d_model, vocab_size))}
+
+
+def lm_head(params, x):
+    # logits in fp32 for a numerically stable softmax/xent
+    return jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                      params["w"].astype(jnp.float32))
+
+
+def lm_head_tied(embed_params, x):
+    return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                      embed_params["table"].astype(jnp.float32))
+
+
+def merge_patch_embeds(tok_embeds, patch_embeds, patch_positions):
+    """Scatter patch embeddings into the token sequence (early fusion).
+
+    tok_embeds (B, S, D); patch_embeds (B, P, D); patch_positions (B, P)
+    int32 indices into S (padding positions use index 0 with a zero patch —
+    callers mask them by passing patch_embeds rows of zeros... no: padding
+    rows must carry position pointing at a dedicated slot).  We use a
+    validity convention: position < 0 means "no patch", implemented by
+    clamping and a where().
+    """
+    b, s, d = tok_embeds.shape
+    valid = (patch_positions >= 0)[..., None]
+    pos = jnp.clip(patch_positions, 0, s - 1)
+    updates = jnp.where(valid, patch_embeds.astype(tok_embeds.dtype), 0.0)
+
+    def scatter_one(te, p, u, v):
+        # zero out the token embedding where a patch lands, then add
+        keep = jnp.ones((s, 1), te.dtype).at[p].min(
+            jnp.where(v, 0.0, 1.0).astype(te.dtype))
+        return te * keep + jnp.zeros_like(te).at[p].add(u)
+
+    return jax.vmap(scatter_one)(tok_embeds, pos, updates, valid)
+
+
+def masked_prediction_embed(params, frame_embeds, mask):
+    """HuBERT-style input: replace masked frames with a learned embedding.
+
+    frame_embeds (B, S, D) — precomputed conv-frontend output (stub);
+    mask (B, S) bool — True where the frame is masked for prediction.
+    """
+    m = params["mask_embed"].astype(frame_embeds.dtype)
+    return jnp.where(mask[..., None], m, frame_embeds)

@@ -1,0 +1,61 @@
+"""Hymba hybrid-head block: parallel attention + mamba (SSD) heads.
+
+[arXiv:2411.13676]  Within each block the *same* normalized input feeds an
+attention branch and an SSM branch in parallel; the two branch outputs are
+independently normalized, scaled by learned per-channel gains (beta), and
+mean-fused before the output projection back to the residual stream:
+
+    y = 1/2 (beta_a * RMSNorm(attn(x)) + beta_m * RMSNorm(ssm(x)))
+
+The attention branch uses sliding-window GQA (Hymba keeps only a few global
+layers; we model the sub-quadratic SWA path — DESIGN.md §6), the SSM branch
+is a Mamba-2 SSD head group.  Both branches carry their own decode state
+(ring-buffer KV + recurrent SSM state), which is what a hybrid cache looks
+like in production serving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention as attn
+from repro.models.layers import mamba2
+from repro.models.layers.norms import rmsnorm, rmsnorm_init
+
+
+def hymba_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "attn": attn.gqa_init(k1, cfg),
+        "ssm": mamba2.mamba2_init(k2, cfg),
+        "attn_norm": rmsnorm_init(d),
+        "ssm_norm": rmsnorm_init(d),
+        "beta_attn": jnp.ones((d,), jnp.float32),
+        "beta_ssm": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _fuse(params, cfg, a_out, m_out):
+    a = rmsnorm(params["attn_norm"], a_out, cfg.norm_eps) \
+        * params["beta_attn"].astype(a_out.dtype)
+    m = rmsnorm(params["ssm_norm"], m_out, cfg.norm_eps) \
+        * params["beta_ssm"].astype(m_out.dtype)
+    return 0.5 * (a + m)
+
+
+def hymba_full(params, cfg, x, angles, *, positions):
+    a_out, kv = attn.gqa_full(params["attn"], cfg, x, angles,
+                              positions=positions, causal=True)
+    m_out, m_state = mamba2.mamba2_apply(params["ssm"], cfg, x)
+    return _fuse(params, cfg, a_out, m_out), (kv, m_state)
+
+
+def hymba_decode(params, cfg, x, angles, *, cache_k, cache_v, pos,
+                 conv_state, ssm_state):
+    a_out, (ck, cv) = attn.gqa_decode(
+        params["attn"], cfg, x, angles,
+        cache_k=cache_k, cache_v=cache_v, pos=pos)
+    m_out, (cs, ss) = mamba2.mamba2_decode(
+        params["ssm"], cfg, x, conv_state=conv_state, ssm_state=ssm_state)
+    return _fuse(params, cfg, a_out, m_out), (ck, cv, cs, ss)

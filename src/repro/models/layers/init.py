@@ -1,0 +1,17 @@
+"""Weight initializers (fan-in scaled normal, fp32 master params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, scale: float = 1.0):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale * (fan_in ** -0.5)
+    return (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32))
+
+
+def embed_init(key, shape, scale: float = 1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)

@@ -1,0 +1,209 @@
+"""Mamba-2 block: SSD (state-space duality) with chunked scan.
+
+[arXiv:2405.21060]  The selective SSM
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t        (per head, state N)
+    y_t = C_t^T h_t + D x_t
+is evaluated with the SSD chunked algorithm: the sequence is split into
+chunks of length Q; within a chunk the quadratic "attention-like" form is
+used (MXU-friendly), across chunks a linear recurrence over the chunk
+states runs in a ``lax.scan``.  ngroups = 1 (mamba2 default): B and C are
+shared across heads.
+
+TPU adaptation (DESIGN.md §2): chunk size is a multiple of 128 so the
+within-chunk einsums hit the MXU; the inter-chunk scan carries only the
+(B, H, P, N) state, which stays resident in VMEM in the Pallas kernel
+(kernels/ssd_scan.py).  Decode is the O(1) recurrent step on a persistent
+(conv_state, ssm_state) pair — no KV cache, which is what makes
+``long_500k`` native for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.init import dense_init
+from repro.models.layers.norms import rmsnorm, rmsnorm_init
+
+
+def mamba2_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.state_dim
+    return d_inner, nheads, conv_ch
+
+
+def mamba2_init(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, conv_ch = mamba2_dims(cfg)
+    ks = jax.random.split(key, 4)
+    # in_proj packs [z, x, B, C, dt]
+    proj_out = 2 * d_in + 2 * s.state_dim + nh
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out)),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_ch), scale=1.0),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),  # inverse softplus
+        "norm": rmsnorm_init(d_in),
+        "out_proj": dense_init(ks[3], (d_in, d)),
+    }
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    d_in, nh, _ = mamba2_dims(cfg)
+    n = s.state_dim
+    z, xs, b, c, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, xs, b, c, dt
+
+
+def _segsum(a):
+    """a (..., Q) -> (..., Q, Q) with out[i,j] = sum_{j<r<=i} a_r (i>=j)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int, h0=None, *,
+                unroll: bool = False):
+    """SSD scan. x (B,S,H,P), dt (B,S,H), a (H,) negative,
+    b/c (B,S,N) [ngroups=1].  Returns (y (B,S,H,P), h_last (B,H,P,N)).
+
+    A single ``lax.scan`` over chunks carries the (B,H,P,N) state; the
+    chunk body (the quadratic SSD form) is ``jax.checkpoint``-ed so the
+    backward pass recomputes the (Q, Q) decay matrices instead of stashing
+    them for every chunk x layer (O(S*Q) memory otherwise — the SSD analog
+    of the flash-attention VJP trick).  ``unroll=True`` flattens the loop
+    for the roofline analysis lowering.
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+    xc = jnp.moveaxis(x.astype(f32).reshape(bs, nc, chunk, h, p), 1, 0)
+    dtc = jnp.moveaxis(dt.astype(f32).reshape(bs, nc, chunk, h), 1, 0)
+    bc = jnp.moveaxis(b.astype(f32).reshape(bs, nc, chunk, n), 1, 0)
+    cc = jnp.moveaxis(c.astype(f32).reshape(bs, nc, chunk, n), 1, 0)
+    af = a.astype(f32)
+    if h0 is None:
+        h0 = jnp.zeros((bs, h, p, n), f32)
+
+    @jax.checkpoint
+    def step(h_prev, inp):
+        xb, dtb, bb, cb = inp                   # (B,Q,H,P) (B,Q,H) (B,Q,N)
+        da = dtb * af                           # (B,Q,H)
+        cum = jnp.cumsum(da, axis=1)            # (B,Q,H)
+        # intra-chunk quadratic form
+        L = jnp.exp(_segsum(jnp.moveaxis(da, -1, -2)))       # (B,H,Q,Q)
+        y = jnp.einsum("bin,bjn,bhij,bjh,bjhp->bihp",
+                       cb, bb, L, dtb, xb)
+        # contribution of the carried state
+        y += jnp.einsum("bin,bih,bhpn->bihp", cb, jnp.exp(cum), h_prev)
+        # state update
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)         # (B,Q,H)
+        new_state = jnp.einsum("bjn,bjh,bjh,bjhp->bhpn",
+                               bb, decay_to_end, dtb, xb)
+        h_new = jnp.exp(cum[:, -1, :])[:, :, None, None] * h_prev \
+            + new_state
+        return h_new, y
+
+    h_last, ys = jax.lax.scan(step, h0, (xc, dtc, bc, cc), unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bs, s, h, p)
+    return y.astype(x.dtype), h_last
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B,S,C), w (W,C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    return out + b
+
+
+def mamba2_apply(params, cfg, x, *, conv_state=None, ssm_state=None):
+    """Full-sequence SSD.  x (B,S,D) -> (y (B,S,D), (conv_state, ssm_state))."""
+    s_cfg = cfg.ssm
+    d_in, nh, conv_ch = mamba2_dims(cfg)
+    bsz, slen, _ = x.shape
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    z, xs, b, c, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)
+    conv_out = _causal_conv(conv_in.astype(jnp.float32),
+                            params["conv_w"], params["conv_b"])
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    xs, b, c = jnp.split(conv_out, [d_in, d_in + s_cfg.state_dim], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    xh = xs.reshape(bsz, slen, nh, s_cfg.head_dim)
+    chunk = min(s_cfg.chunk_size, slen)
+    if slen % chunk:                      # pad to a chunk multiple
+        pad = chunk - slen % chunk
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    y, h_last = ssd_chunked(xh, dt, a, b, c, chunk, h0=ssm_state,
+                            unroll=cfg.unroll_chunks)
+    y = y[:, :slen]
+
+    y = y + params["D"][None, None, :, None] * xs.reshape(
+        bsz, slen, nh, s_cfg.head_dim)
+    y = y.reshape(bsz, slen, d_in)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+
+    tail = s_cfg.conv_width - 1
+    if tail > 0:
+        ci = conv_in.astype(jnp.float32)
+        if slen < tail:   # degenerate short-sequence case: left-pad with zeros
+            ci = jnp.pad(ci, ((0, 0), (tail - slen, 0), (0, 0)))
+        new_conv_state = ci[:, -tail:, :]
+    else:
+        new_conv_state = jnp.zeros((bsz, 0, conv_ch), jnp.float32)
+    return out, (new_conv_state, h_last)
+
+
+def mamba2_decode(params, cfg, x, *, conv_state, ssm_state):
+    """O(1) recurrent decode step.  x (B,1,D).
+
+    conv_state (B, conv_width-1, conv_ch) fp32; ssm_state (B,H,P,N) fp32.
+    """
+    s_cfg = cfg.ssm
+    d_in, nh, conv_ch = mamba2_dims(cfg)
+    bsz = x.shape[0]
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    z, xs, b, c, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xs, b, c], axis=-1).astype(jnp.float32)
+    window = jnp.concatenate([conv_state, conv_in], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) \
+        + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    xs, b, c = jnp.split(conv_out, [d_in, d_in + s_cfg.state_dim], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]
+    a = -jnp.exp(params["A_log"])
+    xh = xs.reshape(bsz, nh, s_cfg.head_dim).astype(jnp.float32)
+    bv = b[:, 0].astype(jnp.float32)                      # (B,N)
+    cv = c[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt * a)                               # (B,H)
+    new_state = ssm_state * decay[:, :, None, None] \
+        + jnp.einsum("bh,bn,bhp->bhpn", dt, bv, xh)
+    y = jnp.einsum("bn,bhpn->bhp", cv, new_state) \
+        + params["D"][None, :, None] * xh
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    new_conv_state = window[:, 1:, :]
+    return out, (new_conv_state, new_state)

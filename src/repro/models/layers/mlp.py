@@ -1,0 +1,40 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (hubert)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.init import dense_init
+
+
+def swiglu_init(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff)),
+        "w_up": dense_init(k2, (d_model, d_ff)),
+        "w_down": dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def swiglu(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(x.dtype))
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, (d_model, d_ff)),
+        "b_up": jnp.zeros((d_ff,), jnp.float32),
+        "w_down": dense_init(k2, (d_ff, d_model)),
+        "b_down": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jnp.einsum("...d,df->...f", x, params["w_up"].astype(x.dtype))
+    h = jax.nn.gelu(h + params["b_up"].astype(x.dtype))
+    y = jnp.einsum("...f,fd->...d", h, params["w_down"].astype(x.dtype))
+    return y + params["b_down"].astype(x.dtype)

@@ -1,0 +1,156 @@
+"""Mixture-of-Experts block — scatter/gather (all-to-all) dispatch.
+
+Expert-parallel: expert parameters lead with the ``E`` axis (sharding rule
+``experts -> model``); tokens are scattered into per-expert capacity
+buffers and gathered back, which GSPMD lowers to the canonical MoE
+all-to-all when token sharding (data) differs from expert sharding
+(model).  Unlike the GShard one-hot-einsum dispatch, no (T, E, C) tensor
+is ever materialized and no fake matmul FLOPs pollute the roofline —
+dispatch is real indexing.
+
+Capacity semantics: global top-k with per-expert capacity
+``C = ceil(T * k * cf / E)``; tokens routed past capacity are dropped
+(combine weight zero) — standard TPU MoE.  With a large
+``capacity_factor`` nothing drops and the layer is exactly the dense
+top-k mixture (property-tested).
+
+Router aux loss is the Switch load-balance term ``E * sum_e f_e * p_e``;
+under the federated protocol it aggregates with the same Eq. (2) client
+weights as the task loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.init import dense_init
+from repro.parallel.sharding import constrain_batch, constrain_expert_rows
+
+
+def moe_init(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    e = cfg.moe.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e)),
+        "w_gate": dense_init(ks[1], (e, d, f)),
+        "w_up": dense_init(ks[2], (e, d, f)),
+        "w_down": dense_init(ks[3], (e, f, d)),
+    }
+    if cfg.moe.num_shared_experts:
+        sk = jax.random.split(ks[4], 3)
+        ns = cfg.moe.num_shared_experts
+        p["shared"] = {
+            "w_gate": dense_init(sk[0], (d, ns * f)),
+            "w_up": dense_init(sk[1], (d, ns * f)),
+            "w_down": dense_init(sk[2], (ns * f, d)),
+        }
+    return p
+
+
+def capacity(num_tokens: int, cfg) -> int:
+    e = cfg.moe.num_experts
+    c = int(num_tokens * cfg.moe.top_k * cfg.moe.capacity_factor / e)
+    return max(c, 1)
+
+
+def _num_groups(cfg, batch: int) -> int:
+    """Routing groups (GShard): groups align with the data-axis sharding
+    so position assignment is shard-local — no cross-device cumsums."""
+    g = cfg.moe.num_groups
+    while batch % g:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_apply(params, cfg, x):
+    """x (B, S, D) -> (y (B, S, D), aux_loss scalar fp32).
+
+    GShard-style GROUPED dispatch (EXPERIMENTS.md §Perf pair B): tokens
+    are routed within ``G`` groups laid out along the batch dim (aligned
+    with the data-axis sharding), so the position-in-expert cumsum is
+    local to a shard; each group owns a per-expert capacity slice of the
+    dispatch buffer, and the scatter/gather across the expert-sharded
+    buffer is the canonical MoE all-to-all.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    grp = _num_groups(cfg, b)
+    tg = t // grp                          # tokens per group
+    cg = max(int(tg * k * cfg.moe.capacity_factor / e), 1)
+    # pin the group dim to the data axis: groups == data shards, so all
+    # routing math below is shard-local (no cross-device cumsums)
+    xt = constrain_batch(x.reshape(grp, tg, d))
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (G, Tg, E)
+    topk_p, topk_i = jax.lax.top_k(probs, k)                    # (G, Tg, k)
+    if k > 1:
+        topk_p = topk_p / jnp.sum(topk_p, axis=-1, keepdims=True)
+
+    # ---- slot-by-slot position assignment, group-local -------------------
+    drop_row = e * grp * cg
+    fill = jnp.zeros((grp, e), jnp.float32)
+    dests, gates = [], []
+    dispatch_frac = jnp.zeros((e,), jnp.float32)
+    goff = jnp.arange(grp, dtype=jnp.int32)[:, None] * cg       # (G, 1)
+    for slot in range(k):
+        eid = topk_i[..., slot]                                 # (G, Tg)
+        onehot = jax.nn.one_hot(eid, e, dtype=jnp.float32)      # (G, Tg, E)
+        before = jnp.cumsum(onehot, axis=1) - onehot            # group-local
+        pos = jnp.take_along_axis(
+            before, eid[..., None], axis=2)[..., 0] \
+            + jnp.take_along_axis(fill, eid, axis=1)            # (G, Tg)
+        keep = pos < cg
+        # buffer layout: expert-major, then group, then slot-in-group —
+        # rows of one expert are contiguous, so expert-sharding the
+        # buffer never splits a (group, expert) slice
+        dest = jnp.where(keep,
+                         eid * (grp * cg) + goff + pos.astype(jnp.int32),
+                         drop_row)
+        dests.append(dest)
+        gates.append(topk_p[..., slot] * keep)
+        fill = fill + jnp.sum(onehot * keep[..., None], axis=1)
+        dispatch_frac = dispatch_frac + jnp.mean(onehot, axis=(0, 1))
+
+    # ---- dispatch: scatter into (E*G*Cg [+pad], D) ------------------------
+    pad_rows = 256
+    expert_in = jnp.zeros((e * grp * cg + pad_rows, d), x.dtype)
+    flat_x = xt.reshape(t, d)
+    for dest in dests:
+        expert_in = expert_in.at[dest.reshape(t)].add(flat_x)
+    expert_in = expert_in[:e * grp * cg].reshape(e, grp * cg, d)
+
+    # ---- expert FFN (expert-parallel; weights FSDP-gathered) -------------
+    g_ = jnp.einsum("ecd,edf->ecf", expert_in,
+                    params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", expert_in,
+                   params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g_) * u
+    expert_out = jnp.einsum("ecf,efd->ecd", h,
+                            params["w_down"].astype(x.dtype))
+    expert_out = jnp.concatenate(
+        [expert_out.reshape(e * grp * cg, d),
+         jnp.zeros((pad_rows, d), x.dtype)], axis=0)
+
+    # ---- combine ----------------------------------------------------------
+    y = jnp.zeros((t, d), x.dtype)
+    for dest, gate in zip(dests, gates):
+        y = y + gate.reshape(t)[:, None].astype(x.dtype) \
+            * expert_out[dest.reshape(t)]
+
+    # Switch load-balance aux: E * sum_e f_e p_e
+    p_mean = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum((dispatch_frac / k) * p_mean)
+
+    if cfg.moe.num_shared_experts:
+        sp = params["shared"]
+        xf = x.reshape(t, d)
+        sg = jnp.einsum("td,df->tf", xf, sp["w_gate"].astype(x.dtype))
+        su = jnp.einsum("td,df->tf", xf, sp["w_up"].astype(x.dtype))
+        y = y + jnp.einsum("tf,fd->td", jax.nn.silu(sg) * su,
+                           sp["w_down"].astype(x.dtype))
+
+    return y.reshape(b, s, d), aux.astype(jnp.float32)

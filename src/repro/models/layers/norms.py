@@ -1,0 +1,31 @@
+"""Normalization layers (functional, param-dict style)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    """RMSNorm with fp32 accumulation, cast back to the input dtype."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * (var + eps) ** -0.5
+    return (y * params["scale"]).astype(dtype)
+
+
+def layernorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * (var + eps) ** -0.5
+    return (y * params["scale"] + params["bias"]).astype(dtype)

@@ -1,0 +1,60 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+Rotate-half convention (llama): the head dim is split into two halves and
+rotated as complex pairs ``(x1, x2) -> (x1 cos - x2 sin, x2 cos + x1 sin)``.
+
+M-RoPE (multimodal RoPE, arXiv:2409.12191): the ``head_dim/2`` frequency
+slots are partitioned into three contiguous sections (temporal, height,
+width); each section takes its angle from a different position stream.
+Text tokens carry identical (t, h, w) positions, so M-RoPE degenerates to
+standard RoPE on pure text — a property we unit-test.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., S) -> angles (..., S, head_dim//2) in fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def mrope_angles(positions_thw, head_dim: int, theta: float,
+                 sections: Tuple[int, int, int]):
+    """positions_thw (3, B, S) -> angles (B, S, head_dim//2).
+
+    ``sections`` gives the number of frequency slots (out of head_dim//2)
+    driven by the temporal / height / width position streams respectively.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # select the position stream per frequency slot
+    section_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half)
+    pos = positions_thw.astype(jnp.float32)          # (3, B, S)
+    pos_per_slot = jnp.take(pos, section_id, axis=0)  # (half, B, S)
+    pos_per_slot = jnp.moveaxis(pos_per_slot, 0, -1)  # (B, S, half)
+    return pos_per_slot * freqs
+
+
+def apply_rope(x, angles):
+    """x (B, S, H, D), angles (B, S, D//2) (or broadcastable) -> same shape."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[..., None, :]   # (B, S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+def text_mrope_positions(positions):
+    """Replicate (B, S) text positions into the (3, B, S) M-RoPE streams."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)

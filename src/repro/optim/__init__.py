@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adam, adamw, clip_by_global_norm, global_norm, sgd,
+    cosine_schedule, constant_schedule, warmup_cosine)

@@ -1,0 +1,153 @@
+"""Optimizers built from scratch (no optax offline).
+
+The paper's server update (Eq. 3) is plain SGD: ``W <- W - lambda * G``;
+``sgd()`` with momentum 0 is therefore the gFedNTM-faithful optimizer and
+the default for the launcher.  Adam/AdamW are provided for the NTM training
+runs (the AVITM/CTM reference implementations train with Adam) and as a
+framework feature.  State layout mirrors optax: ``Optimizer`` is an
+(init, update) pair over pytrees; ``update`` returns (new_params, new_state).
+
+Note on memory (recorded in EXPERIMENTS.md): plain SGD keeps optimizer
+state == params, which is what lets the 400 B-param llama4-maverick fit a
+256-chip v5e pod; Adam triples the per-param state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]   # (params, grads, state, step) -> (params, state)
+
+
+def _tree_map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return _tree_map(lambda g: g * scale, tree), norm
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_schedule(lr, max(total_steps - warmup, 1), final_frac)
+
+    def f(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        return w * cos(jnp.maximum(step - warmup, 0))
+    return f
+
+
+def _resolve(schedule_or_lr):
+    if callable(schedule_or_lr):
+        return schedule_or_lr
+    return constant_schedule(schedule_or_lr)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+def sgd(learning_rate, momentum: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    """Paper Eq. (3) when momentum == 0."""
+    sched = _resolve(learning_rate)
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": _tree_map(jnp.zeros_like, params)}
+
+    def update(params, grads, state, step=0):
+        lr = sched(step)
+        if momentum == 0.0:
+            new = _tree_map(lambda p, g: p - lr * g.astype(p.dtype),
+                            params, grads)
+            return new, state
+        mu = _tree_map(lambda m, g: momentum * m + g.astype(m.dtype),
+                       state["mu"], grads)
+        if nesterov:
+            upd = _tree_map(lambda m, g: momentum * m + g.astype(m.dtype),
+                            mu, grads)
+        else:
+            upd = mu
+        new = _tree_map(lambda p, u: p - lr * u, params, upd)
+        return new, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adam(learning_rate, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    sched = _resolve(learning_rate)
+
+    def init(params):
+        z = _tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": z, "v": _tree_map(jnp.zeros_like, z)}
+
+    def update(params, grads, state, step=0):
+        lr = sched(step)
+        t = step + 1
+        m = _tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                      state["m"], grads)
+        v = _tree_map(lambda v_, g: b2 * v_
+                      + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      state["v"], grads)
+        mhat_scale = 1.0 / (1 - b1 ** t)
+        vhat_scale = 1.0 / (1 - b2 ** t)
+        new = _tree_map(
+            lambda p, m_, v_: p - lr * (m_ * mhat_scale)
+            / (jnp.sqrt(v_ * vhat_scale) + eps),
+            params, m, v)
+        return new, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(learning_rate, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01) -> Optimizer:
+    sched = _resolve(learning_rate)
+    inner = adam(learning_rate, b1, b2, eps)
+
+    def update(params, grads, state, step=0):
+        lr = sched(step)
+        new, st = inner.update(params, grads, state, step)
+        new = _tree_map(lambda n, p: n - lr * weight_decay * p, new, params)
+        return new, st
+
+    return Optimizer(inner.init, update)
+
+
+def get_optimizer(name: str, learning_rate, **kw) -> Optimizer:
+    table = {"sgd": sgd, "adam": adam, "adamw": adamw}
+    if name not in table:
+        raise KeyError(f"unknown optimizer {name!r}")
+    return table[name](learning_rate, **kw)

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (  # noqa: F401
+    batch_partition_spec, cache_partition_specs, param_partition_specs,
+    shardings_for)

@@ -1,0 +1,13 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see ONE device;
+multi-device protocol tests spawn subprocesses that set the flag first."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

@@ -1,0 +1,94 @@
+"""Per-architecture smoke tests (assignment requirement):
+
+For each of the 10 assigned architectures, instantiate the REDUCED variant
+(2 layers, d_model <= 512, <= 4 experts) and run one forward and one
+federated train step on CPU, asserting output shapes and finiteness.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.data.lm_data import synthetic_lm_batch
+from repro.models import transformer as tfm
+from repro.optim import sgd
+
+ARCH_IDS = sorted(ASSIGNED_ARCHS)
+
+
+def _batch_for(cfg, batch=2, seq=64, seed=0):
+    return {k: jnp.asarray(v)
+            for k, v in synthetic_lm_batch(cfg, batch, seq, seed=seed).items()}
+
+
+@pytest.fixture(scope="module")
+def reduced_cfgs():
+    return {a: get_config(a).reduced() for a in ARCH_IDS}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_config_constraints(arch, reduced_cfgs):
+    cfg = reduced_cfgs[arch]
+    assert cfg.num_layers == 2
+    assert cfg.d_model <= 512
+    if cfg.kind == "moe":
+        assert cfg.moe.num_experts <= 4
+    # same family as the full config
+    full = get_config(arch)
+    assert cfg.kind == full.kind
+    assert cfg.use_mla == full.use_mla
+    assert cfg.use_mrope == full.use_mrope
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch, reduced_cfgs):
+    cfg = reduced_cfgs[arch]
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch_for(cfg)
+    logits, aux = tfm.forward_train(params, cfg, batch, dtype=jnp.float32)
+    assert logits.shape == (2, 64, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch, reduced_cfgs):
+    """One Eq.(2)/(3)-equivalent train step: loss finite, params move."""
+    cfg = reduced_cfgs[arch]
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch_for(cfg)
+    opt = sgd(1e-2)
+    state = opt.init(params)
+
+    loss, grads = jax.value_and_grad(
+        lambda p: tfm.train_loss(p, cfg, batch, dtype=jnp.float32))(params)
+    assert bool(jnp.isfinite(loss))
+    new_params, _ = opt.update(params, grads, state, 0)
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), params, new_params)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0.0
+    # loss decreases after a few steps on the same batch (sanity)
+    p = params
+    for i in range(5):
+        l2, g = jax.value_and_grad(
+            lambda q: tfm.train_loss(q, cfg, batch, dtype=jnp.float32))(p)
+        p, _ = opt.update(p, g, {}, i)
+    final = tfm.train_loss(p, cfg, batch, dtype=jnp.float32)
+    assert float(final) < float(loss)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if not get_config(a).encoder_only])
+def test_decode_smoke(arch, reduced_cfgs):
+    cfg = reduced_cfgs[arch]
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    cache = tfm.init_cache(cfg, 2, 32, dtype=jnp.float32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    logits, cache = tfm.decode_step(params, cfg, cache, tok,
+                                    dtype=jnp.float32)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert int(cache["pos"]) == 1

@@ -1,0 +1,187 @@
+"""Layer-level tests: flash-VJP gradients, RoPE/M-RoPE invariants, MoE
+dispatch, SSD chunking."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.models.layers.attention import (_sdpa, chunked_attention,
+                                           make_mask)
+from repro.models.layers.mamba2 import ssd_chunked
+from repro.models.layers.moe import capacity, moe_apply, moe_init
+from repro.models.layers.rope import (apply_rope, mrope_angles, rope_angles,
+                                      text_mrope_positions)
+from repro.kernels.ref import ssd_scan_ref
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash) attention vs SDPA, values + grads
+# ---------------------------------------------------------------------------
+CASES = [(2, 64, 4, 2, 32, True, 0), (1, 100, 4, 4, 16, True, 24),
+         (2, 48, 4, 1, 32, False, 0)]
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,hd,causal,window", CASES)
+def test_chunked_attention_matches_sdpa(b, s, hq, hkv, hd, causal, window,
+                                        rng):
+    q = jnp.asarray(rng.standard_normal((b, s, hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    scale = hd ** -0.5
+
+    out = chunked_attention(q, k, v, pos, pos, causal=causal, window=window,
+                            scale=scale, chunk=32)
+    ref = _sdpa(q, k, v, make_mask(pos, pos, causal=causal, window=window),
+                scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,hd,causal,window", CASES)
+def test_flash_vjp_grads_match_sdpa(b, s, hq, hkv, hd, causal, window, rng):
+    """The hand-written flash backward == autodiff through SDPA."""
+    q = jnp.asarray(rng.standard_normal((b, s, hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    scale = hd ** -0.5
+
+    def f_flash(q, k, v):
+        o = chunked_attention(q, k, v, pos, pos, causal=causal,
+                              window=window, scale=scale, chunk=32)
+        return jnp.sum(jnp.sin(o))
+
+    def f_ref(q, k, v):
+        o = _sdpa(q, k, v, make_mask(pos, pos, causal=causal, window=window),
+                  scale)
+        return jnp.sum(jnp.sin(o))
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+def test_rope_preserves_norm(rng):
+    x = jnp.asarray(rng.standard_normal((2, 8, 4, 32)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    ang = rope_angles(pos, 32, 10000.0)
+    y = apply_rope(x, ang)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property(rng):
+    """<rope(q,i), rope(k,j)> depends only on i - j."""
+    hd = 16
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, hd)), jnp.float32)
+
+    def dot_at(i, j):
+        qi = apply_rope(q, rope_angles(jnp.asarray([[i]]), hd, 100.0))
+        kj = apply_rope(k, rope_angles(jnp.asarray([[j]]), hd, 100.0))
+        return float(jnp.sum(qi * kj))
+
+    np.testing.assert_allclose(dot_at(5, 3), dot_at(9, 7), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(0, 0), dot_at(11, 11), rtol=1e-4)
+
+
+def test_mrope_degenerates_to_rope_on_text(rng):
+    """Qwen2-VL property: identical (t,h,w) positions == standard RoPE."""
+    hd, theta = 32, 10000.0
+    pos = jnp.broadcast_to(jnp.arange(6)[None], (2, 6))
+    sections = (8, 4, 4)
+    a_m = mrope_angles(text_mrope_positions(pos), hd, theta, sections)
+    a_r = rope_angles(pos, hd, theta)
+    # frequency ORDER differs per section, but the set of angles applied to
+    # identical positions is a permutation; a stronger check: equal after
+    # the same permutation — here both must yield equal attention dots
+    x = jnp.asarray(rng.standard_normal((2, 6, 1, hd)), jnp.float32)
+    ym = apply_rope(x, a_m)
+    yr = apply_rope(x, a_r)
+    # with equal positions across the three streams, the per-slot angles
+    # are position * freq(slot) in both cases
+    np.testing.assert_allclose(np.asarray(a_m), np.asarray(a_r), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(yr), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def test_moe_dense_equivalence_no_drops(rng):
+    cfg = get_config("qwen3-moe-235b-a22b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model)), jnp.float32)
+    y, aux = moe_apply(p, cfg, x)
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    tp, ti = jax.lax.top_k(probs, cfg.moe.top_k)
+    tp = tp / tp.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(xt)
+    for e in range(cfg.moe.num_experts):
+        h = jax.nn.silu(xt @ p["w_gate"][e]) * (xt @ p["w_up"][e])
+        o = h @ p["w_down"][e]
+        w = jnp.where(ti == e, tp, 0.0).sum(-1)
+        ref = ref + w[:, None] * o
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)),
+                               np.asarray(ref), atol=5e-3)
+    assert float(aux) > 0.0
+
+
+def test_moe_capacity_drops_tokens(rng):
+    """With capacity_factor << 1 most tokens are dropped -> output ~ 0
+    for dropped rows (plus shared expert if any)."""
+    cfg = get_config("qwen3-moe-235b-a22b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.01,
+                                     top_k=1))
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.standard_normal((1, 64, cfg.d_model)), jnp.float32)
+    y, _ = moe_apply(p, cfg, x)
+    assert capacity(64, cfg) == 1    # 1 slot per expert
+    zero_rows = np.mean(np.abs(np.asarray(y[0])).max(axis=-1) < 1e-7)
+    assert zero_rows > 0.5
+
+
+def test_moe_aux_balanced_at_uniform(rng):
+    """Uniform router -> aux loss == 1 (the Switch optimum)."""
+    cfg = get_config("qwen3-moe-235b-a22b").reduced()
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    p = dict(p, router=jnp.zeros_like(p["router"]))
+    x = jnp.asarray(rng.standard_normal((4, 64, cfg.d_model)), jnp.float32)
+    _, aux = moe_apply(p, cfg, x)
+    np.testing.assert_allclose(float(aux), 1.0, rtol=0.15)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([32, 64, 96]),
+       st.sampled_from([16, 32]))
+def test_ssd_chunked_matches_naive(b, s, chunk):
+    rng = np.random.default_rng(s + chunk)
+    h, p, n = 2, 8, 4
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, s, h)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.5, 2.0, (h,)), jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    if s % chunk:
+        return  # ssd_chunked requires a chunk multiple (model pads)
+    y1, h1 = ssd_chunked(x, dt, a, bb, cc, chunk=chunk)
+    y2, h2 = ssd_scan_ref(x, dt, a, bb, cc)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)

@@ -1,0 +1,103 @@
+"""Data pipeline tests: the paper's synthetic LDA generator, federated
+splits, and the LM token stream."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.federated_split import split_corpus_across_clients
+from repro.data.lm_data import SyntheticLMStream, synthetic_lm_batch
+from repro.data.synthetic_lda import (fake_contextual_embeddings,
+                                      generate_lda_corpus,
+                                      make_federated_topic_split)
+
+
+def test_lda_generator_paper_structure():
+    """K' shared topics + (K-K')/L private per node (paper §4.1)."""
+    syn = generate_lda_corpus(vocab_size=300, num_topics=20, num_nodes=5,
+                              shared_topics=5, docs_per_node=30,
+                              val_docs_per_node=5, len_range=(50, 80),
+                              seed=1)
+    assert len(syn.shared_topics) == 5
+    for tids in syn.node_topics:
+        assert len(tids) == 5 + (20 - 5) // 5
+        assert set(syn.shared_topics) <= set(tids)
+    # private topics are disjoint across nodes
+    privates = [set(t) - set(syn.shared_topics) for t in syn.node_topics]
+    for i in range(5):
+        for j in range(i + 1, 5):
+            assert not privates[i] & privates[j]
+    # doc lengths in range, thetas supported only on visible topics
+    for th, bw, tids in zip(syn.node_thetas, syn.node_bows, syn.node_topics):
+        lengths = bw.sum(axis=1)
+        assert (lengths >= 50).all() and (lengths <= 80).all()
+        hidden = np.setdiff1d(np.arange(20), tids)
+        assert np.abs(th[:, hidden]).max() == 0.0
+        np.testing.assert_allclose(th.sum(1), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(syn.beta.sum(1), 1.0, rtol=1e-5)
+
+
+def test_lda_generator_deterministic():
+    a = generate_lda_corpus(vocab_size=100, num_topics=10, num_nodes=2,
+                            shared_topics=2, docs_per_node=10,
+                            val_docs_per_node=2, seed=7)
+    b = generate_lda_corpus(vocab_size=100, num_topics=10, num_nodes=2,
+                            shared_topics=2, docs_per_node=10,
+                            val_docs_per_node=2, seed=7)
+    np.testing.assert_array_equal(a.node_bows[0], b.node_bows[0])
+
+
+def test_topic_split_counts():
+    rng = np.random.default_rng(0)
+    shared, nodes = make_federated_topic_split(50, 10, 5, rng)
+    assert len(shared) == 10
+    assert all(len(n) == 10 + 8 for n in nodes)
+
+
+@pytest.mark.parametrize("mode", ["iid", "by_label", "dirichlet"])
+def test_split_disjoint_and_covering(mode):
+    labels = np.repeat(np.arange(10), 20)
+    parts = split_corpus_across_clients(200, 4, mode=mode, labels=labels,
+                                        seed=0)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 200
+    assert len(np.unique(allidx)) == 200
+
+
+def test_fake_contextual_embeddings_locality():
+    """Similar BoWs -> similar embeddings (the property CTM needs)."""
+    rng = np.random.default_rng(0)
+    base = rng.poisson(1.0, (1, 200)).astype(np.float32)
+    near = base + (rng.random((1, 200)) < 0.05)
+    far = rng.poisson(1.0, (1, 200)).astype(np.float32)
+    embs = fake_contextual_embeddings(
+        np.concatenate([base, near, far]), 64)
+    sim_near = embs[0] @ embs[1]
+    sim_far = embs[0] @ embs[2]
+    assert sim_near > sim_far
+
+
+def test_lm_batch_shapes_per_kind():
+    for arch in ("phi3-mini-3.8b", "qwen2-vl-7b", "hubert-xlarge"):
+        cfg = get_config(arch).reduced()
+        b = synthetic_lm_batch(cfg, 4, 32)
+        if cfg.kind == "audio":
+            assert b["frame_embeds"].shape == (4, 32, cfg.frontend_embed_dim)
+            assert b["targets"].max() < cfg.vocab_size
+        else:
+            assert b["tokens"].shape == (4, 32)
+            assert b["labels"].shape == (4, 32)
+            assert b["tokens"].max() < cfg.vocab_size
+            if cfg.kind == "vlm":
+                assert b["patch_embeds"].shape[2] == cfg.d_model
+                assert b["mrope_positions"].shape == (3, 4, 32)
+
+
+def test_lm_stream_concatenates_clients():
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    stream = SyntheticLMStream(cfg, batch=8, seq=16, num_clients=4)
+    b = next(stream)
+    assert b["tokens"].shape == (8, 16)
+    # non-IID: different clients draw from shifted vocab windows
+    c0 = b["tokens"][:2].ravel()
+    c3 = b["tokens"][6:].ravel()
+    assert c0.mean() != pytest.approx(c3.mean(), rel=0.01)

@@ -1,0 +1,104 @@
+"""Serving-path correctness: prefill + single-token decode must reproduce
+the full-sequence forward exactly (per arch family, incl. ring-buffer
+sliding-window caches and SSM recurrent state)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import transformer as tfm
+
+DECODE_ARCHS = [a for a in sorted(ASSIGNED_ARCHS)
+                if not get_config(a).encoder_only]
+
+
+def _cfg(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.kind == "moe":
+        # capacity dropping depends on token count; disable for exactness
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_prefill_then_decode_matches_forward(arch):
+    cfg = _cfg(arch)
+    params = tfm.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(0)
+    s = 17
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, s + 3)), jnp.int32)
+
+    full, _ = tfm.forward_train(params, cfg, {"tokens": toks},
+                                dtype=jnp.float32)
+    logits_p, cache = tfm.prefill(params, cfg, {"tokens": toks[:, :s]},
+                                  dtype=jnp.float32, max_len=s + 3)
+    np.testing.assert_allclose(np.asarray(full[:, :s]),
+                               np.asarray(logits_p), rtol=2e-4, atol=2e-4)
+    # decode three tokens autoregressively against teacher-forced full pass
+    for i in range(3):
+        logits_d, cache = tfm.decode_step(
+            params, cfg, cache, toks[:, s + i:s + i + 1], dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(full[:, s + i]),
+                                   np.asarray(logits_d[:, 0]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["granite-34b", "phi3-mini-3.8b"])
+def test_sliding_window_ring_buffer(arch):
+    """long_500k variant: window cache shorter than the sequence."""
+    cfg = dataclasses.replace(_cfg(arch), sliding_window=24)
+    params = tfm.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(0)
+    s = 40   # > window
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, s + 3)), jnp.int32)
+    full, _ = tfm.forward_train(params, cfg, {"tokens": toks},
+                                dtype=jnp.float32)
+    _, cache = tfm.prefill(params, cfg, {"tokens": toks[:, :s]},
+                           dtype=jnp.float32, max_len=s + 3)
+    assert cache["k"].shape[2] == 24    # ring buffer is window-sized
+    for i in range(3):
+        logits_d, cache = tfm.decode_step(
+            params, cfg, cache, toks[:, s + i:s + i + 1], dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(full[:, s + i]),
+                                   np.asarray(logits_d[:, 0]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_scan_vs_unrolled_layers():
+    """cfg.scan_layers=False (analysis lowering) is numerically identical."""
+    cfg = _cfg("phi3-mini-3.8b")
+    params = tfm.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    a, _ = tfm.forward_train(params, cfg, {"tokens": toks}, dtype=jnp.float32)
+    cfg2 = dataclasses.replace(cfg, scan_layers=False, unroll_chunks=True)
+    b, _ = tfm.forward_train(params, cfg2, {"tokens": toks},
+                             dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_mla_absorbed_decode_matches_reference():
+    """EXPERIMENTS.md §Perf pair C: the DeepSeek-V2 weight-absorbed decode
+    path (scores/combine in latent space, pre-normalized cache) is
+    mathematically identical to the reference MLA decode."""
+    cfg = _cfg("minicpm3-4b")
+    cfg_a = dataclasses.replace(cfg, mla_absorb=True)
+    params = tfm.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(0)
+    s = 17
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, s + 3)), jnp.int32)
+    full, _ = tfm.forward_train(params, cfg, {"tokens": toks},
+                                dtype=jnp.float32)
+    _, cache = tfm.prefill(params, cfg_a, {"tokens": toks[:, :s]},
+                           dtype=jnp.float32, max_len=s + 3)
+    for i in range(3):
+        logits, cache = tfm.decode_step(
+            params, cfg_a, cache, toks[:, s + i:s + i + 1],
+            dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(full[:, s + i]),
+                                   np.asarray(logits[:, 0]),
+                                   rtol=2e-4, atol=2e-4)

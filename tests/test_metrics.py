@@ -1,0 +1,106 @@
+"""DSS (Eq. 5), TSS (Eq. 6), WMD/AMWMD (Eq. 7) and the extended topic-
+quality metrics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.metrics import (amwmd, dss, hellinger_affinity, npmi_coherence,
+                           topic_diversity, tss, tss_baseline, wmd)
+
+
+def _dirichlet(rng, n, k, alpha=0.5):
+    return rng.dirichlet(np.full(k, alpha), size=n).astype(np.float32)
+
+
+def test_dss_zero_for_identical(rng):
+    th = _dirichlet(rng, 50, 8)
+    assert dss(th, th) < 1e-4
+
+
+def test_dss_positive_for_different(rng):
+    a = _dirichlet(rng, 50, 8)
+    b = _dirichlet(rng, 50, 8)
+    assert dss(a, b) > 0.1
+
+
+def test_dss_blocked_matches_direct(rng):
+    a = _dirichlet(rng, 300, 6)
+    b = _dirichlet(rng, 300, 6)
+    np.testing.assert_allclose(dss(a, b), dss(a, b, block=64), rtol=1e-3)
+
+
+def test_tss_equals_k_for_identical(rng):
+    beta = _dirichlet(rng, 10, 200, alpha=0.05)
+    np.testing.assert_allclose(tss(beta, beta), 10.0, rtol=1e-3)
+
+
+def test_tss_permutation_invariant_in_inferred(rng):
+    beta = _dirichlet(rng, 8, 100, alpha=0.05)
+    perm = beta[rng.permutation(8)]
+    np.testing.assert_allclose(tss(beta, perm), tss(beta, beta), rtol=1e-4)
+
+
+def test_tss_baseline_below_self(rng):
+    base = tss_baseline(200, 10, eta=0.05, runs=3)
+    assert base < 10.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6))
+def test_hellinger_affinity_bounds(k):
+    rng = np.random.default_rng(k)
+    p = rng.dirichlet(np.ones(k), size=5).astype(np.float32)
+    q = rng.dirichlet(np.ones(k), size=7).astype(np.float32)
+    w = np.asarray(hellinger_affinity(p, q))
+    assert (w >= -1e-6).all() and (w <= 1.0 + 1e-5).all()
+    # self-affinity is 1
+    ws = np.asarray(hellinger_affinity(p, p)).diagonal()
+    np.testing.assert_allclose(ws, 1.0, rtol=1e-5)
+
+
+def test_wmd_zero_for_identical_sets(rng):
+    emb = rng.standard_normal((20, 8)).astype(np.float32)
+    w = np.full(5, 0.2, np.float32)
+    ids = np.arange(5)
+    assert wmd(w, emb[ids], w, emb[ids]) < 1e-3
+
+
+def test_wmd_symmetry_and_positivity(rng):
+    emb = rng.standard_normal((30, 8)).astype(np.float32)
+    wa = rng.dirichlet(np.ones(6)).astype(np.float32)
+    wb = rng.dirichlet(np.ones(6)).astype(np.float32)
+    a, b = emb[:6], emb[6:12]
+    d1, d2 = wmd(wa, a, wb, b), wmd(wb, b, wa, a)
+    assert d1 > 0
+    np.testing.assert_allclose(d1, d2, rtol=1e-2)
+
+
+def test_amwmd_zero_against_self(rng):
+    beta = rng.dirichlet(np.full(50, 0.1), size=5).astype(np.float32)
+    emb = rng.standard_normal((50, 16)).astype(np.float32)
+    assert amwmd(beta, beta, emb, top_n=5) < 1e-2
+
+
+def test_amwmd_federated_covers_better(rng):
+    """The Fig.-4 mechanism: a model containing BOTH nodes' topics has
+    lower AMWMD to each node than the other node's model."""
+    emb = rng.standard_normal((100, 16)).astype(np.float32)
+    node_a = rng.dirichlet(np.full(100, 0.05), size=4).astype(np.float32)
+    node_b = rng.dirichlet(np.full(100, 0.05), size=4).astype(np.float32)
+    fed = np.concatenate([node_a, node_b])
+    assert amwmd(node_a, fed, emb, top_n=5) < \
+        amwmd(node_a, node_b, emb, top_n=5)
+
+
+def test_npmi_and_diversity(rng):
+    v, d = 60, 200
+    beta = rng.dirichlet(np.full(v, 0.05), size=5).astype(np.float32)
+    bows = rng.poisson(0.5, (d, v)).astype(np.float32)
+    c = npmi_coherence(beta, bows, top_n=5)
+    assert -1.0 <= c <= 1.0
+    td = topic_diversity(beta, top_n=10)
+    assert 0.0 < td <= 1.0
+    # fully distinct topics -> diversity 1
+    distinct = np.eye(5, v, dtype=np.float32) + 1e-8
+    assert topic_diversity(distinct, top_n=1) == 1.0

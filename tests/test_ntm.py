@@ -1,0 +1,107 @@
+"""ProdLDA / CTM model tests (the NTMs the paper federates)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.ntm import ctm, prodlda
+from repro.data.synthetic_lda import fake_contextual_embeddings
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("prodlda-synthetic").reduced()
+
+
+@pytest.fixture(scope="module")
+def ctm_cfg():
+    return get_config("ctm-s2orc").reduced()
+
+
+def _bow(rng, n, v):
+    return jnp.asarray(rng.poisson(0.3, (n, v)).astype(np.float32))
+
+
+def test_forward_shapes(cfg, rng):
+    params = prodlda.init_params(jax.random.PRNGKey(0), cfg)
+    bow = _bow(rng, 6, cfg.vocab_size)
+    out = prodlda.forward(params, cfg, {"bow": bow, "rng": jax.random.PRNGKey(1)})
+    assert out["theta"].shape == (6, cfg.num_topics)
+    assert out["log_recon"].shape == (6, cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(out["theta"].sum(-1)), 1.0,
+                               rtol=1e-5)
+    # log_recon rows are log-distributions
+    np.testing.assert_allclose(
+        np.asarray(jnp.exp(out["log_recon"]).sum(-1)), 1.0, rtol=1e-4)
+
+
+def test_kl_nonnegative_and_zero_at_prior(cfg, rng):
+    params = prodlda.init_params(jax.random.PRNGKey(0), cfg)
+    k = cfg.num_topics
+    pm, plv = params["prior_mu"], params["prior_logvar"]
+    kl0 = prodlda.kl_to_prior(params, cfg, pm[None, :], plv[None, :])
+    np.testing.assert_allclose(np.asarray(kl0), 0.0, atol=1e-5)
+    mu = jnp.asarray(rng.standard_normal((4, k)), jnp.float32)
+    lv = jnp.asarray(rng.standard_normal((4, k)), jnp.float32)
+    assert (np.asarray(prodlda.kl_to_prior(params, cfg, mu, lv)) >= 0).all()
+
+
+def test_elbo_loss_finite_and_trains(cfg, rng):
+    params = prodlda.init_params(jax.random.PRNGKey(0), cfg)
+    bow = _bow(rng, 32, cfg.vocab_size)
+    batch = {"bow": bow, "rng": jax.random.PRNGKey(1)}
+    loss0 = prodlda.elbo_loss(params, cfg, batch)
+    assert np.isfinite(float(loss0))
+    g = jax.grad(lambda p: prodlda.elbo_loss(p, cfg, batch))(params)
+    p = jax.tree_util.tree_map(lambda a, b: a - 1e-3 * b, params, g)
+    loss1 = prodlda.elbo_loss(p, cfg, batch)
+    assert float(loss1) < float(loss0)
+
+
+def test_elbo_sum_mean_consistency(cfg, rng):
+    params = prodlda.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"bow": _bow(rng, 8, cfg.vocab_size)}
+    s, n = prodlda.elbo_loss_sum(params, cfg, batch, train=False)
+    m = prodlda.elbo_loss(params, cfg, batch, train=False)
+    np.testing.assert_allclose(float(s) / float(n), float(m), rtol=1e-5)
+
+
+def test_get_topics_are_distributions(cfg):
+    params = prodlda.init_params(jax.random.PRNGKey(0), cfg)
+    beta = prodlda.get_topics(params)
+    assert beta.shape == (cfg.num_topics, cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(beta.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_dropout_requires_rng_train_only(cfg, rng):
+    params = prodlda.init_params(jax.random.PRNGKey(0), cfg)
+    bow = _bow(rng, 4, cfg.vocab_size)
+    a = prodlda.forward(params, cfg, {"bow": bow}, train=False)
+    b = prodlda.forward(params, cfg, {"bow": bow}, train=False)
+    np.testing.assert_allclose(np.asarray(a["theta"]), np.asarray(b["theta"]))
+
+
+def test_combined_and_zeroshot_ctm(ctm_cfg, rng):
+    bow = _bow(rng, 8, ctm_cfg.vocab_size)
+    emb = jnp.asarray(fake_contextual_embeddings(
+        np.asarray(bow), ctm_cfg.contextual_dim))
+    pc = ctm.init_combined(jax.random.PRNGKey(0), ctm_cfg)
+    pz = ctm.init_zeroshot(jax.random.PRNGKey(0), ctm_cfg)
+    batch = {"bow": bow, "contextual": emb, "rng": jax.random.PRNGKey(2)}
+    lc = ctm.loss_combined(pc, ctm_cfg, batch)
+    lz = ctm.loss_zeroshot(pz, ctm_cfg, batch)
+    assert np.isfinite(float(lc)) and np.isfinite(float(lz))
+    # encoder input dims differ: combined sees bow+ctx, zeroshot ctx only
+    assert pc["encoder"][0]["w"].shape[0] == \
+        ctm_cfg.vocab_size + ctm_cfg.contextual_dim
+    assert pz["encoder"][0]["w"].shape[0] == ctm_cfg.contextual_dim
+
+
+def test_batchnorm_mode_runs(cfg, rng):
+    """use_batchnorm=True reproduces the reference AVITM behaviour."""
+    params = prodlda.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"bow": _bow(rng, 8, cfg.vocab_size)}
+    loss = prodlda.elbo_loss(params, cfg, batch, use_batchnorm=True,
+                             train=False)
+    assert np.isfinite(float(loss))

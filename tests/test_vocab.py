@@ -1,0 +1,74 @@
+"""Vocabulary-consensus (gFedNTM stage 1) tests, incl. the merge-monoid
+properties that make the stage order-independent."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.vocab import (Vocabulary, consensus_token_map,
+                              merge_vocabularies, reindex_bow)
+
+TERMS = st.dictionaries(st.sampled_from([f"term{i}" for i in range(30)]),
+                        st.floats(0.5, 100), max_size=20)
+
+
+@settings(max_examples=30, deadline=None)
+@given(TERMS, TERMS, TERMS)
+def test_merge_is_associative_and_commutative(a, b, c):
+    va, vb, vc = Vocabulary(dict(a)), Vocabulary(dict(b)), Vocabulary(dict(c))
+    left = merge_vocabularies([merge_vocabularies([va, vb]), vc])
+    right = merge_vocabularies([va, merge_vocabularies([vb, vc])])
+    swapped = merge_vocabularies([vc, vb, va])
+    for m in (right, swapped):
+        assert set(left.counts) == set(m.counts)
+        for t in left.counts:
+            np.testing.assert_allclose(left.counts[t], m.counts[t],
+                                       rtol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(TERMS)
+def test_merge_identity(a):
+    va = Vocabulary(dict(a))
+    out = merge_vocabularies([va, Vocabulary()])
+    assert out.counts == va.counts
+
+
+def test_merge_sums_frequencies():
+    v = merge_vocabularies([Vocabulary({"x": 1.0, "y": 2.0}),
+                            Vocabulary({"y": 3.0, "z": 4.0})])
+    assert v.counts == {"x": 1.0, "y": 5.0, "z": 4.0}
+    # ordering is frequency-descending, deterministic
+    assert v.terms == ["y", "z", "x"]
+
+
+def test_reindex_bow_preserves_counts():
+    local_terms = ["b", "a", "c"]
+    bow = np.array([[1, 2, 3], [0, 1, 0]], np.float32)
+    glob = merge_vocabularies([Vocabulary({"a": 5, "b": 1, "c": 1, "d": 9})])
+    out = reindex_bow(bow, local_terms, glob)
+    assert out.shape == (2, 4)
+    gidx = glob.index()
+    assert out[0, gidx["a"]] == 2 and out[0, gidx["b"]] == 1
+    assert out[0, gidx["c"]] == 3 and out[0, gidx["d"]] == 0
+    np.testing.assert_allclose(out.sum(), bow.sum())
+
+
+def test_consensus_token_map_roundtrip():
+    clients = [{5: 10.0, 7: 1.0}, {7: 2.0, 9: 4.0}]
+    gmap, tables = consensus_token_map(clients)
+    assert set(gmap) == {5, 7, 9}
+    # every client token maps into [0, |V|) and agrees with the global map
+    for s, t in zip(clients, tables):
+        for tok in s:
+            assert t[tok] == gmap[tok]
+    # most-frequent first: token 5 has weight 10 -> id 0
+    assert gmap[5] == 0
+
+
+def test_vocab_from_documents_and_bow():
+    docs = [["a", "b", "a"], ["b", "c"]]
+    v = Vocabulary.from_documents(docs)
+    assert v.counts == {"a": 2, "b": 2, "c": 1}
+    bow = np.array([[2, 1, 0], [0, 1, 1]], np.float32)
+    v2 = Vocabulary.from_bow(bow, ["a", "b", "c"])
+    assert v2.counts == {"a": 2.0, "b": 2.0, "c": 1.0}
