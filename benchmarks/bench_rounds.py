@@ -1,0 +1,132 @@
+"""Round-engine sweep: participation rate x staleness x server optimizer.
+
+For each cell the same synthetic federation is trained with the
+round-based engine (`repro.core.rounds.RoundEngine`) and scored on
+held-out data: ELBO perplexity (lower = better), NPMI coherence, and TSS
+against the generative ground-truth topics.  The (participation=1.0,
+fedavg, no-staleness) cell is the paper's Algorithm 1 baseline; every
+other cell is a non-ideal regime from the related work
+(arXiv:2311.00314 partial participation, async-FL staleness discounts).
+
+Emits a JSON record per cell plus the sweep grid, e.g.:
+
+    PYTHONPATH=src python -m benchmarks.bench_rounds \\
+        --out experiments/bench_rounds.json --rounds 120
+
+Small-scale smoke (used by tests/test_rounds.py):
+
+    PYTHONPATH=src python -m benchmarks.bench_rounds --vocab 100 \\
+        --topics 5 --docs 60 --rounds 5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs.base import NTM, FederatedConfig, ModelConfig, RoundConfig
+from repro.core.ntm import prodlda
+from repro.core.protocol import ClientState
+from repro.core.rounds import RoundEngine
+from repro.data.synthetic_lda import generate_lda_corpus
+from repro.launch.simulate import heldout_elbo_per_token, heldout_perplexity
+from repro.metrics import npmi_coherence, tss
+
+PARTICIPATION = (1.0, 0.6, 0.4)
+SERVER_OPTS = ("fedavg", "fedavgm", "fedadam")
+STALENESS = ({"straggler_prob": 0.0, "max_staleness": 0},
+             {"straggler_prob": 0.3, "max_staleness": 2})
+# FedAdam steps are ~1/(sqrt(v)+tau) normalized; unit server_lr diverges
+SERVER_LR = {"fedavg": 1.0, "fedavgm": 1.0, "fedadam": 0.05}
+
+
+def run(out_path="experiments/bench_rounds.json", *, vocab=400, topics=10,
+        docs=600, nodes=5, rounds=120, batch=64, lr=2e-3, seed=0,
+        participation=PARTICIPATION, server_opts=SERVER_OPTS,
+        staleness=STALENESS):
+    syn = generate_lda_corpus(
+        vocab_size=vocab, num_topics=topics, num_nodes=nodes,
+        shared_topics=max(topics // 5, 1), docs_per_node=docs,
+        val_docs_per_node=max(docs // 10, 20), seed=seed)
+    cfg = ModelConfig(name="bench-rounds", kind=NTM, vocab_size=vocab,
+                      num_topics=topics, ntm_hidden=(64, 64))
+    # deterministic ELBO (no dropout / reparam noise): plain-SGD clients
+    # are stable under it at small scale, same choice as tests/test_protocol
+    loss_fn = lambda p, b: prodlda.elbo_loss(p, cfg, b, train=False)  # noqa: E731,E501
+    init = prodlda.init_params(jax.random.PRNGKey(seed), cfg)
+    clients = [ClientState(data={"bow": b}, num_docs=len(b))
+               for b in syn.node_bows]
+    fed = FederatedConfig(num_clients=nodes, learning_rate=lr,
+                          max_rounds=rounds, rel_tol=0.0)
+    val = syn.concat_val_bows()
+
+    results = []
+    for frac in participation:
+        k = max(int(round(frac * nodes)), 1)
+        for opt in server_opts:
+            for stale in staleness:
+                rc = RoundConfig(clients_per_round=k,
+                                 sampling_seed=seed,
+                                 server_optimizer=opt,
+                                 server_lr=SERVER_LR.get(opt, 1.0),
+                                 staleness_decay=0.5, **stale)
+                eng = RoundEngine(loss_fn, init, clients, fed, rc,
+                                  batch_size=batch)
+                params = eng.fit(seed=seed)
+                beta = np.asarray(prodlda.get_topics(params))
+                rec = {"participation": frac,
+                       "clients_per_round": k,
+                       "server_optimizer": opt,
+                       "server_lr": rc.server_lr,
+                       **stale,
+                       "rounds_run": len(eng.history),
+                       "final_loss": eng.history[-1]["loss"],
+                       "heldout_elbo_per_token": heldout_elbo_per_token(
+                           params, cfg, val),
+                       "heldout_perplexity": heldout_perplexity(
+                           params, cfg, val),
+                       "npmi_coherence": float(npmi_coherence(beta, val)),
+                       "tss": float(tss(syn.beta, beta))}
+                results.append(rec)
+                print(f"K={k}/{nodes} {opt:8s} "
+                      f"stale_p={stale['straggler_prob']:.1f}: "
+                      f"ppl={rec['heldout_perplexity']:8.1f} "
+                      f"npmi={rec['npmi_coherence']:+.3f} "
+                      f"tss={rec['tss']:.2f}")
+
+    payload = {"grid": {"participation": list(participation),
+                        "server_optimizers": list(server_opts),
+                        "staleness": list(staleness)},
+               "setup": {"vocab": vocab, "topics": topics, "nodes": nodes,
+                         "docs_per_node": docs, "rounds": rounds,
+                         "batch": batch, "lr": lr, "seed": seed},
+               "results": results}
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {out_path} ({len(results)} cells)")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="experiments/bench_rounds.json")
+    ap.add_argument("--vocab", type=int, default=400)
+    ap.add_argument("--topics", type=int, default=10)
+    ap.add_argument("--docs", type=int, default=600)
+    ap.add_argument("--nodes", type=int, default=5)
+    ap.add_argument("--rounds", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args(argv)
+    run(a.out, vocab=a.vocab, topics=a.topics, docs=a.docs, nodes=a.nodes,
+        rounds=a.rounds, batch=a.batch, lr=a.lr, seed=a.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention:
   * kernel-path timings with analytic roofline inputs,
   * Fig. 3 (synthetic DSS/TSS, quick setting) summary rows,
   * Fig. 4 (AMWMD, quick setting) summary rows,
+  * round-engine participation x server-optimizer sweep (quick setting),
   * roofline-table availability from the dry-run artifacts.
 
 Full-scale versions: ``python -m benchmarks.bench_synthetic --full`` etc.
@@ -54,6 +55,23 @@ def main() -> None:
     fed_avg = min(float(np.mean(wres["amwmd"][k])) for k in fed_keys)
     rows.append(("fig4_amwmd_federated_avg", dt, f"avg={fed_avg:.3f},"
                  f"claim_holds={wres['fig4_claim_holds']}"))
+
+    # round engine (quick scale): participation x server-optimizer sweep
+    from benchmarks import bench_rounds
+    t0 = time.time()
+    rres = bench_rounds.run("experiments/bench_rounds_quick.json",
+                            vocab=300, topics=5, docs=80, nodes=3, rounds=6,
+                            batch=16, participation=(1.0, 0.67),
+                            server_opts=("fedavg", "fedadam"),
+                            staleness=({"straggler_prob": 0.0,
+                                        "max_staleness": 0},))
+    dt = (time.time() - t0) * 1e6
+    cells = rres["results"]
+    best = min(cells, key=lambda c: c["heldout_elbo_per_token"])
+    rows.append(("rounds_sweep_quick", dt / max(len(cells), 1),
+                 f"cells={len(cells)},best={best['server_optimizer']}"
+                 f"@K{best['clients_per_round']},"
+                 f"elbo/token={best['heldout_elbo_per_token']:.2f}"))
 
     # roofline artifacts (built by the dry-run, reported by roofline.py)
     from benchmarks import roofline

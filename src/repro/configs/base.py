@@ -275,6 +275,41 @@ class FederatedConfig:
 
 
 @dataclass(frozen=True)
+class RoundConfig:
+    """Round-based simulation engine knobs (``core/rounds.py``).
+
+    The defaults reproduce paper Algorithm 1 exactly: full participation
+    (K = L), one local step (E = 1), no stragglers, and a FedAvg server
+    update with ``server_lr = 1`` — which IS the Eq. (3) SGD step.  Every
+    other setting is a beyond-paper regime; ``docs/rounds.md`` maps each
+    knob to the paper / related-work setting it reproduces.
+    """
+
+    # participation: K clients sampled out of L per round (0 = all L)
+    clients_per_round: int = 0
+    # "uniform" | "weighted" (by corpus size) | "deterministic" (seeded
+    # round-robin over a fixed permutation — full coverage, no variance)
+    sampling: str = "uniform"
+    sampling_seed: int = 0
+    # E local SGD steps per selected client before the delta is sent
+    local_epochs: int = 1
+    # server optimizer applied to the weighted delta (core/aggregation.py
+    # SERVER_OPTIMIZERS registry): "fedavg" | "fedavgm" | "fedadam"
+    server_optimizer: str = "fedavg"
+    server_lr: float = 1.0
+    server_momentum: float = 0.9    # FedAvgM beta / FedAdam b1
+    server_beta2: float = 0.999     # FedAdam b2
+    server_eps: float = 1e-3        # FedAdam tau
+    # staleness model: each selected client independently straggles with
+    # probability ``straggler_prob``; its update arrives 1..max_staleness
+    # rounds late, down-weighted by staleness_decay ** age.  max_staleness
+    # = 0 disables the buffer entirely (synchronous, paper regime).
+    straggler_prob: float = 0.0
+    max_staleness: int = 0
+    staleness_decay: float = 0.5
+
+
+@dataclass(frozen=True)
 class ShapeConfig:
     """One of the four assigned input shapes."""
 
@@ -309,6 +344,7 @@ class RunConfig:
     log_every: int = 10
     checkpoint_dir: str = ""
     federated: FederatedConfig = field(default_factory=FederatedConfig)
+    rounds: RoundConfig = field(default_factory=RoundConfig)
 
 
 def asdict(cfg) -> dict:

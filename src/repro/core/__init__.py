@@ -1,8 +1,11 @@
 """The paper's contribution: gFedNTM — federated neural topic modeling."""
-from repro.core import aggregation, protocol, vocab  # noqa: F401
+from repro.core import aggregation, protocol, rounds, vocab  # noqa: F401
+from repro.core.aggregation import (  # noqa: F401
+    SERVER_OPTIMIZERS, ServerOptimizer, get_server_optimizer)
 from repro.core.protocol import (  # noqa: F401
-    ClientState, FedAvgTrainer, FederatedTrainer,
-    make_federated_train_step, train_centralized, train_non_collaborative,
-    weighted_global_loss)
+    ClientState, FedAvgTrainer, FederatedTrainer, client_round_update,
+    make_federated_train_step, param_delta, train_centralized,
+    train_non_collaborative, weighted_global_loss)
+from repro.core.rounds import RoundEngine, RoundScheduler  # noqa: F401
 from repro.core.vocab import (  # noqa: F401
     Vocabulary, consensus_token_map, merge_vocabularies, reindex_bow)

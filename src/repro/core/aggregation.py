@@ -19,7 +19,8 @@ composable with Eq. (2)):
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -127,6 +128,93 @@ def compress_with_error_feedback(grads: Pytree, error: Optional[Pytree],
     sent = topk_sparsify(corrected, frac)
     new_error = _tmap(lambda c, s: c - s, corrected, sent)
     return sent, new_error
+
+
+# ---------------------------------------------------------------------------
+# server optimizers (round engine, DESIGN.md §3)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ServerOptimizer:
+    """Server-side update rule applied to the aggregated client delta.
+
+    ``apply(params, delta_bar, state, round_idx) -> (new_params, state)``
+    where ``delta_bar`` is the Eq.-(2)-weighted average of the per-client
+    parameter deltas (W_l - W).  Sign convention: deltas point in the
+    descent direction already, so every rule ADDS its step.
+    [Reddi et al. 2021, Adaptive Federated Optimization]
+    """
+    name: str
+    init: Callable[[Pytree], Any]
+    apply: Callable[..., Tuple[Pytree, Any]]
+
+
+def fedavg_server(server_lr: float = 1.0) -> ServerOptimizer:
+    """W <- W + eta_s * delta_bar.  With eta_s=1, E=1 local step and full
+    participation this IS the paper's Eq. (3) server SGD update."""
+    def init(params):
+        return {}
+
+    def apply(params, delta, state, round_idx=0):
+        new = _tmap(lambda p, d: p + server_lr * d.astype(p.dtype),
+                    params, delta)
+        return new, state
+
+    return ServerOptimizer("fedavg", init, apply)
+
+
+def fedavgm_server(server_lr: float = 1.0,
+                   momentum: float = 0.9) -> ServerOptimizer:
+    """Server momentum: m <- beta m + delta_bar; W <- W + eta_s m."""
+    def init(params):
+        return {"m": _tmap(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def apply(params, delta, state, round_idx=0):
+        m = _tmap(lambda m_, d: momentum * m_ + d.astype(jnp.float32),
+                  state["m"], delta)
+        new = _tmap(lambda p, m_: p + server_lr * m_.astype(p.dtype),
+                    params, m)
+        return new, {"m": m}
+
+    return ServerOptimizer("fedavgm", init, apply)
+
+
+def fedadam_server(server_lr: float = 1e-2, b1: float = 0.9,
+                   b2: float = 0.999, eps: float = 1e-3) -> ServerOptimizer:
+    """FedAdam [Reddi et al. 2021]: Adam on the server pseudo-gradient
+    (no bias correction, per the paper's Algorithm 2; ``eps`` = tau)."""
+    def init(params):
+        z = _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": z, "v": _tmap(jnp.zeros_like, z)}
+
+    def apply(params, delta, state, round_idx=0):
+        m = _tmap(lambda m_, d: b1 * m_ + (1 - b1)
+                  * d.astype(jnp.float32), state["m"], delta)
+        v = _tmap(lambda v_, d: b2 * v_ + (1 - b2)
+                  * jnp.square(d.astype(jnp.float32)),
+                  state["v"], delta)
+        new = _tmap(
+            lambda p, m_, v_: p + (server_lr * m_
+                                   / (jnp.sqrt(v_) + eps)).astype(p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v}
+
+    return ServerOptimizer("fedadam", init, apply)
+
+
+SERVER_OPTIMIZERS: Dict[str, Callable[..., ServerOptimizer]] = {
+    "fedavg": fedavg_server,
+    "fedavgm": fedavgm_server,
+    "fedadam": fedadam_server,
+}
+
+
+def get_server_optimizer(name: str, **kw) -> ServerOptimizer:
+    """Registry lookup; kwargs are forwarded to the factory."""
+    if name not in SERVER_OPTIMIZERS:
+        raise KeyError(f"unknown server optimizer {name!r}; "
+                       f"available: {sorted(SERVER_OPTIMIZERS)}")
+    return SERVER_OPTIMIZERS[name](**kw)
 
 
 # ---------------------------------------------------------------------------

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.configs.base import FederatedConfig, ModelConfig
 from repro.core import aggregation as agg
+from repro.data.federated_split import round_minibatches, sample_minibatch
 from repro.optim.optimizers import Optimizer, global_norm, sgd
 
 Pytree = Any
@@ -167,12 +168,7 @@ class FederatedTrainer:
 
     # -- client-side ------------------------------------------------------
     def _client_minibatch(self, c: ClientState, rng) -> Dict[str, Any]:
-        n = min(self.batch_size, c.num_docs)
-        idx = jax.random.choice(rng, c.num_docs, (n,), replace=False)
-        idx = np.asarray(idx)
-        batch = {k: jnp.asarray(v[idx]) for k, v in c.data.items()}
-        batch["rng"] = jax.random.fold_in(rng, 1)
-        return batch, n
+        return sample_minibatch(c.data, c.num_docs, rng, self.batch_size)
 
     def _client_grad(self, l: int, c: ClientState, round_key):
         """GETCLIENTGRAD(N_l, W): local minibatch grad + count (Alg. 1)."""
@@ -235,6 +231,41 @@ def _rel_change(old: Pytree, new: Pytree) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# per-round client primitives (used by the round engine, core/rounds.py)
+# ---------------------------------------------------------------------------
+def param_delta(old: Pytree, new: Pytree) -> Pytree:
+    """The client's round message in delta form: W_l - W (DESIGN.md §3)."""
+    return jax.tree_util.tree_map(lambda a, b: b - a, old, new)
+
+
+def client_round_update(grad_fn, params: Pytree, client: ClientState,
+                        round_rng, *, learning_rate: float,
+                        local_epochs: int = 1,
+                        batch_size: int = 64) -> Tuple[Pytree, float, float]:
+    """Run E local SGD epochs on one client starting from the server
+    weights; return ``(delta, n_total, mean_loss)``.
+
+    With ``local_epochs=1`` the delta is exactly ``-lr * G_l`` for the
+    minibatch FederatedTrainer would draw from ``round_rng`` — the
+    identity that makes the round engine reproduce Algorithm 1 (tested in
+    tests/test_rounds.py).  ``grad_fn`` is a jitted value_and_grad of the
+    client's local mean loss.
+    """
+    local = params
+    tot_loss, tot_n = 0.0, 0.0
+    for batch, n in round_minibatches(client.data, client.num_docs,
+                                      round_rng, batch_size=batch_size,
+                                      local_epochs=local_epochs):
+        loss, grads = grad_fn(local, batch)
+        local = jax.tree_util.tree_map(
+            lambda p, g: p - learning_rate * g.astype(p.dtype), local, grads)
+        tot_loss += float(loss) * n
+        tot_n += n
+    return param_delta(params, local), float(tot_n), \
+        tot_loss / max(tot_n, 1.0)
+
+
+# ---------------------------------------------------------------------------
 # FedAvg-style local steps (beyond paper — collective-volume optimization)
 # ---------------------------------------------------------------------------
 class FedAvgTrainer(FederatedTrainer):
@@ -254,11 +285,11 @@ class FedAvgTrainer(FederatedTrainer):
             rng = jax.random.fold_in(round_key, l)
             local = self.params
             tot_loss, tot_n = 0.0, 0.0
-            for s in range(self.fed.local_steps):
-                # step 0 draws the same minibatch as SyncOpt would, so
-                # local_steps=1 reduces to FederatedTrainer exactly
-                key_s = rng if s == 0 else jax.random.fold_in(rng, s)
-                batch, n = self._client_minibatch(c, key_s)
+            # step 0 draws the same minibatch as SyncOpt would, so
+            # local_steps=1 reduces to FederatedTrainer exactly
+            for batch, n in round_minibatches(
+                    c.data, c.num_docs, rng, batch_size=self.batch_size,
+                    local_epochs=self.fed.local_steps):
                 loss, grads = self._grad_fn(local, batch)
                 local = jax.tree_util.tree_map(
                     lambda p, g: p - self.fed.learning_rate * g,

@@ -1,4 +1,4 @@
-"""Partition a corpus across L federated clients.
+"""Partition a corpus across L federated clients + per-round batch iterators.
 
 Supports the two regimes the paper evaluates:
   * ``by_label`` — each client holds documents of distinct categories
@@ -6,11 +6,20 @@ Supports the two regimes the paper evaluates:
   * ``iid`` / ``dirichlet`` — random or Dirichlet-skewed splits, the
     standard federated-learning heterogeneity knob (beyond paper, used by
     the heterogeneity ablations).
+
+The minibatch samplers at the bottom are the single source of truth for
+how a client draws data inside one federated round: ``sample_minibatch``
+is the Alg.-1 draw used by ``FederatedTrainer``, and ``round_minibatches``
+extends it to E local epochs for the round engine (``core/rounds.py``)
+with the FedAvgTrainer key schedule — epoch 0 reuses the round key, so
+``local_epochs=1`` draws the exact same minibatch Sync-Opt would.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -49,3 +58,40 @@ def split_corpus_across_clients(
                 out[c].extend(part.tolist())
         return [np.sort(np.array(o, dtype=np.int64)) for o in out]
     raise ValueError(f"unknown split mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# per-round client minibatch iterators
+# ---------------------------------------------------------------------------
+def sample_minibatch(data: Dict[str, np.ndarray], num_docs: int, rng,
+                     batch_size: int) -> Tuple[Dict[str, Any], int]:
+    """One Alg.-1 client draw: ``batch_size`` docs without replacement.
+
+    Returns ``(batch, n)`` with ``batch["rng"]`` set to the fold of the
+    draw key — the key schedule FederatedTrainer has always used, kept
+    byte-identical here so the round engine reproduces its trajectory.
+    """
+    n = min(batch_size, num_docs)
+    idx = np.asarray(jax.random.choice(rng, num_docs, (n,), replace=False))
+    batch = {k: jnp.asarray(v[idx]) for k, v in data.items()}
+    batch["rng"] = jax.random.fold_in(rng, 1)
+    return batch, n
+
+
+def round_minibatches(data: Dict[str, np.ndarray], num_docs: int, round_rng,
+                      *, batch_size: int,
+                      local_epochs: int = 1) -> Iterator[Tuple[Dict[str, Any],
+                                                               int]]:
+    """Yield the E local-epoch minibatches of one client in one round.
+
+    Epoch 0 draws with ``round_rng`` itself (the minibatch Sync-Opt would
+    draw, so ``local_epochs=1`` reduces the round engine to the
+    synchronous protocol exactly); epoch s>0 folds in s+1 — NOT s,
+    because fold_in(round_rng, 1) is already spent as epoch 0's
+    in-batch model rng (``sample_minibatch``) and reusing it as a draw
+    key would correlate epoch-1 document selection with epoch-0
+    dropout/reparametrization noise.
+    """
+    for s in range(local_epochs):
+        key_s = round_rng if s == 0 else jax.random.fold_in(round_rng, s + 1)
+        yield sample_minibatch(data, num_docs, key_s, batch_size)

@@ -1,10 +1,19 @@
 """Property tests (hypothesis) for the aggregation layer — Eq. (2) and the
-beyond-paper privacy/compression features."""
+beyond-paper privacy/compression features.
+
+``hypothesis`` is an optional test extra (``pip install -e .[test]``);
+when absent the whole module is skipped so ``pytest -x -q`` still
+collects on a bare environment.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (optional [test] extra)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core.aggregation import (aggregate_host,
                                     compress_with_error_feedback,

@@ -2,8 +2,11 @@
 quality metrics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (optional [test] extra)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.metrics import (amwmd, dss, hellinger_affinity, npmi_coherence,
                            topic_diversity, tss, tss_baseline, wmd)

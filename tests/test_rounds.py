@@ -1,0 +1,265 @@
+"""Round-engine correctness (DESIGN.md §3).
+
+The anchor: in the degenerate configuration (K=L, E=1, no stragglers,
+FedAvg with server_lr=1) the round engine must retrace the Algorithm-1
+``FederatedTrainer`` parameter trajectory — the simulation layer adds
+regimes, never changes the paper's math.  Plus: seeded cohort sampling
+determinism, server-optimizer shape/dtype preservation, and
+staleness-0 == synchronous.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import FederatedConfig, RoundConfig
+from repro.core.aggregation import SERVER_OPTIMIZERS, get_server_optimizer
+from repro.core.ntm import prodlda
+from repro.core.protocol import ClientState, FederatedTrainer
+from repro.core.rounds import RoundEngine, RoundScheduler
+from repro.data.synthetic_lda import generate_lda_corpus
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("prodlda-synthetic").reduced()
+    syn = generate_lda_corpus(
+        vocab_size=cfg.vocab_size, num_topics=cfg.num_topics, num_nodes=3,
+        shared_topics=4, docs_per_node=120, val_docs_per_node=20, seed=0)
+    loss = lambda p, b: prodlda.elbo_loss(p, cfg, b, train=False)
+    init = prodlda.init_params(jax.random.PRNGKey(0), cfg)
+    clients = [ClientState(data={"bow": b}, num_docs=len(b))
+               for b in syn.node_bows]
+    return cfg, loss, init, clients
+
+
+def _leaves_close(a, b, **kw):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+
+# ---------------------------------------------------------------------------
+# the equivalence anchor
+# ---------------------------------------------------------------------------
+def test_degenerate_engine_matches_federated_trainer(setup):
+    """K=L, E=1, staleness=0, FedAvg(lr_s=1) == Algorithm 1 trajectory."""
+    cfg, loss, init, clients = setup
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=6,
+                          rel_tol=0.0)
+    tr = FederatedTrainer(loss, init, clients, fed, batch_size=48)
+    tr.fit(seed=0)
+    eng = RoundEngine(loss, init, clients, fed, RoundConfig(),
+                      batch_size=48)
+    eng.fit(seed=0)
+    _leaves_close(tr.params, eng.params, atol=5e-6, rtol=1e-5)
+    # per-round losses were computed on the same minibatches
+    np.testing.assert_allclose([h["loss"] for h in tr.history],
+                               [h["loss"] for h in eng.history],
+                               rtol=1e-5)
+
+
+def test_staleness_zero_equals_synchronous(setup):
+    """max_staleness=0 disables the buffer even with straggler_prob>0."""
+    cfg, loss, init, clients = setup
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=4,
+                          rel_tol=0.0)
+    sync = RoundEngine(loss, init, clients, fed,
+                       RoundConfig(straggler_prob=0.0, max_staleness=0),
+                       batch_size=32)
+    noop = RoundEngine(loss, init, clients, fed,
+                       RoundConfig(straggler_prob=0.9, max_staleness=0),
+                       batch_size=32)
+    sync.fit(seed=1)
+    noop.fit(seed=1)
+    _leaves_close(sync.params, noop.params, atol=0, rtol=0)
+    assert all(h["in_flight"] == 0 for h in noop.history)
+
+
+def test_stragglers_delay_and_deliver(setup):
+    """With real staleness, updates go in flight and later land."""
+    cfg, loss, init, clients = setup
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=8,
+                          rel_tol=0.0)
+    eng = RoundEngine(loss, init, clients, fed,
+                      RoundConfig(straggler_prob=0.6, max_staleness=3,
+                                  staleness_decay=0.5),
+                      batch_size=32)
+    eng.fit(seed=2)
+    assert any(h["in_flight"] > 0 for h in eng.history)
+    delivered = sum(h["arrived"] for h in eng.history)
+    assert delivered > 0
+    # stale arrivals actually differ from the synchronous trajectory
+    sync = RoundEngine(loss, init, clients, fed, RoundConfig(),
+                       batch_size=32)
+    sync.fit(seed=2)
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree_util.tree_leaves(eng.params),
+                               jax.tree_util.tree_leaves(sync.params)))
+    assert diff > 0
+
+
+def test_staleness_decay_actually_discounts(setup):
+    """The gamma^age discount must change the trajectory (it scales the
+    delta, not just the Eq.-(2) weight, which would cancel in the
+    normalization for single-arrival rounds)."""
+    cfg, loss, init, clients = setup
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=8,
+                          rel_tol=0.0)
+    stale = dict(straggler_prob=0.6, max_staleness=3)
+    trusted = RoundEngine(loss, init, clients, fed,
+                          RoundConfig(staleness_decay=1.0, **stale),
+                          batch_size=32)
+    discounted = RoundEngine(loss, init, clients, fed,
+                             RoundConfig(staleness_decay=0.25, **stale),
+                             batch_size=32)
+    trusted.fit(seed=2)
+    discounted.fit(seed=2)
+    # same seeds -> same cohorts/straggler draws; only the discount varies
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree_util.tree_leaves(trusted.params),
+                               jax.tree_util.tree_leaves(discounted.params)))
+    assert diff > 0
+
+
+def test_engine_refuses_unimplemented_privacy_features(setup):
+    """Grad-level privacy knobs must not be silently dropped."""
+    cfg, loss, init, clients = setup
+    fed = FederatedConfig(num_clients=3, dp_noise_multiplier=1.0)
+    with pytest.raises(NotImplementedError):
+        RoundEngine(loss, init, clients, fed, RoundConfig())
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+def test_scheduler_seeded_determinism():
+    a = RoundScheduler(10, 3, mode="uniform", seed=7)
+    b = RoundScheduler(10, 3, mode="uniform", seed=7)
+    for r in range(20):
+        np.testing.assert_array_equal(a.select(r), b.select(r))
+        sel = a.select(r)
+        assert len(sel) == 3 and len(set(sel.tolist())) == 3
+        assert sel.min() >= 0 and sel.max() < 10
+        assert (np.sort(sel) == sel).all()
+
+
+def test_scheduler_full_participation_is_identity():
+    s = RoundScheduler(5, 0, mode="uniform", seed=0)
+    for r in range(3):
+        np.testing.assert_array_equal(s.select(r), np.arange(5))
+
+
+def test_scheduler_deterministic_round_robin_covers_all():
+    s = RoundScheduler(7, 3, mode="deterministic", seed=0)
+    seen = set()
+    for r in range(7):          # ceil(7/3)=3 rounds suffice; 7 is ample
+        seen.update(int(i) for i in s.select(r))
+    assert seen == set(range(7))
+    # and the walk itself is reproducible
+    s2 = RoundScheduler(7, 3, mode="deterministic", seed=0)
+    for r in range(7):
+        np.testing.assert_array_equal(s.select(r), s2.select(r))
+
+
+def test_scheduler_weighted_prefers_large_clients():
+    w = [1.0] * 9 + [1e6]
+    s = RoundScheduler(10, 3, mode="weighted", weights=w, seed=0)
+    hits = sum(9 in s.select(r) for r in range(30))
+    assert hits >= 27           # the huge client is in ~every cohort
+
+
+# ---------------------------------------------------------------------------
+# server optimizers
+# ---------------------------------------------------------------------------
+def _toy_tree():
+    return {"w": jnp.ones((4, 3), jnp.float32),
+            "b": {"x": jnp.zeros((2,), jnp.float32)}}
+
+
+@pytest.mark.parametrize("name", sorted(SERVER_OPTIMIZERS))
+def test_server_optimizer_shapes_dtypes(name):
+    opt = get_server_optimizer(name)
+    params = _toy_tree()
+    delta = jax.tree_util.tree_map(lambda p: 0.01 * jnp.ones_like(p), params)
+    state = opt.init(params)
+    new, state = opt.apply(params, delta, state, 0)
+    assert (jax.tree_util.tree_structure(new)
+            == jax.tree_util.tree_structure(params))
+    for p, q in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(new)):
+        assert p.shape == q.shape and p.dtype == q.dtype
+    for leaf in jax.tree_util.tree_leaves(state):
+        assert leaf.dtype == jnp.float32
+    # a second application must accept the returned state
+    new2, _ = opt.apply(new, delta, state, 1)
+    assert jax.tree_util.tree_structure(new2) \
+        == jax.tree_util.tree_structure(params)
+
+
+def test_fedavg_server_is_eq3():
+    """fedavg(server_lr=1) applied to delta=-lr*g IS W - lr*G (Eq. 3)."""
+    opt = get_server_optimizer("fedavg", server_lr=1.0)
+    params = _toy_tree()
+    g = jax.tree_util.tree_map(lambda p: 0.5 * jnp.ones_like(p), params)
+    delta = jax.tree_util.tree_map(lambda x: -0.01 * x, g)
+    new, _ = opt.apply(params, delta, opt.init(params), 0)
+    ref = jax.tree_util.tree_map(lambda p, gg: p - 0.01 * gg, params, g)
+    _leaves_close(new, ref, atol=1e-7)
+
+
+def test_fedavgm_accumulates_momentum():
+    opt = get_server_optimizer("fedavgm", server_lr=1.0, momentum=0.5)
+    params = _toy_tree()
+    delta = jax.tree_util.tree_map(lambda p: jnp.full_like(p, 0.1), params)
+    state = opt.init(params)
+    p1, state = opt.apply(params, delta, state, 0)     # m = 0.1
+    p2, state = opt.apply(p1, delta, state, 1)         # m = 0.15
+    step2 = float(p2["w"][0, 0] - p1["w"][0, 0])
+    assert abs(step2 - 0.15) < 1e-6
+
+
+def test_unknown_server_optimizer_raises():
+    with pytest.raises(KeyError):
+        get_server_optimizer("nope")
+    with pytest.raises(ValueError):
+        RoundScheduler(5, 2, mode="nope")
+
+
+# ---------------------------------------------------------------------------
+# partial participation + adaptive server end-to-end
+# ---------------------------------------------------------------------------
+def test_partial_participation_trains(setup):
+    cfg, loss, init, clients = setup
+    fed = FederatedConfig(num_clients=3, learning_rate=5e-3, max_rounds=20,
+                          rel_tol=0.0)
+    eng = RoundEngine(loss, init, clients, fed,
+                      RoundConfig(clients_per_round=2,
+                                  server_optimizer="fedavgm",
+                                  server_momentum=0.5),
+                      batch_size=48)
+    eng.fit(seed=0)
+    assert all(h["participants"] == 2 for h in eng.history)
+    first = np.mean([h["loss"] for h in eng.history[:4]])
+    last = np.mean([h["loss"] for h in eng.history[-4:]])
+    assert last < first
+    assert np.isfinite(last)
+
+
+def test_bench_rounds_emits_sweep(tmp_path):
+    """Acceptance: JSON sweep over >=3 participation x >=2 server opts."""
+    from benchmarks.bench_rounds import run
+    out = tmp_path / "sweep.json"
+    payload = run(str(out), vocab=300, topics=5, docs=80, nodes=3, rounds=4,
+                  batch=16, participation=(1.0, 0.67, 0.34),
+                  server_opts=("fedavg", "fedadam"),
+                  staleness=({"straggler_prob": 0.0, "max_staleness": 0},))
+    assert out.exists()
+    assert len(payload["results"]) == 3 * 2 * 1
+    for rec in payload["results"]:
+        # perplexity may overflow to inf for barely-trained models;
+        # the log-space bound must always be finite
+        assert np.isfinite(rec["heldout_elbo_per_token"])
+        assert np.isfinite(rec["npmi_coherence"])
+        assert np.isfinite(rec["final_loss"])

@@ -1,8 +1,12 @@
 """Vocabulary-consensus (gFedNTM stage 1) tests, incl. the merge-monoid
 properties that make the stage order-independent."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (optional [test] extra)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core.vocab import (Vocabulary, consensus_token_map,
                               merge_vocabularies, reindex_bow)
