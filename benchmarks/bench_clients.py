@@ -1,0 +1,150 @@
+"""Loop-vs-vmap cohort execution sweep (the vectorized engine's headline).
+
+For each (K clients-per-round, E local epochs) cell the SAME synthetic
+federation is stepped with ``RoundEngine(exec_mode="loop")`` — one jitted
+grad dispatch per client per epoch, host round-trips between them — and
+``exec_mode="vmap"`` — all K local-update loops, the Eq. (2) combine and
+the server optimizer fused into one jitted graph (DESIGN.md §4).  Both
+modes retrace the same parameter trajectory (property suite in
+tests/test_vmap_equivalence.py); this benchmark records what that costs:
+steady-state seconds per round (post-warm-up, so compile time is
+excluded) and the loop/vmap speedup per cell.
+
+    PYTHONPATH=src python -m benchmarks.bench_clients \\
+        --out experiments/bench_clients.json
+
+    # CI smoke: one tiny cell, exercises the whole vmap path in seconds
+    PYTHONPATH=src python -m benchmarks.bench_clients --quick
+
+JSON layout: {"grid": {...}, "setup": {...}, "results": [{"clients_per_round",
+"local_epochs", "loop_s_per_round", "vmap_s_per_round", "speedup",
+"max_param_dev", ...}]}.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import NTM, FederatedConfig, ModelConfig, RoundConfig
+from repro.core.ntm import prodlda
+from repro.core.protocol import ClientState
+from repro.core.rounds import RoundEngine
+from repro.data.synthetic_lda import generate_lda_corpus
+
+K_SWEEP = (4, 16, 64)
+E_SWEEP = (1, 4)
+
+
+def _max_dev(a, b) -> float:
+    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _time_rounds(eng: RoundEngine, *, warmup: int, rounds: int,
+                 seed: int) -> float:
+    """Steady-state mean seconds/round (first ``warmup`` rounds excluded —
+    they pay tracing + compilation)."""
+    for r in range(warmup):
+        eng.round(seed=seed * 100003 + r)
+    jax.block_until_ready(eng.params)
+    t0 = time.perf_counter()
+    for r in range(warmup, warmup + rounds):
+        eng.round(seed=seed * 100003 + r)
+    jax.block_until_ready(eng.params)
+    return (time.perf_counter() - t0) / rounds
+
+
+def run(out_path="experiments/bench_clients.json", *, vocab=1000, topics=20,
+        hidden=64, docs_per_client=96, batch=64, lr=2e-3, seed=0,
+        warmup=1, rounds=3, k_sweep=K_SWEEP, e_sweep=E_SWEEP):
+    num_clients = max(k_sweep)
+    cfg = ModelConfig(name="bench-clients", kind=NTM, vocab_size=vocab,
+                      num_topics=topics, ntm_hidden=(hidden, hidden))
+    syn = generate_lda_corpus(
+        vocab_size=vocab, num_topics=topics, num_nodes=num_clients,
+        shared_topics=max(topics // 5, 1), docs_per_node=docs_per_client,
+        val_docs_per_node=8, seed=seed)
+    loss_fn = lambda p, b: prodlda.elbo_loss(p, cfg, b, train=False)  # noqa: E731,E501
+    loss_sum_fn = lambda p, b: prodlda.elbo_loss_sum(p, cfg, b, train=False)  # noqa: E731,E501
+    init = prodlda.init_params(jax.random.PRNGKey(seed), cfg)
+    clients = [ClientState(data={"bow": b}, num_docs=len(b))
+               for b in syn.node_bows]
+    fed = FederatedConfig(num_clients=num_clients, learning_rate=lr,
+                          max_rounds=warmup + rounds, rel_tol=0.0)
+
+    results = []
+    for k in k_sweep:
+        for e in e_sweep:
+            rc = RoundConfig(clients_per_round=k, local_epochs=e,
+                             sampling_seed=seed)
+            loop = RoundEngine(loss_fn, init, clients, fed, rc,
+                               batch_size=batch, exec_mode="loop")
+            vm = RoundEngine(loss_fn, init, clients, fed, rc,
+                             batch_size=batch, exec_mode="vmap",
+                             loss_sum_fn=loss_sum_fn)
+            t_loop = _time_rounds(loop, warmup=warmup, rounds=rounds,
+                                  seed=seed)
+            t_vmap = _time_rounds(vm, warmup=warmup, rounds=rounds,
+                                  seed=seed)
+            dev = _max_dev(loop.params, vm.params)
+            rec = {"clients_per_round": k, "local_epochs": e,
+                   "loop_s_per_round": t_loop,
+                   "vmap_s_per_round": t_vmap,
+                   "speedup": t_loop / max(t_vmap, 1e-12),
+                   "max_param_dev": dev,
+                   "final_loss_loop": loop.history[-1]["loss"],
+                   "final_loss_vmap": vm.history[-1]["loss"]}
+            results.append(rec)
+            print(f"K={k:3d} E={e}: loop={t_loop*1e3:8.1f}ms/round "
+                  f"vmap={t_vmap*1e3:8.1f}ms/round "
+                  f"speedup={rec['speedup']:5.1f}x dev={dev:.1e}")
+
+    payload = {"grid": {"clients_per_round": list(k_sweep),
+                        "local_epochs": list(e_sweep)},
+               "setup": {"vocab": vocab, "topics": topics, "hidden": hidden,
+                         "num_clients": num_clients,
+                         "docs_per_client": docs_per_client, "batch": batch,
+                         "lr": lr, "seed": seed, "warmup_rounds": warmup,
+                         "timed_rounds": rounds,
+                         "backend": jax.default_backend()},
+               "results": results}
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {out_path} ({len(results)} cells)")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="experiments/bench_clients.json")
+    ap.add_argument("--vocab", type=int, default=1000)
+    ap.add_argument("--topics", type=int, default=20)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--docs-per-client", type=int, default=96)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="timed steady-state rounds per cell")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="one tiny (K=4, E=1) cell — CI smoke for the "
+                         "vmap path")
+    a = ap.parse_args(argv)
+    if a.quick:
+        return run(a.out, vocab=200, topics=5, hidden=32,
+                   docs_per_client=40, batch=16, rounds=2,
+                   k_sweep=(4,), e_sweep=(1,), seed=a.seed)
+    return run(a.out, vocab=a.vocab, topics=a.topics, hidden=a.hidden,
+               docs_per_client=a.docs_per_client, batch=a.batch,
+               rounds=a.rounds, seed=a.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention:
   * Fig. 3 (synthetic DSS/TSS, quick setting) summary rows,
   * Fig. 4 (AMWMD, quick setting) summary rows,
   * round-engine participation x server-optimizer sweep (quick setting),
+  * loop-vs-vmap cohort execution speedup (quick setting),
   * roofline-table availability from the dry-run artifacts.
 
 Full-scale versions: ``python -m benchmarks.bench_synthetic --full`` etc.
@@ -72,6 +73,20 @@ def main() -> None:
                  f"cells={len(cells)},best={best['server_optimizer']}"
                  f"@K{best['clients_per_round']},"
                  f"elbo/token={best['heldout_elbo_per_token']:.2f}"))
+
+    # vectorized cohort execution (quick scale): loop vs vmap per-round cost
+    from benchmarks import bench_clients
+    t0 = time.time()
+    cres = bench_clients.run("experiments/bench_clients_quick.json",
+                             vocab=200, topics=5, hidden=32,
+                             docs_per_client=40, batch=16, rounds=2,
+                             k_sweep=(4,), e_sweep=(1,))
+    dt = (time.time() - t0) * 1e6
+    cell = cres["results"][0]
+    rows.append(("clients_vmap_speedup_quick", dt,
+                 f"K={cell['clients_per_round']},E={cell['local_epochs']},"
+                 f"speedup={cell['speedup']:.1f}x,"
+                 f"dev={cell['max_param_dev']:.1e}"))
 
     # roofline artifacts (built by the dry-run, reported by roofline.py)
     from benchmarks import roofline

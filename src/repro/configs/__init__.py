@@ -58,7 +58,7 @@ def get_shape(name: str) -> ShapeConfig:
 
 
 def applicable_shapes(cfg: ModelConfig) -> list[str]:
-    """Which of the four assigned shapes apply to this arch (DESIGN.md §6)."""
+    """Which of the four assigned shapes apply to this arch (DESIGN.md §7)."""
     shapes = ["train_4k", "prefill_32k"]
     if cfg.encoder_only:
         return shapes          # no autoregressive decode for encoder-only

@@ -285,6 +285,12 @@ class RoundConfig:
     knob to the paper / related-work setting it reproduces.
     """
 
+    # execution path: "loop" steps the cohort client-by-client on the
+    # host (the literal Alg. 1 composition); "vmap" stacks the cohort's
+    # minibatches on a leading client axis and runs all K local updates,
+    # the Eq. (2) combine and the server optimizer in ONE jitted graph
+    # (DESIGN.md §4).  Both retrace the same trajectory (tested).
+    exec_mode: str = "loop"
     # participation: K clients sampled out of L per round (0 = all L)
     clients_per_round: int = 0
     # "uniform" | "weighted" (by corpus size) | "deterministic" (seeded

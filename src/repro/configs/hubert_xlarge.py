@@ -4,7 +4,7 @@
 kv=16), d_ff 5120, vocab 504 (k-means cluster units for masked prediction).
 The mel-spectrogram + conv feature extractor frontend is a STUB:
 ``input_specs()`` provides precomputed frame embeddings. Encoder-only:
-no decode shapes (DESIGN.md §6).
+no decode shapes (DESIGN.md §7).
 """
 from repro.configs.base import AUDIO, ModelConfig
 

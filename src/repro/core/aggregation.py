@@ -50,6 +50,26 @@ def aggregate_host(grads: Sequence[Pytree],
     return _tmap(combine, *grads)
 
 
+def aggregate_stacked(tree: Pytree, weights) -> Pytree:
+    """In-graph Eq. (2) over a stacked leading client axis.
+
+    Every leaf is ``(K, ...)`` — one slice per cohort member — and
+    ``weights`` is ``(K,)``.  Used by the vmap execution path
+    (``core/rounds.py``): the per-client deltas/grads never leave the
+    device, the weighted mean happens inside the same jitted graph that
+    produced them.  A zero weight drops that client's contribution
+    (masked non-arrivals), matching ``aggregate_host`` over the survivors.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    total = jnp.maximum(jnp.sum(w), 1e-12)
+
+    def combine(leaf):
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(wb * leaf.astype(jnp.float32), axis=0) / total
+
+    return _tmap(combine, tree)
+
+
 def aggregate_psum(grad: Pytree, n_samples, axis_name) -> Pytree:
     """In-graph Eq. (2): every client holds its local grad and sample count;
     returns the identical weighted average on all clients."""

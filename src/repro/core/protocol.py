@@ -25,6 +25,7 @@ Two faithful realizations of the same math (DESIGN.md §2):
 """
 from __future__ import annotations
 
+import inspect
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -35,10 +36,65 @@ import numpy as np
 
 from repro.configs.base import FederatedConfig, ModelConfig
 from repro.core import aggregation as agg
-from repro.data.federated_split import round_minibatches, sample_minibatch
+from repro.data.federated_split import (round_minibatches, sample_minibatch,
+                                        stacked_round_batches)
 from repro.optim.optimizers import Optimizer, global_norm, sgd
 
 Pytree = Any
+
+EXEC_MODES = ("loop", "vmap")
+
+
+def masked_mean_loss(loss_fn, loss_sum_fn=None):
+    """Client objective for the stacked (vmap) execution path.
+
+    The stacked batches of :func:`stacked_round_batches` carry a
+    ``doc_mask`` marking padded rows.  A mask-aware ``loss_sum_fn(params,
+    batch) -> (sum_loss, count)`` (e.g. ``prodlda.elbo_loss_sum``) keeps
+    those rows out of the objective and its gradient; the masked mean
+    ``sum/count`` then equals the plain mean the loop path takes over the
+    unpadded batch (DESIGN.md §4).  Without a ``loss_sum_fn`` the plain
+    mean ``loss_fn`` is used with the mask stripped — only valid when no
+    client pads (every ``num_docs >= batch_size``); the engines enforce
+    that precondition at construction.
+
+    CAVEAT (stochastic losses + padding): in-batch noise (dropout /
+    reparametrization) inside the loss is drawn over the PADDED row count
+    P, and threefry's counter layout is shape-dependent, so those draws
+    differ from the loop path's n-row draws even on the real rows.  A
+    padded client under a ``train=True`` loss therefore trains correctly
+    (same noise distribution, masked objective) but does NOT retrace the
+    loop trajectory bit-for-bit; the vmap==loop guarantee for stochastic
+    losses holds exactly when no client pads.  Deterministic losses
+    (``train=False``, the equivalence-test setting) are unaffected.
+    """
+    if loss_sum_fn is not None:
+        def mean_loss(params, batch):
+            s, n = loss_sum_fn(params, batch)
+            return s / jnp.maximum(n, 1.0)
+        return mean_loss
+
+    def mean_loss(params, batch):
+        return loss_fn(params, {k: v for k, v in batch.items()
+                                if k != "doc_mask"})
+    return mean_loss
+
+
+def _check_vmap_preconditions(fed: FederatedConfig, clients, batch_size: int,
+                              loss_sum_fn, *, what: str) -> None:
+    """The stacked path's constructor-time guards (never silent)."""
+    if (fed.dp_noise_multiplier > 0 or fed.compression_topk > 0
+            or fed.secure_aggregation):
+        raise NotImplementedError(
+            f"{what} exec_mode='vmap' does not apply grad-level "
+            "dp_noise_multiplier / compression_topk / secure_aggregation; "
+            "use exec_mode='loop'")
+    if loss_sum_fn is None and any(c.num_docs < batch_size for c in clients):
+        raise ValueError(
+            f"{what} exec_mode='vmap' with ragged clients (num_docs < "
+            f"batch_size={batch_size}) needs a mask-aware loss_sum_fn "
+            "(e.g. prodlda.elbo_loss_sum) so padded rows stay out of the "
+            "objective; pass loss_sum_fn= or use exec_mode='loop'")
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +202,15 @@ class FederatedTrainer:
 
     ``loss_fn(params, batch) -> scalar mean loss`` is the client's local
     objective (grad of it == G_l of Eq. 2 for that minibatch).
+
+    ``exec_mode="loop"`` (default) polls clients one by one — the literal
+    Alg. 1 composition, and the only mode that applies the grad-level
+    privacy/compression knobs.  ``exec_mode="vmap"`` stacks all L client
+    minibatches on a leading axis and runs every client gradient, the
+    Eq. (2) combine and the Eq. (3) update in ONE jitted graph — same
+    trajectory (same keys, same math; tested), one dispatch per round
+    (DESIGN.md §4).  Ragged clients additionally need the mask-aware
+    ``loss_sum_fn`` (see :func:`masked_mean_loss`).
     """
 
     def __init__(self, loss_fn, init_params: Pytree,
@@ -153,7 +218,12 @@ class FederatedTrainer:
                  fed: FederatedConfig,
                  optimizer: Optional[Optimizer] = None,
                  batch_size: int = 64,
-                 num_clients_for_masks: Optional[int] = None):
+                 num_clients_for_masks: Optional[int] = None,
+                 exec_mode: str = "loop",
+                 loss_sum_fn=None):
+        if exec_mode not in EXEC_MODES:
+            raise ValueError(f"unknown exec_mode {exec_mode!r}; "
+                             f"one of {EXEC_MODES}")
         self.loss_fn = loss_fn
         self.params = init_params
         self.clients = list(clients)
@@ -161,7 +231,13 @@ class FederatedTrainer:
         self.optimizer = optimizer or sgd(fed.learning_rate)
         self.opt_state = self.optimizer.init(init_params)
         self.batch_size = batch_size
+        self.exec_mode = exec_mode
+        if exec_mode == "vmap":
+            _check_vmap_preconditions(fed, self.clients, batch_size,
+                                      loss_sum_fn, what="FederatedTrainer")
+        self._mean_loss = masked_mean_loss(loss_fn, loss_sum_fn)
         self._grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        self._vmap_step = None
         self._nmask = num_clients_for_masks or len(self.clients)
         self.history: List[Dict[str, float]] = []
         self._round = 0
@@ -190,8 +266,50 @@ class FederatedTrainer:
         return float(loss), grads, float(n)
 
     # -- server-side ------------------------------------------------------
+    def _build_vmap_step(self):
+        grad_fn = jax.value_and_grad(self._mean_loss)
+        optimizer = self.optimizer
+
+        def step(params, opt_state, stacked, weights, step_idx):
+            losses, grads = jax.vmap(grad_fn, in_axes=(None, 0))(params,
+                                                                 stacked)
+            gbar = agg.aggregate_stacked(grads, weights)       # Eq. (2)
+            new_params, new_opt = optimizer.update(
+                params, gbar, opt_state, step_idx)             # Eq. (3)
+            rel = _rel_change(params, new_params)
+            return new_params, new_opt, losses, rel
+
+        # donated params/opt_state buffers are reused in place round over
+        # round on accelerators; CPU ignores donation, skip the warning
+        dn = () if jax.default_backend() == "cpu" else (0, 1)
+        self._vmap_step = jax.jit(step, donate_argnums=dn)
+
+    def _round_vmap(self, seed: Optional[int]) -> Dict[str, float]:
+        """All L client grads + combine + update in one jitted call."""
+        e = self._round
+        round_key = jax.random.PRNGKey(seed if seed is not None else e)
+        stacked, counts = stacked_round_batches(
+            [c.data for c in self.clients],
+            [c.num_docs for c in self.clients], round_key,
+            list(range(len(self.clients))),
+            batch_size=self.batch_size, local_epochs=1)
+        stacked = {k: v[:, 0] for k, v in stacked.items()}  # E=1: drop axis
+        weights = counts[:, 0]
+        if self._vmap_step is None:
+            self._build_vmap_step()
+        self.params, self.opt_state, losses, rel = self._vmap_step(
+            self.params, self.opt_state, stacked, weights, e)
+        rec = {"round": e,
+               "loss": float(np.average(np.asarray(losses), weights=weights)),
+               "rel_change": float(rel)}
+        self.history.append(rec)
+        self._round += 1
+        return rec
+
     def round(self, seed: Optional[int] = None) -> Dict[str, float]:
         """One synchronous round: Eq. (1)/(2) aggregation + Eq. (3) update."""
+        if self.exec_mode == "vmap":
+            return self._round_vmap(seed)
         e = self._round
         round_key = jax.random.PRNGKey(seed if seed is not None else e)
         losses, grads, weights = [], [], []
@@ -276,6 +394,17 @@ class FedAvgTrainer(FederatedTrainer):
     ``fed.local_steps`` at the cost of update staleness.  Kept as a
     subclass so the benchmark can compare both under identical data.
     """
+
+    def __init__(self, *args, **kwargs):
+        # resolve exec_mode however it was passed (keyword OR positional)
+        bound = inspect.signature(FederatedTrainer.__init__).bind_partial(
+            self, *args, **kwargs)
+        if bound.arguments.get("exec_mode", "loop") != "loop":
+            raise NotImplementedError(
+                "FedAvgTrainer overrides round() and is loop-only; "
+                "RoundEngine(exec_mode='vmap') is the batched path for "
+                "multi-local-step clients")
+        super().__init__(*args, **kwargs)
 
     def round(self, seed: Optional[int] = None) -> Dict[str, float]:
         e = self._round

@@ -12,7 +12,14 @@ degenerate configuration:
     K = L, E = 1, no stragglers, FedAvg(server_lr=1)
         ==  FederatedTrainer  (same parameter trajectory; tested)
 
-Composition (everything here is host-side orchestration over the same
+Two execution paths over the same math (``exec_mode``, DESIGN.md §4):
+``"loop"`` steps the cohort client-by-client on the host; ``"vmap"``
+stacks the cohort's minibatches on a leading client axis and runs all K
+local-update loops, the Eq. (2) combine and the server optimizer in ONE
+jitted graph (padding+masking for ragged corpora) — same trajectory,
+one dispatch per round instead of K*E.
+
+Composition (in loop mode, host-side orchestration over the same
 jitted client grad the Algorithm-1 trainer uses):
 
   * :class:`RoundScheduler` — picks the round-r cohort: uniform /
@@ -45,8 +52,10 @@ import numpy as np
 
 from repro.configs.base import FederatedConfig, RoundConfig
 from repro.core import aggregation as agg
-from repro.core.protocol import (ClientState, _rel_change,
-                                 client_round_update)
+from repro.core.protocol import (EXEC_MODES, ClientState, _rel_change,
+                                 client_round_update, masked_mean_loss,
+                                 _check_vmap_preconditions)
+from repro.data.federated_split import stacked_round_batches
 
 Pytree = Any
 
@@ -121,6 +130,24 @@ class PendingUpdate:
     weight: float
 
 
+def combine_arrivals(arrivals: Sequence[Any],
+                     staleness_decay: float) -> Pytree:
+    """Eq. (2) weighted mean of one round's arriving deltas.
+
+    ``arrivals`` is a list of ``(age, delta, weight)``.  INVARIANT: the
+    ``staleness_decay ** age`` discount scales the DELTA, not the Eq. (2)
+    weight — a weight-only discount would cancel in the weighted-mean
+    normalization whenever a round's arrivals all share one age (e.g. any
+    single-arrival round), silently trusting stale updates fully.  Both
+    execution modes and the regression test in tests/test_rounds.py go
+    through this one function.
+    """
+    scaled = [d if age == 0 else jax.tree_util.tree_map(
+        lambda x: x * staleness_decay ** age, d)
+        for age, d, _ in arrivals]
+    return agg.aggregate_host(scaled, [w for _, _, w in arrivals])
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -136,12 +163,36 @@ class RoundEngine:
     than silently dropping the guarantee.
 
     ``loss_fn(params, batch) -> scalar mean loss`` as everywhere else.
+
+    Execution modes (``exec_mode`` overrides ``RoundConfig.exec_mode``):
+
+      * ``"loop"`` — the cohort is stepped client-by-client on the host
+        (one jitted grad per client per epoch).  Wall-clock grows
+        linearly with K; this is the literal Alg.-1 composition.
+      * ``"vmap"`` — the cohort's E-epoch minibatches are stacked on a
+        leading client axis (``data/federated_split.stacked_round_batches``,
+        zero-padded + ``doc_mask``-masked for ragged corpora) and ALL K
+        local-epoch loops run as one ``vmap``-of-``scan`` inside a single
+        jitted graph; with the staleness buffer off, the Eq. (2) combine,
+        the server optimizer and the rel-change norm run in the same
+        graph with donated buffers — one dispatch per round, no host
+        round-trips per client (DESIGN.md §4).  With stragglers enabled
+        the per-client deltas must outlive the round, so the stacked
+        deltas come back to the host and join the same pending-buffer /
+        ``combine_arrivals`` path the loop mode uses.  Both modes draw
+        identical minibatches and retrace the same trajectory (property
+        suite in tests/test_vmap_equivalence.py).
+
+    Ragged federations (some ``num_docs < batch_size``) under ``"vmap"``
+    need a mask-aware ``loss_sum_fn(params, batch) -> (sum, count)``
+    (e.g. ``prodlda.elbo_loss_sum``); see ``protocol.masked_mean_loss``.
     """
 
     def __init__(self, loss_fn, init_params: Pytree,
                  clients: Sequence[ClientState], fed: FederatedConfig,
                  rounds: Optional[RoundConfig] = None, *,
-                 batch_size: int = 64):
+                 batch_size: int = 64, exec_mode: Optional[str] = None,
+                 loss_sum_fn=None):
         if (fed.dp_noise_multiplier > 0 or fed.compression_topk > 0
                 or fed.secure_aggregation):
             raise NotImplementedError(
@@ -155,6 +206,20 @@ class RoundEngine:
         self.fed = fed
         self.rc = rounds or RoundConfig()
         self.batch_size = batch_size
+        self.exec_mode = exec_mode or self.rc.exec_mode
+        if self.exec_mode not in EXEC_MODES:
+            raise ValueError(f"unknown exec_mode {self.exec_mode!r}; "
+                             f"one of {EXEC_MODES}")
+        if self.exec_mode == "vmap":
+            _check_vmap_preconditions(fed, self.clients, batch_size,
+                                      loss_sum_fn, what="RoundEngine")
+        self._mean_loss = masked_mean_loss(loss_fn, loss_sum_fn)
+        # staleness buffer active <=> both knobs on; decides whether the
+        # vmap path can fuse the combine+server update into the same graph
+        self._stale_enabled = (self.rc.straggler_prob > 0.0
+                               and self.rc.max_staleness > 0)
+        self._deltas_fn = None      # built lazily (vmap mode only)
+        self._fused_fn = None
         self._grad_fn = jax.jit(jax.value_and_grad(loss_fn))
         self.scheduler = RoundScheduler(
             len(self.clients), self.rc.clients_per_round,
@@ -192,16 +257,28 @@ class RoundEngine:
             return 0
         return int(rng.integers(1, rc.max_staleness + 1))
 
-    # -- one round --------------------------------------------------------
-    def round(self, seed: Optional[int] = None) -> Dict[str, float]:
-        """Sample cohort -> E local epochs each -> staleness buffer ->
-        server-optimizer update on whatever arrived this round."""
-        r = self._round
-        round_key = jax.random.PRNGKey(seed if seed is not None else r)
-        cohort = self.scheduler.select(r)
+    # -- arrival delivery (shared by both exec modes) ---------------------
+    def _deliver_and_apply(self, r: int, fresh) -> tuple:
+        """Merge this round's fresh arrivals with due stragglers, run the
+        Eq. (2) combine (staleness-discounted) + server-optimizer update.
+        Returns ``(rel_change, num_arrived)``."""
+        due = [p for p in self.pending if p.due_round <= r]
+        self.pending = [p for p in self.pending if p.due_round > r]
+        arrivals = list(fresh) + [(r - p.issued_round, p.delta, p.weight)
+                                  for p in due]
+        rel = 0.0
+        if arrivals:
+            delta_bar = combine_arrivals(arrivals, self.rc.staleness_decay)
+            old = self.params
+            self.params, self.server_state = self.server_opt.apply(
+                self.params, delta_bar, self.server_state, r)
+            rel = float(_rel_change(old, self.params))
+        return rel, len(arrivals)
 
+    # -- one round, loop mode ---------------------------------------------
+    def _round_loop(self, r: int, round_key, cohort) -> Dict[str, float]:
         losses, loss_w = [], []
-        arrivals = []                      # (age, delta, weight)
+        fresh = []                         # (age=0, delta, weight)
         for l in cohort:
             l = int(l)
             rng = jax.random.fold_in(round_key, l)
@@ -214,38 +291,113 @@ class RoundEngine:
             loss_w.append(n)
             d = self._straggler_delay(r, l)
             if d == 0:
-                arrivals.append((0, delta, n))
+                fresh.append((0, delta, n))
             else:
                 self.pending.append(PendingUpdate(l, r, r + d, delta, n))
 
-        due = [p for p in self.pending if p.due_round <= r]
-        self.pending = [p for p in self.pending if p.due_round > r]
-        for p in due:
-            arrivals.append((r - p.issued_round, p.delta, p.weight))
+        rel, arrived = self._deliver_and_apply(r, fresh)
+        return {"round": r,
+                "loss": float(np.average(losses, weights=loss_w))
+                if losses else float("nan"),
+                "rel_change": rel,
+                "participants": len(cohort),
+                "arrived": arrived,
+                "in_flight": len(self.pending)}
 
-        rel = 0.0
-        if arrivals:
-            # the staleness discount scales the DELTA, not the Eq. (2)
-            # weight — a weight-only discount would cancel in the
-            # weighted-mean normalization whenever a round's arrivals all
-            # share one age (e.g. any single-arrival round)
-            scaled = [d if age == 0 else jax.tree_util.tree_map(
-                lambda x: x * self.rc.staleness_decay ** age, d)
-                for age, d, _ in arrivals]
-            delta_bar = agg.aggregate_host(
-                scaled, [w for _, _, w in arrivals])    # Eq. (2) on deltas
-            old = self.params
-            self.params, self.server_state = self.server_opt.apply(
-                self.params, delta_bar, self.server_state, r)
-            rel = float(_rel_change(old, self.params))
+    # -- one round, vmap mode ---------------------------------------------
+    def _build_vmap_fns(self):
+        """Trace-once builders for the stacked execution graphs."""
+        lr = self.fed.learning_rate
+        grad_fn = jax.value_and_grad(self._mean_loss)
+        tmap = jax.tree_util.tree_map
 
-        rec = {"round": r,
-               "loss": float(np.average(losses, weights=loss_w))
-               if losses else float("nan"),
-               "rel_change": rel,
-               "participants": len(cohort),
-               "arrived": len(arrivals),
-               "in_flight": len(self.pending)}
+        def client_update(params, batches):
+            # batches: pytree of (E, ...) leaves — one client's epoch stack
+            def epoch(local, b):
+                loss, grads = grad_fn(local, b)
+                local = tmap(lambda p, g: p - lr * g.astype(p.dtype),
+                             local, grads)
+                return local, loss
+            local, losses = jax.lax.scan(epoch, params, batches)
+            return tmap(lambda a, b: b - a, params, local), losses
+
+        def stacked_deltas(params, stacked):
+            """All K clients' E-epoch local updates in one graph."""
+            return jax.vmap(client_update, in_axes=(None, 0))(params, stacked)
+
+        server_opt = self.server_opt
+
+        def fused_round(params, server_state, stacked, weights, round_idx):
+            """deltas -> Eq. (2) combine -> server update, zero host hops."""
+            deltas, losses = stacked_deltas(params, stacked)
+            delta_bar = agg.aggregate_stacked(deltas, weights)
+            new_params, new_state = server_opt.apply(
+                params, delta_bar, server_state, round_idx)
+            rel = _rel_change(params, new_params)
+            return new_params, new_state, losses, rel
+
+        # donation reuses the param/server-state buffers in place on
+        # accelerators; CPU ignores donation, skip the warning
+        dn = () if jax.default_backend() == "cpu" else (0, 1)
+        self._deltas_fn = jax.jit(stacked_deltas)
+        self._fused_fn = jax.jit(fused_round, donate_argnums=dn)
+
+    def _round_vmap(self, r: int, round_key, cohort) -> Dict[str, float]:
+        cohort = [int(l) for l in cohort]
+        stacked, counts = stacked_round_batches(
+            [self.clients[l].data for l in cohort],
+            [self.clients[l].num_docs for l in cohort], round_key, cohort,
+            batch_size=self.batch_size, local_epochs=self.rc.local_epochs)
+        weights = counts.sum(axis=1)            # (K,) Eq. (2) weights
+        if self._fused_fn is None:
+            self._build_vmap_fns()
+
+        if not self._stale_enabled:
+            # fast path: one jitted call per round, donated buffers
+            self.params, self.server_state, losses, rel = self._fused_fn(
+                self.params, self.server_state, stacked, weights, r)
+            arrived, in_flight = len(cohort), 0
+            rel = float(rel)
+        else:
+            # stragglers' deltas must survive into later rounds: compute
+            # all K deltas in one graph, then route them through the same
+            # pending buffer / combine path as loop mode
+            deltas, losses = self._deltas_fn(self.params, stacked)
+            fresh = []
+            for i, l in enumerate(cohort):
+                delta_i = jax.tree_util.tree_map(
+                    lambda x, i=i: x[i], deltas)
+                d = self._straggler_delay(r, l)
+                if d == 0:
+                    fresh.append((0, delta_i, float(weights[i])))
+                else:
+                    self.pending.append(PendingUpdate(
+                        l, r, r + d, delta_i, float(weights[i])))
+            rel, arrived = self._deliver_and_apply(r, fresh)
+            in_flight = len(self.pending)
+
+        losses = np.asarray(losses)             # (K, E) per-epoch means
+        client_loss = (losses * counts).sum(axis=1) \
+            / np.maximum(counts.sum(axis=1), 1.0)
+        return {"round": r,
+                "loss": float(np.average(client_loss, weights=weights))
+                if len(cohort) else float("nan"),
+                "rel_change": rel,
+                "participants": len(cohort),
+                "arrived": arrived,
+                "in_flight": in_flight}
+
+    # -- one round --------------------------------------------------------
+    def round(self, seed: Optional[int] = None) -> Dict[str, float]:
+        """Sample cohort -> E local epochs each -> staleness buffer ->
+        server-optimizer update on whatever arrived this round."""
+        r = self._round
+        round_key = jax.random.PRNGKey(seed if seed is not None else r)
+        cohort = self.scheduler.select(r)
+        if self.exec_mode == "vmap":
+            rec = self._round_vmap(r, round_key, cohort)
+        else:
+            rec = self._round_loop(r, round_key, cohort)
         self.history.append(rec)
         self._round += 1
         return rec

@@ -63,6 +63,26 @@ def split_corpus_across_clients(
 # ---------------------------------------------------------------------------
 # per-round client minibatch iterators
 # ---------------------------------------------------------------------------
+def _draw_indices(rng, num_docs: int,
+                  batch_size: int) -> Tuple[np.ndarray, Any, int]:
+    """The single source of truth for one client draw: the index set, the
+    in-batch model rng, and the draw size.  Shared by the per-client
+    iterators and the stacked (vmap-path) builder so both execution modes
+    see byte-identical document selections and noise keys."""
+    n = min(batch_size, num_docs)
+    idx = np.asarray(jax.random.choice(rng, num_docs, (n,), replace=False))
+    return idx, jax.random.fold_in(rng, 1), n
+
+
+def _epoch_key(round_rng, s: int):
+    """Epoch-s draw key.  Epoch 0 reuses ``round_rng`` itself (the
+    minibatch Sync-Opt would draw); s>0 folds in s+1 — NOT s, because
+    fold_in(round_rng, 1) is already spent as epoch 0's in-batch model
+    rng and reusing it as a draw key would correlate epoch-1 document
+    selection with epoch-0 dropout/reparametrization noise."""
+    return round_rng if s == 0 else jax.random.fold_in(round_rng, s + 1)
+
+
 def sample_minibatch(data: Dict[str, np.ndarray], num_docs: int, rng,
                      batch_size: int) -> Tuple[Dict[str, Any], int]:
     """One Alg.-1 client draw: ``batch_size`` docs without replacement.
@@ -71,10 +91,9 @@ def sample_minibatch(data: Dict[str, np.ndarray], num_docs: int, rng,
     draw key — the key schedule FederatedTrainer has always used, kept
     byte-identical here so the round engine reproduces its trajectory.
     """
-    n = min(batch_size, num_docs)
-    idx = np.asarray(jax.random.choice(rng, num_docs, (n,), replace=False))
+    idx, model_rng, n = _draw_indices(rng, num_docs, batch_size)
     batch = {k: jnp.asarray(v[idx]) for k, v in data.items()}
-    batch["rng"] = jax.random.fold_in(rng, 1)
+    batch["rng"] = model_rng
     return batch, n
 
 
@@ -84,14 +103,116 @@ def round_minibatches(data: Dict[str, np.ndarray], num_docs: int, round_rng,
                                                                int]]:
     """Yield the E local-epoch minibatches of one client in one round.
 
-    Epoch 0 draws with ``round_rng`` itself (the minibatch Sync-Opt would
-    draw, so ``local_epochs=1`` reduces the round engine to the
-    synchronous protocol exactly); epoch s>0 folds in s+1 — NOT s,
-    because fold_in(round_rng, 1) is already spent as epoch 0's
-    in-batch model rng (``sample_minibatch``) and reusing it as a draw
-    key would correlate epoch-1 document selection with epoch-0
-    dropout/reparametrization noise.
+    The epoch-s key schedule lives in :func:`_epoch_key`; ``local_epochs=1``
+    reduces the round engine to the synchronous protocol exactly.
     """
     for s in range(local_epochs):
-        key_s = round_rng if s == 0 else jax.random.fold_in(round_rng, s + 1)
-        yield sample_minibatch(data, num_docs, key_s, batch_size)
+        yield sample_minibatch(data, num_docs, _epoch_key(round_rng, s),
+                               batch_size)
+
+
+# ---------------------------------------------------------------------------
+# stacked cohort batches (the vmap execution path, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+_DRAW_FN_CACHE: Dict[Tuple[int, int, int], Any] = {}
+
+
+def _stacked_draw_fn(num_docs: int, n: int, local_epochs: int):
+    """One jitted call drawing ALL (client, epoch) index sets of a
+    same-shape client group: ``(round_key, client_ids (G,)) ->
+    (idx (G, E, n), model_rngs (G, E, 2))``.
+
+    The key schedule inside the trace is the SAME composition of
+    ``fold_in``s the loop path runs eagerly (:func:`_epoch_key`,
+    :func:`_draw_indices`), and threefry is a pure function of
+    (key, data) — so the vmapped draws are bit-identical to K*E separate
+    ``sample_minibatch`` calls while paying one dispatch instead of
+    O(K*E) (the dominant host cost of small-model federated rounds).
+    """
+    key = (num_docs, n, local_epochs)
+    if key in _DRAW_FN_CACHE:
+        return _DRAW_FN_CACHE[key]
+
+    def draw(round_key, client_ids):
+        def per_client(cid):
+            crng = jax.random.fold_in(round_key, cid)
+            keys = jnp.stack([_epoch_key(crng, s)
+                              for s in range(local_epochs)])
+
+            def per_epoch(k):
+                idx = jax.random.choice(k, num_docs, (n,), replace=False)
+                return idx, jax.random.fold_in(k, 1)
+
+            return jax.vmap(per_epoch)(keys)
+        return jax.vmap(per_client)(client_ids)
+
+    fn = jax.jit(draw)
+    _DRAW_FN_CACHE[key] = fn
+    return fn
+
+
+def stacked_round_batches(
+    datas: Sequence[Dict[str, np.ndarray]],
+    num_docs: Sequence[int],
+    round_key,
+    client_ids: Sequence[int],
+    *,
+    batch_size: int,
+    local_epochs: int = 1,
+) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+    """Assemble one round's cohort minibatches into a leading client axis.
+
+    For each cohort member ``i`` (global client id ``client_ids[i]``,
+    round key ``fold_in(round_key, id)``) and each local epoch ``s``,
+    draws exactly the minibatch :func:`round_minibatches` would (same
+    keys via :func:`_epoch_key` / :func:`_draw_indices`, batched into one
+    jitted dispatch per same-shape client group), then stacks everything
+    into fixed-shape arrays so all K clients' local updates can run in
+    ONE jitted/vmapped graph:
+
+      * every data key ``k`` -> ``(K, E, P, ...)`` with ``P = batch_size``,
+        rows beyond a client's draw size zero-padded;
+      * ``"doc_mask"``       -> ``(K, E, P)`` float32, 1 for real rows —
+        mask-aware losses (e.g. ``prodlda.elbo_loss_sum``) use it to keep
+        padded rows out of the objective AND its gradient;
+      * ``"rng"``            -> ``(K, E, 2)`` uint32 — the same in-batch
+        model keys the loop path puts in ``batch["rng"]``.
+
+    Returns ``(stacked, counts)`` where ``counts`` is ``(K, E)`` float32
+    draw sizes (the Eq. (2) weights are ``counts.sum(axis=1)``).
+
+    The gathering itself is host-side numpy; the single resulting
+    transfer replaces the per-client-per-epoch device round-trips of the
+    loop path.
+    """
+    k_clients = len(datas)
+    e = local_epochs
+    p = batch_size
+    stacked: Dict[str, np.ndarray] = {
+        key: np.zeros((k_clients, e, p) + v.shape[1:],
+                      np.asarray(v).dtype)
+        for key, v in datas[0].items()
+    }
+    stacked["doc_mask"] = np.zeros((k_clients, e, p), np.float32)
+    stacked["rng"] = np.zeros((k_clients, e, 2), np.uint32)
+    counts = np.zeros((k_clients, e), np.float32)
+
+    # group cohort members by draw shape so each group is one jitted call
+    groups: Dict[Tuple[int, int], List[int]] = {}
+    for i, nd in enumerate(num_docs):
+        groups.setdefault((int(nd), min(batch_size, int(nd))), []).append(i)
+
+    for (nd, n), members in groups.items():
+        fn = _stacked_draw_fn(nd, n, e)
+        ids = jnp.asarray([int(client_ids[i]) for i in members], jnp.uint32)
+        idx_g, rng_g = fn(round_key, ids)
+        idx_g = np.asarray(idx_g)                    # (G, E, n)
+        rng_g = np.asarray(rng_g, np.uint32)         # (G, E, 2)
+        for g, i in enumerate(members):
+            for key, v in datas[i].items():
+                # one (E, n)-index gather per (client, key)
+                stacked[key][i, :, :n] = np.asarray(v)[idx_g[g]]
+            stacked["doc_mask"][i, :, :n] = 1.0
+            stacked["rng"][i] = rng_g[g]
+            counts[i, :] = n
+    return stacked, counts

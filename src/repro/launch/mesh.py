@@ -12,7 +12,7 @@ import jax
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16=256 chips ("data","model").
     Multi-pod: 2x16x16=512 chips ("pod","data","model") — the "pod" axis
-    is the inter-pod (DCN-ish) federation tier (DESIGN.md §4)."""
+    is the inter-pod (DCN-ish) federation tier (DESIGN.md §5)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)

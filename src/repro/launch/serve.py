@@ -31,7 +31,7 @@ def serve(args) -> dict:
         cfg = cfg.reduced()
     if cfg.encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only: no decode path "
-                         f"(DESIGN.md §6)")
+                         f"(DESIGN.md §7)")
     dtype = jnp.float32 if args.reduced else None
     params = tfm.init_params(jax.random.PRNGKey(args.seed), cfg)
     rng = np.random.default_rng(args.seed)

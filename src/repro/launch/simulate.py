@@ -18,6 +18,11 @@ Usage:
         --num-clients 5 --clients-per-round 2 \\
         --server-opt fedadam --server-lr 0.05 --rounds 200
 
+    # batched execution: all K local updates in one jitted graph
+    # (same trajectory as --exec-mode loop, K-independent dispatch cost)
+    PYTHONPATH=src python -m repro.launch.simulate \\
+        --num-clients 64 --clients-per-round 16 --exec-mode vmap
+
     # straggler federation: 30% of selected clients deliver 1-3 rounds
     # late, stale updates discounted by 0.5 per round of age
     PYTHONPATH=src python -m repro.launch.simulate \\
@@ -93,10 +98,15 @@ def run_simulation(args) -> dict:
     # restores the reference training objective (wants Adam-ish settings)
     loss_fn = lambda p, b: prodlda.elbo_loss(  # noqa: E731
         p, cfg, b, train=args.stochastic_loss)
+    # the (sum, count) form is mask-aware — it lets the vmap path keep
+    # zero-padded rows out of the objective for ragged federations
+    loss_sum_fn = lambda p, b: prodlda.elbo_loss_sum(  # noqa: E731
+        p, cfg, b, train=args.stochastic_loss)
     init = prodlda.init_params(jax.random.PRNGKey(args.seed), cfg)
     fed = FederatedConfig(num_clients=args.num_clients, learning_rate=args.lr,
                           max_rounds=args.rounds, rel_tol=args.rel_tol)
-    rc = RoundConfig(clients_per_round=args.clients_per_round,
+    rc = RoundConfig(exec_mode=args.exec_mode,
+                     clients_per_round=args.clients_per_round,
                      sampling=args.sampling, sampling_seed=args.seed,
                      local_epochs=args.local_epochs,
                      server_optimizer=args.server_opt,
@@ -108,10 +118,10 @@ def run_simulation(args) -> dict:
     clients = [ClientState(data={"bow": b}, num_docs=len(b))
                for b in syn.node_bows]
     eng = RoundEngine(loss_fn, init, clients, fed, rc,
-                      batch_size=args.batch)
+                      batch_size=args.batch, loss_sum_fn=loss_sum_fn)
 
     sched: RoundScheduler = eng.scheduler
-    print(f"simulating {fed.max_rounds} rounds: "
+    print(f"simulating {fed.max_rounds} rounds [{eng.exec_mode}]: "
           f"K={sched.clients_per_round}/{len(clients)} ({rc.sampling}), "
           f"E={rc.local_epochs}, server={rc.server_optimizer}"
           f"(lr={rc.server_lr}), "
@@ -126,6 +136,7 @@ def run_simulation(args) -> dict:
     result = {
         "config": {"vocab": args.vocab, "topics": args.topics,
                    "num_clients": args.num_clients,
+                   "exec_mode": eng.exec_mode,
                    "clients_per_round": sched.clients_per_round,
                    "sampling": rc.sampling,
                    "local_epochs": rc.local_epochs,
@@ -167,6 +178,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--lr", type=float, default=2e-3)
     ap.add_argument("--rel-tol", type=float, default=0.0)
+    ap.add_argument("--exec-mode", default="loop", choices=("loop", "vmap"),
+                    help="loop = host-side per-client stepping (Alg. 1 "
+                         "literal); vmap = all K local updates + combine "
+                         "+ server step in one jitted graph")
     ap.add_argument("--clients-per-round", type=int, default=0,
                     help="K; 0 = all clients (paper Alg. 1)")
     ap.add_argument("--sampling", default="uniform",

@@ -4,7 +4,7 @@
 stand in for the stubbed audio/vision frontends; decode shapes describe
 ONE new token + a ``seq_len`` cache.  ``resolve_arch_for_shape`` applies
 the sliding-window variant that gates ``long_500k`` for quadratic
-architectures (DESIGN.md §6).
+architectures (DESIGN.md §7).
 """
 from __future__ import annotations
 

@@ -5,7 +5,7 @@ Supports four execution modes driven by the caller:
     bidirectional (encoder-only) masks;
   * single-token decode against a KV cache — either a full-length cache
     (``decode_32k``) or a ring-buffer sliding-window cache (``long_500k``
-    for dense archs, DESIGN.md §6).
+    for dense archs, DESIGN.md §7).
 
 All attention math accumulates in fp32 and casts back to the activation
 dtype.  Shapes: x (B, S, D); q (B, S, Hq, hd); k/v (B, S, Hkv, hd).

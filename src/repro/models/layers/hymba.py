@@ -8,7 +8,7 @@ mean-fused before the output projection back to the residual stream:
     y = 1/2 (beta_a * RMSNorm(attn(x)) + beta_m * RMSNorm(ssm(x)))
 
 The attention branch uses sliding-window GQA (Hymba keeps only a few global
-layers; we model the sub-quadratic SWA path — DESIGN.md §6), the SSM branch
+layers; we model the sub-quadratic SWA path — DESIGN.md §7), the SSM branch
 is a Mamba-2 SSD head group.  Both branches carry their own decode state
 (ring-buffer KV + recurrent SSM state), which is what a hybrid cache looks
 like in production serving.

@@ -3,7 +3,7 @@
 ``build_model(cfg)`` gives the launcher / protocol layer one stable surface
 regardless of family — the NTMs (the paper's own models) implement the same
 interface, which is what lets the gFedNTM protocol wrap every architecture
-(DESIGN.md §6).
+(DESIGN.md §7).
 """
 from __future__ import annotations
 

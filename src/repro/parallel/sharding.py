@@ -1,6 +1,6 @@
 """Sharding rules: ModelConfig + mesh -> PartitionSpecs for every pytree.
 
-Scheme (DESIGN.md §4): FSDP x TP.
+Scheme (DESIGN.md §5): FSDP x TP.
   * batch dims -> the client/data axes ("pod","data") — each slice along
     them is one federated client;
   * parameters -> fully sharded: the TP-natural dim over "model", the
@@ -298,7 +298,7 @@ def _fits(dim: int, entry, sizes) -> bool:
 
 def constrain_batch(x):
     """Pin dim 0 (batch) to the client/data axes — keeps GSPMD from
-    replicating activations when params are FSDP-sharded (DESIGN.md §4)."""
+    replicating activations when params are FSDP-sharded (DESIGN.md §5)."""
     dp, _, sizes = _ambient()
     if dp is None or not _fits(x.shape[0], dp, sizes):
         return x

@@ -106,6 +106,57 @@ def test_topic_decoder_matches_ref(b, k, v, rng):
                                np.asarray(r) / scale, atol=1e-5)
 
 
+# uneven tails: (B, V) deliberately NOT multiples of (block_b, block_v),
+# so the last doc/vocab blocks are partially padded — the padded logits
+# must stay out of the online log-sum-exp AND the bow-weighted sums
+TOPIC_TAIL_CASES = [
+    # (b, k, v, block_b, block_v)
+    (130, 8, 1100, 128, 512),    # tails on both grid axes
+    (5, 4, 513, 4, 512),         # 1-column vocab tail, 1-row doc tail
+    (33, 3, 96, 16, 32),         # multi-block with tails on both axes
+    (2, 2, 17, 2, 16),           # tiny blocks, 1-wide vocab tail
+]
+
+
+@pytest.mark.parametrize("b,k,v,bb,bv", TOPIC_TAIL_CASES)
+def test_topic_decoder_uneven_block_tails(b, k, v, bb, bv, rng):
+    theta = jax.nn.softmax(
+        jnp.asarray(rng.standard_normal((b, k)), jnp.float32))
+    beta = jnp.asarray(rng.standard_normal((k, v)), jnp.float32)
+    bow = jnp.asarray(rng.poisson(0.2, (b, v)).astype(np.float32))
+    sc = jnp.asarray(rng.uniform(0.5, 1.5, (v,)), jnp.float32)
+    out = ops.topic_decoder_loss(theta, beta, bow, sc,
+                                 block_b=bb, block_v=bv, interpret=True)
+    r = ref.topic_decoder_ref(theta, beta, bow, sc)
+    scale = float(jnp.maximum(jnp.max(jnp.abs(r)), 1.0))
+    np.testing.assert_allclose(np.asarray(out) / scale,
+                               np.asarray(r) / scale, atol=1e-5)
+
+
+def test_topic_decoder_zero_bow_rows(rng):
+    """bow=0 documents (all-padding rows in the stacked federated batches)
+    must yield exactly 0 reconstruction loss: S = NB = 0, so the kernel's
+    -(S - NB*lse) collapses to 0 regardless of the log-sum-exp value."""
+    b, k, v = 12, 6, 300
+    theta = jax.nn.softmax(
+        jnp.asarray(rng.standard_normal((b, k)), jnp.float32))
+    beta = jnp.asarray(rng.standard_normal((k, v)), jnp.float32)
+    bow = rng.poisson(0.3, (b, v)).astype(np.float32)
+    zero_rows = np.asarray([0, 5, 11])
+    bow[zero_rows] = 0.0
+    bow = jnp.asarray(bow)
+    out = ops.topic_decoder_loss(theta, beta, bow, interpret=True,
+                                 block_b=8, block_v=128)
+    r = ref.topic_decoder_ref(theta, beta, bow)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out)[zero_rows], 0.0, atol=1e-6)
+    # the all-zero batch degenerates the same way
+    out0 = ops.topic_decoder_loss(theta, beta, jnp.zeros_like(bow),
+                                  interpret=True, block_b=8, block_v=128)
+    np.testing.assert_allclose(np.asarray(out0), 0.0, atol=1e-6)
+
+
 def test_topic_decoder_matches_prodlda_loss(rng):
     """The fused kernel computes exactly ProdLDA's reconstruction term."""
     from repro.configs import get_config

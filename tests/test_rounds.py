@@ -17,7 +17,7 @@ from repro.configs.base import FederatedConfig, RoundConfig
 from repro.core.aggregation import SERVER_OPTIMIZERS, get_server_optimizer
 from repro.core.ntm import prodlda
 from repro.core.protocol import ClientState, FederatedTrainer
-from repro.core.rounds import RoundEngine, RoundScheduler
+from repro.core.rounds import RoundEngine, RoundScheduler, combine_arrivals
 from repro.data.synthetic_lda import generate_lda_corpus
 
 
@@ -121,6 +121,43 @@ def test_staleness_decay_actually_discounts(setup):
                for a, b in zip(jax.tree_util.tree_leaves(trusted.params),
                                jax.tree_util.tree_leaves(discounted.params)))
     assert diff > 0
+
+
+def test_combine_arrivals_same_age_discount_survives_normalization():
+    """REGRESSION (documented invariant in core/rounds.py): the
+    staleness_decay**age discount scales the DELTA, not the Eq. (2)
+    weight.  A weight-only discount divides out in the weighted-mean
+    normalization whenever all of a round's arrivals share one age —
+    most visibly any single-arrival round — silently trusting stale
+    updates fully.  combine_arrivals must keep the discount."""
+    delta = {"w": jnp.ones((3, 2), jnp.float32),
+             "b": jnp.full((4,), 2.0, jnp.float32)}
+    # single stale arrival, age 2, decay 0.5 -> the combined delta must be
+    # 0.25 * delta; a weight-side discount would return delta unchanged
+    out = combine_arrivals([(2, delta, 10.0)], 0.5)
+    for leaf, ref in zip(jax.tree_util.tree_leaves(out),
+                         jax.tree_util.tree_leaves(delta)):
+        np.testing.assert_allclose(np.asarray(leaf),
+                                   0.25 * np.asarray(ref), rtol=1e-6)
+    # two arrivals, BOTH age 1: discount must still appear even though
+    # the ages (hence any weight-side factor) are identical
+    out = combine_arrivals([(1, delta, 1.0), (1, delta, 3.0)], 0.5)
+    for leaf, ref in zip(jax.tree_util.tree_leaves(out),
+                         jax.tree_util.tree_leaves(delta)):
+        np.testing.assert_allclose(np.asarray(leaf),
+                                   0.5 * np.asarray(ref), rtol=1e-6)
+    # age 0 is the identity: fresh arrivals are never rescaled
+    out = combine_arrivals([(0, delta, 5.0)], 0.5)
+    for leaf, ref in zip(jax.tree_util.tree_leaves(out),
+                         jax.tree_util.tree_leaves(delta)):
+        np.testing.assert_allclose(np.asarray(leaf), np.asarray(ref),
+                                   rtol=1e-6)
+    # decay=1.0 trusts stale updates fully regardless of age
+    out = combine_arrivals([(3, delta, 5.0)], 1.0)
+    for leaf, ref in zip(jax.tree_util.tree_leaves(out),
+                         jax.tree_util.tree_leaves(delta)):
+        np.testing.assert_allclose(np.asarray(leaf), np.asarray(ref),
+                                   rtol=1e-6)
 
 
 def test_engine_refuses_unimplemented_privacy_features(setup):

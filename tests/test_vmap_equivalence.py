@@ -1,0 +1,247 @@
+"""vmap-vs-loop execution equivalence (the PR's headline property).
+
+The vectorized path (``exec_mode="vmap"``: stacked cohort minibatches,
+all K local-update loops + Eq. (2) combine + server optimizer in one
+jitted graph, DESIGN.md §4) must retrace the host-side loop path — and
+hence, via the existing anchor in tests/test_rounds.py, the paper's
+Algorithm-1 trainer — on EVERY configuration, not just the degenerate
+one.  Two layers:
+
+  * a deterministic regime grid that always runs (partial participation,
+    multi-epoch clients, ragged corpora with padding+masking, staleness
+    buffer, adaptive server optimizers, weighted sampling);
+  * a hypothesis fuzz over random (L, K, E, vocab, topics, staleness,
+    corpus-size) tuples (skipped when the optional [test] extra is not
+    installed, like the other property suites).
+
+Tolerance: per-round max |param| deviation < 1e-5 (acceptance bar) —
+the two paths draw bit-identical minibatches and noise keys, so the only
+daylight is float32 reduction-order inside vmapped/batched kernels.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import NTM, FederatedConfig, ModelConfig, RoundConfig
+from repro.core.ntm import prodlda
+from repro.core.protocol import ClientState, FederatedTrainer, FedAvgTrainer
+from repro.core.rounds import RoundEngine
+from repro.data.federated_split import stacked_round_batches
+
+TOL = 1e-5
+
+
+def _max_dev(a, b) -> float:
+    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _make_setup(vocab=64, topics=4, docs=(48, 48, 48), seed=0):
+    """Tiny synthetic federation: per-client poisson BoW corpora."""
+    cfg = ModelConfig(name="vmap-eq", kind=NTM, vocab_size=vocab,
+                      num_topics=topics, ntm_hidden=(16, 16))
+    rng = np.random.default_rng(seed)
+    clients = [ClientState(
+        data={"bow": rng.poisson(0.3, (n, vocab)).astype(np.float32)},
+        num_docs=n) for n in docs]
+    loss = lambda p, b: prodlda.elbo_loss(p, cfg, b, train=False)  # noqa: E731,E501
+    loss_sum = lambda p, b: prodlda.elbo_loss_sum(p, cfg, b, train=False)  # noqa: E731,E501
+    init = prodlda.init_params(jax.random.PRNGKey(seed), cfg)
+    return cfg, loss, loss_sum, init, clients
+
+
+def _assert_trajectories_match(loss, loss_sum, init, clients, fed, rc, *,
+                               batch_size, rounds=4, seed=0, tol=TOL):
+    """Step both exec modes round-by-round; params must stay glued."""
+    loop = RoundEngine(loss, init, clients, fed, rc,
+                       batch_size=batch_size, exec_mode="loop")
+    vm = RoundEngine(loss, init, clients, fed, rc,
+                     batch_size=batch_size, exec_mode="vmap",
+                     loss_sum_fn=loss_sum)
+    for r in range(rounds):
+        ra = loop.round(seed=seed * 100003 + r)
+        rb = vm.round(seed=seed * 100003 + r)
+        dev = _max_dev(loop.params, vm.params)
+        assert dev < tol, f"round {r}: max param dev {dev:.2e} >= {tol}"
+        # bookkeeping must agree too, not just the weights
+        assert ra["participants"] == rb["participants"]
+        assert ra["arrived"] == rb["arrived"]
+        assert ra["in_flight"] == rb["in_flight"]
+        if np.isfinite(ra["loss"]):
+            np.testing.assert_allclose(ra["loss"], rb["loss"], rtol=1e-4)
+    return loop, vm
+
+
+# ---------------------------------------------------------------------------
+# deterministic regime grid (always runs)
+# ---------------------------------------------------------------------------
+REGIMES = {
+    "paper-degenerate": dict(),
+    "partial-participation": dict(clients_per_round=2),
+    "multi-epoch": dict(local_epochs=3),
+    "k-of-l-multi-epoch": dict(clients_per_round=2, local_epochs=2),
+    "weighted-sampling": dict(clients_per_round=2, sampling="weighted"),
+    "deterministic-sampling": dict(clients_per_round=2,
+                                   sampling="deterministic"),
+    "fedavgm": dict(server_optimizer="fedavgm", server_momentum=0.5,
+                    server_lr=0.5),
+    "fedadam": dict(server_optimizer="fedadam", server_lr=0.05),
+    "staleness": dict(straggler_prob=0.6, max_staleness=3,
+                      staleness_decay=0.5),
+    "staleness-partial": dict(clients_per_round=2, local_epochs=2,
+                              straggler_prob=0.5, max_staleness=2,
+                              staleness_decay=0.25),
+}
+
+
+@pytest.mark.parametrize("regime", sorted(REGIMES))
+def test_vmap_matches_loop_regime(regime):
+    cfg, loss, loss_sum, init, clients = _make_setup()
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=4,
+                          rel_tol=0.0)
+    _assert_trajectories_match(loss, loss_sum, init, clients, fed,
+                               RoundConfig(**REGIMES[regime]),
+                               batch_size=32)
+
+
+def test_vmap_matches_loop_ragged_padding():
+    """Clients smaller than the batch exercise the zero-pad + doc_mask
+    path; masked rows must stay out of the objective AND its gradient."""
+    cfg, loss, loss_sum, init, clients = _make_setup(docs=(48, 11, 23))
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=4,
+                          rel_tol=0.0)
+    _assert_trajectories_match(loss, loss_sum, init, clients, fed,
+                               RoundConfig(local_epochs=2), batch_size=32)
+
+
+def test_vmap_matches_loop_stochastic_loss():
+    """Train-mode ELBO (dropout + reparametrization noise): the stacked
+    path must consume the SAME noise keys the loop path puts in
+    batch["rng"].  Full batches on purpose — with padding, in-batch
+    noise is drawn over the padded row count and threefry's counter
+    layout is shape-dependent, so the exact-retrace guarantee for
+    stochastic losses is scoped to unpadded cohorts (DESIGN.md §4,
+    `masked_mean_loss` docstring)."""
+    vocab, topics = 64, 4
+    cfg = ModelConfig(name="vmap-eq-st", kind=NTM, vocab_size=vocab,
+                      num_topics=topics, ntm_hidden=(16, 16))
+    rng = np.random.default_rng(3)
+    clients = [ClientState(
+        data={"bow": rng.poisson(0.3, (40, vocab)).astype(np.float32)},
+        num_docs=40) for _ in range(3)]
+    loss = lambda p, b: prodlda.elbo_loss(p, cfg, b, train=True)  # noqa: E731,E501
+    loss_sum = lambda p, b: prodlda.elbo_loss_sum(p, cfg, b, train=True)  # noqa: E731,E501
+    init = prodlda.init_params(jax.random.PRNGKey(3), cfg)
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=3,
+                          rel_tol=0.0)
+    _assert_trajectories_match(loss, loss_sum, init, clients, fed,
+                               RoundConfig(), batch_size=40, rounds=3)
+
+
+def test_round_config_exec_mode_threads_through():
+    """RoundConfig.exec_mode selects the path; the kwarg overrides it."""
+    cfg, loss, loss_sum, init, clients = _make_setup()
+    fed = FederatedConfig(num_clients=3, max_rounds=2, rel_tol=0.0)
+    eng = RoundEngine(loss, init, clients, fed,
+                      RoundConfig(exec_mode="vmap"), batch_size=32,
+                      loss_sum_fn=loss_sum)
+    assert eng.exec_mode == "vmap"
+    eng = RoundEngine(loss, init, clients, fed,
+                      RoundConfig(exec_mode="vmap"), batch_size=32,
+                      exec_mode="loop")
+    assert eng.exec_mode == "loop"
+
+
+def test_federated_trainer_vmap_fast_path():
+    """FederatedTrainer(exec_mode="vmap") == the Alg.-1 loop trainer."""
+    cfg, loss, loss_sum, init, clients = _make_setup()
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=5,
+                          rel_tol=0.0)
+    tr = FederatedTrainer(loss, init, clients, fed, batch_size=32)
+    tv = FederatedTrainer(loss, init, clients, fed, batch_size=32,
+                          exec_mode="vmap", loss_sum_fn=loss_sum)
+    tr.fit(seed=0)
+    tv.fit(seed=0)
+    assert _max_dev(tr.params, tv.params) < TOL
+    np.testing.assert_allclose([h["loss"] for h in tr.history],
+                               [h["loss"] for h in tv.history], rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# constructor guards: the stacked path must refuse, never silently degrade
+# ---------------------------------------------------------------------------
+def test_vmap_ragged_without_mask_aware_loss_raises():
+    cfg, loss, loss_sum, init, clients = _make_setup(docs=(48, 11, 23))
+    fed = FederatedConfig(num_clients=3)
+    with pytest.raises(ValueError, match="loss_sum_fn"):
+        RoundEngine(loss, init, clients, fed, RoundConfig(),
+                    batch_size=32, exec_mode="vmap")
+    with pytest.raises(ValueError, match="loss_sum_fn"):
+        FederatedTrainer(loss, init, clients, fed, batch_size=32,
+                         exec_mode="vmap")
+    # full batches need no mask-aware loss
+    full = [c for c in clients if c.num_docs >= 32]
+    RoundEngine(loss, init, full, fed, RoundConfig(), batch_size=32,
+                exec_mode="vmap")
+
+
+def test_vmap_refuses_privacy_knobs():
+    cfg, loss, loss_sum, init, clients = _make_setup()
+    fed = FederatedConfig(num_clients=3, secure_aggregation=True)
+    with pytest.raises(NotImplementedError):
+        FederatedTrainer(loss, init, clients, fed, batch_size=32,
+                         exec_mode="vmap")
+
+
+def test_unknown_exec_mode_raises():
+    cfg, loss, loss_sum, init, clients = _make_setup()
+    fed = FederatedConfig(num_clients=3)
+    with pytest.raises(ValueError, match="exec_mode"):
+        RoundEngine(loss, init, clients, fed, RoundConfig(),
+                    exec_mode="nope")
+    with pytest.raises(ValueError, match="exec_mode"):
+        FederatedTrainer(loss, init, clients, fed, exec_mode="nope")
+    with pytest.raises(NotImplementedError):
+        FedAvgTrainer(loss, init, clients, fed, exec_mode="vmap")
+    with pytest.raises(NotImplementedError):
+        # positionally-passed exec_mode must hit the same guard
+        FedAvgTrainer(loss, init, clients, fed, None, 32, None, "vmap")
+
+
+# ---------------------------------------------------------------------------
+# stacked batch builder: draws must be bit-identical to the loop iterator
+# ---------------------------------------------------------------------------
+def test_stacked_batches_bitwise_match_loop_iterator():
+    from repro.data.federated_split import round_minibatches
+    vocab = 32
+    rng = np.random.default_rng(7)
+    datas = [{"bow": rng.poisson(0.5, (n, vocab)).astype(np.float32)}
+             for n in (40, 9, 17)]
+    num_docs = [40, 9, 17]
+    round_key = jax.random.PRNGKey(42)
+    stacked, counts = stacked_round_batches(
+        datas, num_docs, round_key, [0, 1, 2], batch_size=16,
+        local_epochs=2)
+    for i in range(3):
+        it = round_minibatches(datas[i], num_docs[i],
+                               jax.random.fold_in(round_key, i),
+                               batch_size=16, local_epochs=2)
+        for s, (batch, n) in enumerate(it):
+            assert counts[i, s] == n
+            np.testing.assert_array_equal(
+                stacked["bow"][i, s, :n], np.asarray(batch["bow"]))
+            np.testing.assert_array_equal(
+                stacked["bow"][i, s, n:], 0.0)       # zero padding
+            np.testing.assert_array_equal(
+                stacked["doc_mask"][i, s],
+                (np.arange(16) < n).astype(np.float32))
+            np.testing.assert_array_equal(
+                stacked["rng"][i, s], np.asarray(batch["rng"], np.uint32))
+
+
+# The hypothesis fuzz layer over random (L, K, E, vocab, topics,
+# staleness) tuples lives in tests/test_vmap_property.py — it whole-module
+# skips when the optional [test] extra is missing; the grid above always
+# runs.

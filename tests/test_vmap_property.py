@@ -1,0 +1,58 @@
+"""Property-based (hypothesis) vmap-vs-loop equivalence fuzz.
+
+Random (L, K, E, vocab, topics, staleness, corpus-size) federations:
+``RoundEngine(exec_mode="vmap")`` must retrace ``exec_mode="loop")``
+within the acceptance tolerance every round (see
+tests/test_vmap_equivalence.py for the always-on deterministic grid and
+DESIGN.md §4 for the padding/masking correctness argument).
+
+``hypothesis`` is an optional test extra (``pip install -e .[test]``);
+this module skips wholesale without it, like the other property suites.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (optional [test] extra)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.configs.base import FederatedConfig, RoundConfig  # noqa: E402
+# sibling test module (pytest's prepend import mode puts tests/ on the path)
+from test_vmap_equivalence import (_assert_trajectories_match,  # noqa: E402
+                                   _make_setup)
+
+
+@st.composite
+def federation_configs(draw):
+    num_clients = draw(st.integers(2, 4))
+    k = draw(st.integers(1, num_clients))
+    local_epochs = draw(st.integers(1, 3))
+    vocab = draw(st.sampled_from([32, 64]))
+    topics = draw(st.integers(2, 6))
+    # sizes below batch_size=32 exercise the zero-pad + doc_mask path
+    docs = tuple(draw(st.integers(8, 56)) for _ in range(num_clients))
+    cfg = dict(clients_per_round=k, local_epochs=local_epochs,
+               sampling=draw(st.sampled_from(["uniform", "deterministic"])))
+    if draw(st.booleans()):
+        cfg.update(straggler_prob=draw(st.sampled_from([0.4, 0.8])),
+                   max_staleness=draw(st.integers(1, 2)),
+                   staleness_decay=draw(st.sampled_from([0.25, 0.5, 1.0])))
+    server = draw(st.sampled_from(["fedavg", "fedavgm", "fedadam"]))
+    cfg["server_optimizer"] = server
+    if server == "fedadam":
+        cfg["server_lr"] = 0.05
+    return vocab, topics, docs, cfg, draw(st.integers(0, 2 ** 16))
+
+
+@settings(max_examples=8, deadline=None)
+@given(federation_configs())
+def test_vmap_matches_loop_property(fc):
+    """Random configs: per-round max param deviation < 1e-5."""
+    vocab, topics, docs, rc_kwargs, seed = fc
+    cfg, loss, loss_sum, init, clients = _make_setup(
+        vocab=vocab, topics=topics, docs=docs, seed=seed % 97)
+    fed = FederatedConfig(num_clients=len(docs), learning_rate=1e-2,
+                          max_rounds=3, rel_tol=0.0)
+    _assert_trajectories_match(loss, loss_sum, init, clients, fed,
+                               RoundConfig(**rc_kwargs), batch_size=32,
+                               rounds=3, seed=seed)
