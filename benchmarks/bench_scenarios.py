@@ -1,0 +1,208 @@
+"""Non-IID scenario-suite sweep over the unified FederationEngine.
+
+One synthetic federation, many regimes: for each named scenario
+(partitioner x participation x staleness x heterogeneity x transforms)
+the engine is stepped in its natural execution mode(s) and the sweep
+records steady-state seconds/round, the loop-vs-vmap speedup, the
+max loop/vmap parameter deviation (the correctness tripwire), and the
+final training loss.
+
+The HEADLINE measurement is the fused straggler path: with the in-graph
+ring buffer (DESIGN.md §4) the straggler regime runs inside the same
+jitted graph as the synchronous one, so its vmap round time must sit
+within 1.5x of the synchronous vmap round at K=16 (the host-side
+pending-list path it replaces paid a device->host transfer of every
+cohort delta plus a host-side combine, every round).  The ratio is
+written as ``straggler_over_sync_vmap`` in the JSON payload.
+
+    PYTHONPATH=src python -m benchmarks.bench_scenarios \\
+        --out experiments/bench_scenarios.json
+
+    # CI smoke: tiny federation, sync + straggler + one non-IID cell
+    PYTHONPATH=src python -m benchmarks.bench_scenarios --quick
+
+JSON layout: {"setup": {...}, "straggler_over_sync_vmap": float,
+"results": [{"scenario", "partition", "loop_s_per_round",
+"vmap_s_per_round", "speedup", "max_param_dev", "final_loss", ...}]}.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import NTM, FederatedConfig, ModelConfig, RoundConfig
+from repro.core.ntm import prodlda
+from repro.core.rounds import RoundEngine
+from repro.data.synthetic_lda import generate_lda_corpus
+from repro.launch.simulate import build_clients
+
+
+def scenario_grid(k: int, rounds_for_leave: int):
+    """The scenario suite: name -> (partition spec, RoundConfig kwargs).
+
+    Every scenario keeps K participants per round so the timing columns
+    are comparable; the first two cells are the sync-vs-straggler
+    headline pair.
+    """
+    join = (0,) * (k - 1) + (2,)             # one late joiner
+    leave = (0,) * (k - 1) + (max(rounds_for_leave - 1, 1),)
+    return {
+        "sync": ("topic", {}),
+        "straggler": ("topic", dict(straggler_prob=0.3, max_staleness=3,
+                                    staleness_decay=0.5)),
+        "straggler-heavy": ("topic", dict(straggler_prob=0.6,
+                                          max_staleness=3,
+                                          staleness_decay=0.25)),
+        "dirichlet-noniid": ("dirichlet(0.3)", {}),
+        "quantity-skew": ("quantity_skew(0.5)", {}),
+        "hetero-epochs": ("topic", dict(local_epochs_by_client=(1, 2, 4))),
+        "dropout-join": ("topic", dict(client_join_round=join,
+                                       client_leave_round=leave)),
+        "dp-transform": ("topic", dict(transforms=("dp",))),
+    }
+
+
+def _max_dev(a, b) -> float:
+    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _time_rounds(eng: RoundEngine, *, warmup: int, rounds: int,
+                 seed: int) -> float:
+    """Steady-state MEDIAN seconds/round (first ``warmup`` rounds excluded
+    — they pay tracing + compilation).  The median, not the mean: a
+    single GC pause or scheduler preemption inside a cell would otherwise
+    dominate the sync-vs-straggler headline ratio."""
+    for r in range(warmup):
+        eng.round(seed=seed * 100003 + r)
+    jax.block_until_ready(eng.params)
+    per_round = []
+    for r in range(warmup, warmup + rounds):
+        t0 = time.perf_counter()
+        eng.round(seed=seed * 100003 + r)
+        jax.block_until_ready(eng.params)
+        per_round.append(time.perf_counter() - t0)
+    return float(np.median(per_round))
+
+
+def run(out_path="experiments/bench_scenarios.json", *, vocab=1000,
+        topics=20, hidden=64, num_clients=16, docs_per_client=96, batch=64,
+        lr=2e-3, seed=0, warmup=2, rounds=4, scenarios=None):
+    cfg = ModelConfig(name="bench-scenarios", kind=NTM, vocab_size=vocab,
+                      num_topics=topics, ntm_hidden=(hidden, hidden))
+    syn = generate_lda_corpus(
+        vocab_size=vocab, num_topics=topics, num_nodes=num_clients,
+        shared_topics=max(topics // 5, 1), docs_per_node=docs_per_client,
+        val_docs_per_node=8, seed=seed)
+    loss_fn = lambda p, b: prodlda.elbo_loss(p, cfg, b, train=False)  # noqa: E731,E501
+    loss_sum_fn = lambda p, b: prodlda.elbo_loss_sum(p, cfg, b, train=False)  # noqa: E731,E501
+    init = prodlda.init_params(jax.random.PRNGKey(seed), cfg)
+    fed = FederatedConfig(num_clients=num_clients, learning_rate=lr,
+                          max_rounds=warmup + rounds, rel_tol=0.0)
+    grid = scenario_grid(num_clients, warmup + rounds)
+    if scenarios:
+        grid = {k: v for k, v in grid.items() if k in scenarios}
+
+    results = []
+    for name, (partition, rc_kw) in grid.items():
+        rc_kw = dict(rc_kw, sampling_seed=seed, partition=partition)
+        if "dp" in rc_kw.get("transforms", ()):
+            sfed = FederatedConfig(
+                num_clients=num_clients, learning_rate=lr,
+                max_rounds=warmup + rounds, rel_tol=0.0,
+                dp_noise_multiplier=0.3, dp_clip_norm=1.0)
+        else:
+            sfed = fed
+        rc = RoundConfig(**rc_kw)
+        clients = build_clients(syn, num_clients, partition, seed=seed)
+        loop_only = bool(rc.transforms)   # the vmap path refuses transforms
+
+        loop = RoundEngine(loss_fn, init, clients, sfed, rc,
+                           batch_size=batch, exec_mode="loop",
+                           loss_sum_fn=loss_sum_fn)
+        t_loop = _time_rounds(loop, warmup=warmup, rounds=rounds, seed=seed)
+        rec = {"scenario": name, "partition": partition,
+               "loop_s_per_round": t_loop,
+               "client_docs_min": min(c.num_docs for c in clients),
+               "client_docs_max": max(c.num_docs for c in clients),
+               "final_loss": loop.history[-1]["loss"]}
+        if not loop_only:
+            vm = RoundEngine(loss_fn, init, clients, sfed, rc,
+                             batch_size=batch, exec_mode="vmap",
+                             loss_sum_fn=loss_sum_fn)
+            t_vmap = _time_rounds(vm, warmup=warmup, rounds=rounds,
+                                  seed=seed)
+            rec.update(vmap_s_per_round=t_vmap,
+                       speedup=t_loop / max(t_vmap, 1e-12),
+                       max_param_dev=_max_dev(loop.params, vm.params))
+        results.append(rec)
+        msg = f"{name:18s} loop={t_loop * 1e3:8.1f}ms/round"
+        if not loop_only:
+            msg += (f" vmap={rec['vmap_s_per_round'] * 1e3:8.1f}ms/round "
+                    f"speedup={rec['speedup']:5.1f}x "
+                    f"dev={rec['max_param_dev']:.1e}")
+        print(msg)
+
+    by_name = {r["scenario"]: r for r in results}
+    ratio = None
+    if "sync" in by_name and "straggler" in by_name \
+            and "vmap_s_per_round" in by_name["straggler"]:
+        ratio = (by_name["straggler"]["vmap_s_per_round"]
+                 / max(by_name["sync"]["vmap_s_per_round"], 1e-12))
+        print(f"fused straggler ring buffer: {ratio:.2f}x the synchronous "
+              f"vmap round (acceptance <= 1.5x at K=16)")
+
+    payload = {"setup": {"vocab": vocab, "topics": topics, "hidden": hidden,
+                         "num_clients": num_clients,
+                         "docs_per_client": docs_per_client, "batch": batch,
+                         "lr": lr, "seed": seed, "warmup_rounds": warmup,
+                         "timed_rounds": rounds,
+                         "backend": jax.default_backend()},
+               "straggler_over_sync_vmap": ratio,
+               "results": results}
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {out_path} ({len(results)} scenarios)")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="experiments/bench_scenarios.json")
+    ap.add_argument("--vocab", type=int, default=1000)
+    ap.add_argument("--topics", type=int, default=20)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--num-clients", type=int, default=16)
+    ap.add_argument("--docs-per-client", type=int, default=96)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=4,
+                    help="timed steady-state rounds per scenario")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenarios", default="",
+                    help="comma list to restrict the scenario grid")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny federation, sync+straggler+one non-IID "
+                         "cell — CI smoke for the fused ring buffer")
+    a = ap.parse_args(argv)
+    wanted = tuple(s for s in a.scenarios.split(",") if s) or None
+    if a.quick:
+        return run(a.out, vocab=200, topics=5, hidden=32, num_clients=4,
+                   docs_per_client=40, batch=16, rounds=2, seed=a.seed,
+                   scenarios=wanted or ("sync", "straggler",
+                                        "dirichlet-noniid"))
+    return run(a.out, vocab=a.vocab, topics=a.topics, hidden=a.hidden,
+               num_clients=a.num_clients,
+               docs_per_client=a.docs_per_client, batch=a.batch,
+               rounds=a.rounds, seed=a.seed, scenarios=wanted)
+
+
+if __name__ == "__main__":
+    main()

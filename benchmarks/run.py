@@ -88,6 +88,24 @@ def main() -> None:
                  f"speedup={cell['speedup']:.1f}x,"
                  f"dev={cell['max_param_dev']:.1e}"))
 
+    # scenario suite (quick scale): fused straggler ring buffer + non-IID
+    from benchmarks import bench_scenarios
+    t0 = time.time()
+    sres = bench_scenarios.run("experiments/bench_scenarios_quick.json",
+                               vocab=200, topics=5, hidden=32,
+                               num_clients=4, docs_per_client=40, batch=16,
+                               rounds=3,
+                               scenarios=("sync", "straggler",
+                                          "dirichlet-noniid"))
+    dt = (time.time() - t0) * 1e6
+    ratio = sres["straggler_over_sync_vmap"]
+    devs = [c["max_param_dev"] for c in sres["results"]
+            if "max_param_dev" in c]
+    rows.append(("scenarios_quick", dt / max(len(sres["results"]), 1),
+                 f"cells={len(sres['results'])},"
+                 f"straggler/sync={ratio:.2f}x,"
+                 f"max_dev={max(devs):.1e}"))
+
     # roofline artifacts (built by the dry-run, reported by roofline.py)
     from benchmarks import roofline
     reports = roofline.load_reports()

@@ -276,13 +276,14 @@ class FederatedConfig:
 
 @dataclass(frozen=True)
 class RoundConfig:
-    """Round-based simulation engine knobs (``core/rounds.py``).
+    """Scenario knobs for the unified engine (``core/engine.py``).
 
     The defaults reproduce paper Algorithm 1 exactly: full participation
     (K = L), one local step (E = 1), no stragglers, and a FedAvg server
     update with ``server_lr = 1`` — which IS the Eq. (3) SGD step.  Every
-    other setting is a beyond-paper regime; ``docs/rounds.md`` maps each
-    knob to the paper / related-work setting it reproduces.
+    other setting is a beyond-paper regime; ``docs/rounds.md`` and
+    ``docs/scenarios.md`` map each knob to the paper / related-work
+    setting it reproduces.
     """
 
     # execution path: "loop" steps the cohort client-by-client on the
@@ -310,9 +311,39 @@ class RoundConfig:
     # probability ``straggler_prob``; its update arrives 1..max_staleness
     # rounds late, down-weighted by staleness_decay ** age.  max_staleness
     # = 0 disables the buffer entirely (synchronous, paper regime).
+    # Under exec_mode="vmap" the straggler path runs as an in-graph
+    # fixed-capacity ring buffer (DESIGN.md §4); exec_mode="loop" keeps
+    # the host-side pending list + ``combine_arrivals`` reference.
     straggler_prob: float = 0.0
     max_staleness: int = 0
     staleness_decay: float = 0.5
+    # message transforms applied to each client's round message (delta or
+    # grad) before the Eq. (2) combine — names from
+    # ``core.engine.TRANSFORMS``: "dp" (clip + Gaussian local DP, driven
+    # by FederatedConfig.dp_*), "topk" (top-k sparsification + error
+    # feedback, FederatedConfig.compression_topk), "secure" (pairwise
+    # cancelling masks; requires synchronous full participation).
+    # Loop-mode only; the vmap path refuses transforms rather than
+    # silently dropping them.
+    transforms: Tuple[str, ...] = ()
+    # device heterogeneity: per-client local-epoch counts (client l runs
+    # local_epochs_by_client[l % len] epochs).  () = homogeneous
+    # ``local_epochs``.  Under vmap the cohort is stacked to the max and
+    # shorter clients' extra epochs are gated off inside the scan.
+    local_epochs_by_client: Tuple[int, ...] = ()
+    # mid-training availability: client l joins the federation at round
+    # client_join_round[l % len] (default 0 = present from the start) and
+    # leaves at client_leave_round[l % len] (0 = never leaves).  The
+    # scheduler only samples among active clients; a round with no active
+    # clients is a no-op (due stragglers still deliver).
+    client_join_round: Tuple[int, ...] = ()
+    client_leave_round: Tuple[int, ...] = ()
+    # data partitioner spec for scenario drivers (launch/simulate.py,
+    # benchmarks/bench_scenarios.py): "topic" (the paper's §4.2 per-node
+    # topic split), "iid", "dirichlet(alpha)", "quantity_skew(alpha)" —
+    # registry in data/federated_split.py.  The engine itself never reads
+    # this; it describes how the driver builds the client corpora.
+    partition: str = "topic"
 
 
 @dataclass(frozen=True)

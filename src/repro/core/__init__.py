@@ -1,7 +1,10 @@
 """The paper's contribution: gFedNTM — federated neural topic modeling."""
-from repro.core import aggregation, protocol, rounds, vocab  # noqa: F401
+from repro.core import aggregation, engine, protocol, rounds, vocab  # noqa: F401,E501
 from repro.core.aggregation import (  # noqa: F401
     SERVER_OPTIMIZERS, ServerOptimizer, get_server_optimizer)
+from repro.core.engine import (  # noqa: F401
+    TRANSFORMS, FederationEngine, TransformCtx, build_transforms,
+    combine_arrivals)
 from repro.core.protocol import (  # noqa: F401
     ClientState, FedAvgTrainer, FederatedTrainer, client_round_update,
     make_federated_train_step, param_delta, train_centralized,

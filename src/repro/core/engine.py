@@ -1,0 +1,896 @@
+"""FederationEngine — the ONE federated execution stack (DESIGN.md §3-§4).
+
+Until PR 3 the repo maintained the paper's equivalence guarantee twice,
+in two divergent engines (``FederatedTrainer`` in ``core/protocol.py``
+and ``RoundEngine`` in ``core/rounds.py``).  This module collapses both
+into a single composable pipeline of stages
+
+    sampler -> local-update -> transforms -> combine -> server-opt
+
+over which the legacy classes are thin config presets:
+
+  * ``FederatedTrainer``  = ``message="grad"``, E = 1, K = L, server =
+    the wrapped client optimizer (Eq. (3) verbatim);
+  * ``FedAvgTrainer``     = ``message="delta"``, E = ``fed.local_steps``,
+    FedAvg(server_lr=1) server (weight averaging == W + delta average);
+  * ``RoundEngine``       = ``message="delta"`` with the full
+    ``RoundConfig`` regime surface.
+
+``exec_mode`` ("loop" | "vmap") is a property of THIS engine, not
+duplicated per class:
+
+  * ``"loop"`` steps the cohort client-by-client on the host — the
+    literal Alg.-1 composition and the reference every fused path is
+    tested against;
+  * ``"vmap"`` stacks the cohort's minibatches on a leading client axis
+    and runs all K local-update loops, the Eq. (2) combine and the
+    server optimizer in ONE jitted graph.  With stragglers enabled the
+    combine runs through an IN-GRAPH fixed-capacity ring buffer of
+    stacked deltas (age counters + weights as arrays) instead of the
+    host-side pending list — the straggler regime is now exactly as
+    fused as the synchronous one, with :func:`combine_arrivals` kept as
+    the loop-mode reference the fused buffer is tested against
+    (tests/test_vmap_equivalence.py, tests/test_engine_unified.py).
+
+Message transforms (the previously-orphaned privacy/compression ops in
+``core/aggregation.py``) plug into the transform stage by name:
+``"dp"`` (clip + Gaussian local DP), ``"topk"`` (top-k sparsification
+with error feedback), ``"secure"`` (pairwise cancelling masks).  They
+apply to whatever the engine's message kind is — gradients for the
+Algorithm-1 preset (byte-identical to the pre-refactor trainer), deltas
+for round engines — and are loop-mode only: the vmap path refuses them
+rather than silently dropping a privacy guarantee.
+
+Scenario diversity (per-client heterogeneous local epochs, mid-training
+client dropout/join) threads through ``RoundConfig`` — see
+docs/scenarios.md for the knob -> regime map.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FederatedConfig, RoundConfig
+from repro.core import aggregation as agg
+from repro.data.federated_split import (round_minibatches, sample_minibatch,
+                                        stacked_round_batches)
+from repro.optim.optimizers import global_norm
+
+Pytree = Any
+
+EXEC_MODES = ("loop", "vmap")
+MESSAGE_KINDS = ("delta", "grad")
+
+
+# ---------------------------------------------------------------------------
+# shared client-side primitives
+# ---------------------------------------------------------------------------
+@dataclass
+class ClientState:
+    """What lives on one node N_l: its corpus, never shared."""
+    data: Dict[str, np.ndarray]
+    num_docs: int
+    error_memory: Optional[Pytree] = None   # top-k error feedback
+    rng: Any = None
+
+
+def param_delta(old: Pytree, new: Pytree) -> Pytree:
+    """The client's round message in delta form: W_l - W (DESIGN.md §3)."""
+    return jax.tree_util.tree_map(lambda a, b: b - a, old, new)
+
+
+def client_round_update(grad_fn, params: Pytree, client: ClientState,
+                        round_rng, *, learning_rate: float,
+                        local_epochs: int = 1,
+                        batch_size: int = 64) -> Tuple[Pytree, float, float]:
+    """Run E local SGD epochs on one client starting from the server
+    weights; return ``(delta, n_total, mean_loss)``.
+
+    With ``local_epochs=1`` the delta is exactly ``-lr * G_l`` for the
+    minibatch the Algorithm-1 trainer would draw from ``round_rng`` — the
+    identity that makes the engine reproduce Algorithm 1 (tested in
+    tests/test_rounds.py).  ``grad_fn`` is a jitted value_and_grad of the
+    client's local mean loss.
+    """
+    local = params
+    tot_loss, tot_n = 0.0, 0.0
+    for batch, n in round_minibatches(client.data, client.num_docs,
+                                      round_rng, batch_size=batch_size,
+                                      local_epochs=local_epochs):
+        loss, grads = grad_fn(local, batch)
+        local = jax.tree_util.tree_map(
+            lambda p, g: p - learning_rate * g.astype(p.dtype), local, grads)
+        tot_loss += float(loss) * n
+        tot_n += n
+    return param_delta(params, local), float(tot_n), \
+        tot_loss / max(tot_n, 1.0)
+
+
+def masked_mean_loss(loss_fn, loss_sum_fn=None):
+    """Client objective for the stacked (vmap) execution path.
+
+    The stacked batches of :func:`stacked_round_batches` carry a
+    ``doc_mask`` marking padded rows.  A mask-aware ``loss_sum_fn(params,
+    batch) -> (sum_loss, count)`` (e.g. ``prodlda.elbo_loss_sum``) keeps
+    those rows out of the objective and its gradient; the masked mean
+    ``sum/count`` then equals the plain mean the loop path takes over the
+    unpadded batch (DESIGN.md §4).  Without a ``loss_sum_fn`` the plain
+    mean ``loss_fn`` is used with the mask stripped — only valid when no
+    client pads (every ``num_docs >= batch_size``); the engines enforce
+    that precondition at construction.
+
+    CAVEAT (stochastic losses + padding): in-batch noise (dropout /
+    reparametrization) inside the loss is drawn over the PADDED row count
+    P, and threefry's counter layout is shape-dependent, so those draws
+    differ from the loop path's n-row draws even on the real rows.  A
+    padded client under a ``train=True`` loss therefore trains correctly
+    (same noise distribution, masked objective) but does NOT retrace the
+    loop trajectory bit-for-bit; the vmap==loop guarantee for stochastic
+    losses holds exactly when no client pads.  Deterministic losses
+    (``train=False``, the equivalence-test setting) are unaffected.
+    """
+    if loss_sum_fn is not None:
+        def mean_loss(params, batch):
+            s, n = loss_sum_fn(params, batch)
+            return s / jnp.maximum(n, 1.0)
+        return mean_loss
+
+    def mean_loss(params, batch):
+        return loss_fn(params, {k: v for k, v in batch.items()
+                                if k != "doc_mask"})
+    return mean_loss
+
+
+def _check_vmap_preconditions(fed: FederatedConfig, clients, batch_size: int,
+                              loss_sum_fn, *, what: str,
+                              transforms: Sequence[str] = ()) -> None:
+    """The stacked path's constructor-time guards (never silent)."""
+    if (fed.dp_noise_multiplier > 0 or fed.compression_topk > 0
+            or fed.secure_aggregation or transforms):
+        raise NotImplementedError(
+            f"{what} exec_mode='vmap' does not apply message transforms "
+            "(dp_noise_multiplier / compression_topk / secure_aggregation "
+            "/ RoundConfig.transforms); use exec_mode='loop'")
+    if loss_sum_fn is None and any(c.num_docs < batch_size for c in clients):
+        raise ValueError(
+            f"{what} exec_mode='vmap' with ragged clients (num_docs < "
+            f"batch_size={batch_size}) needs a mask-aware loss_sum_fn "
+            "(e.g. prodlda.elbo_loss_sum) so padded rows stay out of the "
+            "objective; pass loss_sum_fn= or use exec_mode='loop'")
+
+
+def _rel_change(old: Pytree, new: Pytree) -> jnp.ndarray:
+    num = global_norm(jax.tree_util.tree_map(lambda a, b: a - b, old, new))
+    den = jnp.maximum(global_norm(old), 1e-12)
+    return num / den
+
+
+# ---------------------------------------------------------------------------
+# stage 1: client sampling
+# ---------------------------------------------------------------------------
+def _cycle_per_client(values: Optional[Sequence[int]], num_clients: int,
+                      default: int) -> np.ndarray:
+    """Per-client int schedule: cycle a (possibly shorter) tuple over L."""
+    if not values:
+        return np.full(num_clients, default, np.int64)
+    v = np.asarray(values, np.int64)
+    return v[np.arange(num_clients) % len(v)]
+
+
+class RoundScheduler:
+    """Samples the K-of-L client cohort for each round.
+
+    Modes:
+      * ``uniform`` — K clients uniformly without replacement per round;
+      * ``weighted`` — sampling probability proportional to per-client
+        corpus size (larger nodes are polled more often);
+      * ``deterministic`` — a fixed seeded permutation walked round-robin,
+        K at a time: zero sampling variance and every client is selected
+        at least once per ceil(L/K) rounds (exactly once when K divides
+        L; the wrap-around block repeats a few clients otherwise).
+
+    Mid-training availability (``join_rounds`` / ``leave_rounds``,
+    per-client, 0-in-leave = never leaves): client l is *active* at round
+    r iff ``join[l] <= r < leave[l]``; every mode samples only among the
+    active set (weighted renormalizes over it, deterministic walks the
+    fixed permutation restricted to it).  With all clients always active
+    the selection is byte-identical to the pre-availability scheduler.
+
+    All modes are deterministic functions of ``(seed, round_idx)`` — two
+    schedulers built with the same arguments produce identical cohorts,
+    which is what makes simulation sweeps reproducible.
+    """
+
+    MODES = ("uniform", "weighted", "deterministic")
+
+    def __init__(self, num_clients: int, clients_per_round: int = 0, *,
+                 mode: str = "uniform",
+                 weights: Optional[Sequence[float]] = None, seed: int = 0,
+                 join_rounds: Optional[Sequence[int]] = None,
+                 leave_rounds: Optional[Sequence[int]] = None):
+        if mode not in self.MODES:
+            raise ValueError(f"unknown sampling mode {mode!r}; "
+                             f"one of {self.MODES}")
+        self.num_clients = num_clients
+        k = clients_per_round or num_clients
+        self.clients_per_round = min(k, num_clients)
+        self.mode = mode
+        self.seed = seed
+        if mode == "weighted":
+            if weights is None:
+                raise ValueError("weighted sampling needs per-client weights")
+            w = np.asarray(weights, np.float64)
+            self.probs = w / w.sum()
+        else:
+            self.probs = None
+        self.join = _cycle_per_client(join_rounds, num_clients, 0)
+        leave = _cycle_per_client(leave_rounds, num_clients, 0)
+        # 0 = "never leaves" sentinel -> effectively +inf
+        self.leave = np.where(leave <= 0, np.iinfo(np.int64).max, leave)
+        self._has_availability = bool(
+            (self.join > 0).any()
+            or (self.leave < np.iinfo(np.int64).max).any())
+        # deterministic mode: one fixed permutation, walked K at a time
+        self._perm = np.random.default_rng(seed).permutation(num_clients)
+
+    def active(self, round_idx: int) -> np.ndarray:
+        """Client ids present in the federation at round ``round_idx``."""
+        return np.where((self.join <= round_idx)
+                        & (round_idx < self.leave))[0]
+
+    def select(self, round_idx: int) -> np.ndarray:
+        """Sorted client ids of the round-``round_idx`` cohort."""
+        act = self.active(round_idx) if self._has_availability \
+            else np.arange(self.num_clients)
+        a, k = len(act), min(self.clients_per_round, len(act))
+        if k >= a:
+            return act.copy()        # full participation among active
+        if self.mode == "deterministic":
+            walk = self._perm[np.isin(self._perm, act)]
+            start = (round_idx * k) % a
+            idx = walk[np.arange(start, start + k) % a]
+            return np.sort(idx)
+        rng = np.random.default_rng([self.seed, round_idx])
+        if self.probs is None:
+            p = None
+        elif a == self.num_clients:
+            p = self.probs
+        else:
+            p = self.probs[act] / self.probs[act].sum()
+        idx = act[rng.choice(a, k, replace=False, p=p)]
+        return np.sort(idx)
+
+
+# ---------------------------------------------------------------------------
+# staleness: host-side reference path
+# ---------------------------------------------------------------------------
+@dataclass
+class PendingUpdate:
+    """A straggler's in-flight round message (loop-mode reference)."""
+    client: int
+    issued_round: int
+    due_round: int
+    delta: Pytree
+    weight: float
+
+
+def combine_arrivals(arrivals: Sequence[Any],
+                     staleness_decay: float) -> Pytree:
+    """Eq. (2) weighted mean of one round's arriving deltas.
+
+    ``arrivals`` is a non-empty list of ``(age, delta, weight)`` and
+    ``staleness_decay`` must lie in [0, 1] — violations raise
+    ``ValueError`` up front instead of surfacing as NaN params (decay
+    outside [0, 1] amplifies or sign-flips stale updates) or an opaque
+    IndexError from the empty weighted mean.
+
+    INVARIANT: the ``staleness_decay ** age`` discount scales the DELTA,
+    not the Eq. (2) weight — a weight-only discount would cancel in the
+    weighted-mean normalization whenever a round's arrivals all share one
+    age (e.g. any single-arrival round), silently trusting stale updates
+    fully.  The loop execution mode goes through this one function, and
+    the fused in-graph ring buffer is tested against it
+    (tests/test_vmap_equivalence.py, tests/test_engine_unified.py).
+    """
+    if not 0.0 <= staleness_decay <= 1.0:
+        raise ValueError(f"staleness_decay must be in [0, 1], got "
+                         f"{staleness_decay!r} (values outside amplify or "
+                         "sign-flip stale deltas)")
+    arrivals = list(arrivals)
+    if not arrivals:
+        raise ValueError("combine_arrivals needs at least one (age, delta, "
+                         "weight) arrival; an all-straggler round must skip "
+                         "the combine, not average nothing")
+    scaled = [d if age == 0 else jax.tree_util.tree_map(
+        lambda x: x * staleness_decay ** age, d)
+        for age, d, _ in arrivals]
+    return agg.aggregate_host(scaled, [w for _, _, w in arrivals])
+
+
+# ---------------------------------------------------------------------------
+# stage 3: message transforms (privacy / compression)
+# ---------------------------------------------------------------------------
+@dataclass
+class TransformCtx:
+    """Per-client call context handed to every message transform."""
+    round_key: Any          # the round's shared key (secure-mask PRG seed)
+    client_rng: Any         # fold_in(round_key, client_id) — the draw key
+    client_id: int
+    num_clients: int        # mask-cancellation population
+    weight: float           # Eq. (2) weight n_l of this message
+    client: ClientState     # for persistent per-client state (error memory)
+
+
+def _dp_transform(fed: FederatedConfig):
+    """Per-client clip + Gaussian noise [Wang et al. 2020 ref 25]."""
+    if fed.dp_noise_multiplier <= 0:
+        raise ValueError("the 'dp' transform needs "
+                         "FederatedConfig.dp_noise_multiplier > 0 — with "
+                         "zero noise it would silently degrade to "
+                         "clip-only while claiming local DP")
+
+    def f(msg, ctx: TransformCtx):
+        return agg.dp_privatize(
+            msg, jax.random.fold_in(ctx.client_rng, 7),
+            clip_norm=fed.dp_clip_norm,
+            noise_multiplier=fed.dp_noise_multiplier)
+    return f
+
+
+def _topk_transform(fed: FederatedConfig):
+    """Top-k sparsification with error feedback (collective-bytes cut)."""
+    if fed.compression_topk <= 0:
+        raise ValueError("the 'topk' transform needs "
+                         "FederatedConfig.compression_topk > 0")
+
+    def f(msg, ctx: TransformCtx):
+        msg, ctx.client.error_memory = agg.compress_with_error_feedback(
+            msg, ctx.client.error_memory, fed.compression_topk)
+        return msg
+    return f
+
+
+def _secure_transform(fed: FederatedConfig):
+    """Pairwise antisymmetric masks that cancel in the Eq. (2) sum."""
+    def f(msg, ctx: TransformCtx):
+        return agg.secure_mask_grads(msg, ctx.round_key, ctx.client_id,
+                                     ctx.num_clients, ctx.weight)
+    return f
+
+
+TRANSFORMS: Dict[str, Callable[[FederatedConfig], Callable]] = {
+    "dp": _dp_transform,
+    "topk": _topk_transform,
+    "secure": _secure_transform,
+}
+
+
+def build_transforms(names: Sequence[str],
+                     fed: FederatedConfig) -> List[Tuple[str, Callable]]:
+    """Resolve transform names against the registry (order preserved)."""
+    out = []
+    for name in names:
+        if name not in TRANSFORMS:
+            raise KeyError(f"unknown transform {name!r}; "
+                           f"available: {sorted(TRANSFORMS)}")
+        out.append((name, TRANSFORMS[name](fed)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the unified engine
+# ---------------------------------------------------------------------------
+class FederationEngine:
+    """One composable federated execution stack (module docstring).
+
+    ``loss_fn(params, batch) -> scalar mean loss`` is the client's local
+    objective.  ``message`` selects what a client's round message is:
+
+      * ``"delta"`` — E local SGD epochs, message = W_l - W, combined by
+        Eq. (2) and handed to the ``RoundConfig`` server optimizer
+        (the round-engine model; supports every scenario knob);
+      * ``"grad"``  — one minibatch gradient (E must be 1), combined by
+        Eq. (2) and handed to the wrapped client ``Optimizer`` — the
+        literal Algorithm-1 information flow.
+
+    Execution modes (``exec_mode`` kwarg overrides
+    ``RoundConfig.exec_mode``): see the class docstrings of the legacy
+    presets and DESIGN.md §4.  Ragged federations (some ``num_docs <
+    batch_size``) under ``"vmap"`` need a mask-aware ``loss_sum_fn``.
+    """
+
+    def __init__(self, loss_fn, init_params: Pytree,
+                 clients: Sequence[ClientState], fed: FederatedConfig,
+                 rounds: Optional[RoundConfig] = None, *,
+                 batch_size: int = 64, exec_mode: Optional[str] = None,
+                 loss_sum_fn=None, message: str = "delta",
+                 server: Optional[agg.ServerOptimizer] = None,
+                 transforms: Optional[Sequence[str]] = None,
+                 num_clients_for_masks: Optional[int] = None):
+        if message not in MESSAGE_KINDS:
+            raise ValueError(f"unknown message kind {message!r}; "
+                             f"one of {MESSAGE_KINDS}")
+        if message == "grad" and server is None:
+            raise ValueError(
+                "message='grad' needs an explicit server stage: gradient "
+                "messages point UPHILL, so the delta-convention "
+                "RoundConfig server optimizers (which ADD their step) "
+                "would train by ascent — wrap the client optimizer, e.g. "
+                "protocol._wrap_client_optimizer(sgd(lr)), or use the "
+                "FederatedTrainer preset")
+        self.loss_fn = loss_fn
+        self.params = init_params
+        self.clients = list(clients)
+        self.fed = fed
+        self.rc = rounds or RoundConfig()
+        self.batch_size = batch_size
+        self.message = message
+        self.exec_mode = exec_mode or self.rc.exec_mode
+        if self.exec_mode not in EXEC_MODES:
+            raise ValueError(f"unknown exec_mode {self.exec_mode!r}; "
+                             f"one of {EXEC_MODES}")
+        self._nmask = num_clients_for_masks or len(self.clients)
+
+        if not 0.0 <= self.rc.staleness_decay <= 1.0:
+            raise ValueError(
+                f"staleness_decay must be in [0, 1], got "
+                f"{self.rc.staleness_decay!r} — both the loop-mode "
+                "combine_arrivals and the fused ring buffer would "
+                "amplify or sign-flip stale deltas outside that range")
+
+        # -- transform stage resolution --------------------------------
+        names = tuple(transforms if transforms is not None
+                      else self.rc.transforms)
+        if not names and (fed.dp_noise_multiplier > 0
+                          or fed.compression_topk > 0
+                          or fed.secure_aggregation):
+            raise NotImplementedError(
+                "FederatedConfig requests message-level "
+                "privacy/compression but no transform stage is configured "
+                "for this engine; declare the intent explicitly via "
+                "RoundConfig.transforms=('dp'|'topk'|'secure', ...) "
+                "(or use the FederatedTrainer preset, which derives its "
+                "grad transforms from FederatedConfig automatically) — "
+                "the knobs are never silently dropped")
+        if self.exec_mode == "vmap":
+            _check_vmap_preconditions(fed, self.clients, batch_size,
+                                      loss_sum_fn, what=type(self).__name__,
+                                      transforms=names)
+        self._transforms = build_transforms(names, fed)
+
+        # -- local-update stage ----------------------------------------
+        self._epochs = self._resolve_epochs()
+        if len(self.clients) and (self._epochs < 1).any():
+            raise ValueError(
+                "every client needs >= 1 local epoch (got "
+                f"local_epochs={self.rc.local_epochs}, "
+                f"local_epochs_by_client={self.rc.local_epochs_by_client}) "
+                "— a zero-epoch client has no round message and would "
+                "divide the Eq. (2) combine by zero")
+        self._e_max = int(self._epochs.max()) if len(self.clients) else 1
+        self._hetero = bool((self._epochs != self._epochs[0]).any()) \
+            if len(self.clients) else False
+        if message == "grad" and self._e_max != 1:
+            raise ValueError("message='grad' is the single-minibatch "
+                             "Algorithm-1 protocol; local_epochs must be 1 "
+                             "(use message='delta' for multi-epoch clients)")
+        self._mean_loss = masked_mean_loss(loss_fn, loss_sum_fn)
+        self._grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        self._stacked_fn = None        # built lazily (vmap mode only)
+        self._fused_sync = None
+        self._fused_stale = None
+        self._deliver_only = None
+
+        # -- sampler stage ---------------------------------------------
+        self.scheduler = RoundScheduler(
+            len(self.clients), self.rc.clients_per_round,
+            mode=self.rc.sampling,
+            weights=[c.num_docs for c in self.clients]
+            if self.rc.sampling == "weighted" else None,
+            seed=self.rc.sampling_seed,
+            join_rounds=self.rc.client_join_round,
+            leave_rounds=self.rc.client_leave_round)
+        self._check_secure_compat()
+
+        # -- combine / staleness stage ---------------------------------
+        # buffer active <=> both knobs on; decides whether the vmap path
+        # routes the round through the fused ring buffer
+        self._stale_enabled = (self.rc.straggler_prob > 0.0
+                               and self.rc.max_staleness > 0)
+        self.pending: List[PendingUpdate] = []   # loop-mode reference
+        self._ring = None                        # vmap-mode device buffer
+
+        # -- server stage ----------------------------------------------
+        self.server_opt = server or self._make_server_opt(self.rc)
+        self.server_state = self.server_opt.init(init_params)
+        self.history: List[Dict[str, float]] = []
+        self._round = 0
+
+    # -- construction helpers ---------------------------------------------
+    def _resolve_epochs(self) -> np.ndarray:
+        return _cycle_per_client(self.rc.local_epochs_by_client,
+                                 len(self.clients), self.rc.local_epochs)
+
+    def _check_secure_compat(self) -> None:
+        """Pairwise masks only cancel when every mask-holder's message
+        lands in the SAME Eq. (2) combine, unscaled — refuse configs
+        that would silently break the cancellation."""
+        if not any(n == "secure" for n, _ in self._transforms):
+            return
+        if self.rc.straggler_prob > 0 and self.rc.max_staleness > 0:
+            raise ValueError(
+                "the 'secure' transform is incompatible with the straggler "
+                "buffer: a stale masked message arrives in a later combine "
+                "than its pair partners (and is decay-scaled), so the "
+                "pairwise masks no longer cancel")
+        if (self.scheduler.clients_per_round < len(self.clients)
+                or self.scheduler._has_availability):
+            raise ValueError(
+                "the 'secure' transform needs synchronous full "
+                "participation (K = L, no client dropout/join): pairwise "
+                "masks over the full population only cancel when every "
+                "client's message joins the same combine")
+
+    @staticmethod
+    def _make_server_opt(rc: RoundConfig) -> agg.ServerOptimizer:
+        # every registered factory takes server_lr; per-name extras on top
+        # (unknown names raise the registry KeyError before kwargs apply)
+        kw = {"server_lr": rc.server_lr}
+        if rc.server_optimizer == "fedavgm":
+            kw["momentum"] = rc.server_momentum
+        elif rc.server_optimizer == "fedadam":
+            kw.update(b1=rc.server_momentum, b2=rc.server_beta2,
+                      eps=rc.server_eps)
+        return agg.get_server_optimizer(rc.server_optimizer, **kw)
+
+    # -- staleness --------------------------------------------------------
+    def _straggler_delay(self, round_idx: int, client: int) -> int:
+        """0 = delivered this round; d>0 = arrives d rounds late."""
+        rc = self.rc
+        if rc.straggler_prob <= 0.0 or rc.max_staleness <= 0:
+            return 0
+        rng = np.random.default_rng(
+            [rc.sampling_seed, 0x57A1E, round_idx, client])
+        if rng.random() >= rc.straggler_prob:
+            return 0
+        return int(rng.integers(1, rc.max_staleness + 1))
+
+    # -- arrival delivery (loop-mode reference) ---------------------------
+    def _deliver_and_apply(self, r: int, fresh) -> tuple:
+        """Merge this round's fresh arrivals with due stragglers, run the
+        Eq. (2) combine (staleness-discounted) + server-optimizer update.
+        Returns ``(rel_change, num_arrived)``."""
+        due = [p for p in self.pending if p.due_round <= r]
+        self.pending = [p for p in self.pending if p.due_round > r]
+        arrivals = list(fresh) + [(r - p.issued_round, p.delta, p.weight)
+                                  for p in due]
+        rel = 0.0
+        if arrivals:
+            delta_bar = combine_arrivals(arrivals, self.rc.staleness_decay)
+            old = self.params
+            self.params, self.server_state = self.server_opt.apply(
+                self.params, delta_bar, self.server_state, r)
+            rel = float(_rel_change(old, self.params))
+        return rel, len(arrivals)
+
+    # -- local update + transforms, one client (loop mode) ----------------
+    def _local_message(self, l: int, round_key):
+        c = self.clients[l]
+        rng = jax.random.fold_in(round_key, l)
+        if self.message == "grad":
+            batch, n = sample_minibatch(c.data, c.num_docs, rng,
+                                        self.batch_size)
+            loss, msg = self._grad_fn(self.params, batch)
+            loss, n = float(loss), float(n)
+        else:
+            msg, n, loss = client_round_update(
+                self._grad_fn, self.params, c, rng,
+                learning_rate=self.fed.learning_rate,
+                local_epochs=int(self._epochs[l]),
+                batch_size=self.batch_size)
+        if self._transforms:
+            ctx = TransformCtx(round_key, rng, l, self._nmask, n, c)
+            for _, fn in self._transforms:
+                msg = fn(msg, ctx)
+        return msg, n, loss
+
+    # -- one round, loop mode ---------------------------------------------
+    def _round_loop(self, r: int, round_key, cohort) -> Dict[str, float]:
+        losses, loss_w = [], []
+        fresh = []                         # (age=0, message, weight)
+        for l in cohort:
+            l = int(l)
+            msg, n, loss = self._local_message(l, round_key)
+            losses.append(loss)
+            loss_w.append(n)
+            d = self._straggler_delay(r, l)
+            if d == 0:
+                fresh.append((0, msg, n))
+            else:
+                self.pending.append(PendingUpdate(l, r, r + d, msg, n))
+
+        rel, arrived = self._deliver_and_apply(r, fresh)
+        return {"round": r,
+                "loss": float(np.average(losses, weights=loss_w))
+                if losses else float("nan"),
+                "rel_change": rel,
+                "participants": len(cohort),
+                "arrived": arrived,
+                "in_flight": len(self.pending)}
+
+    # -- vmap graph builders ----------------------------------------------
+    def _build_client_update(self):
+        """The vmappable E-epoch local update for ONE client."""
+        lr = self.fed.learning_rate
+        grad_fn = jax.value_and_grad(self._mean_loss)
+        tmap = jax.tree_util.tree_map
+        e_max, gate = self._e_max, self._hetero
+
+        if self.message == "grad":
+            def client_update(params, batches, n_epochs):
+                # single-minibatch gradient message (E axis is size 1)
+                loss, g = grad_fn(params, tmap(lambda v: v[0], batches))
+                return g, loss[None]
+            return client_update
+
+        def client_update(params, batches, n_epochs):
+            # batches: pytree of (E, ...) leaves — one client's epoch stack
+            def epoch(local, xs):
+                b, s = xs
+                loss, grads = grad_fn(local, b)
+                stepped = tmap(lambda p, g: p - lr * g.astype(p.dtype),
+                               local, grads)
+                if gate:
+                    # heterogeneous-E cohorts: epochs beyond this client's
+                    # count are no-ops (same trajectory as a loop client
+                    # that never ran them)
+                    keep = s < n_epochs
+                    stepped = tmap(lambda a, b_: jnp.where(keep, b_, a),
+                                   local, stepped)
+                    loss = jnp.where(keep, loss, 0.0)
+                return stepped, loss
+            local, losses = jax.lax.scan(
+                epoch, params, (batches, jnp.arange(e_max)))
+            return tmap(lambda a, b: b - a, params, local), losses
+
+        return client_update
+
+    def _build_vmap_fns(self):
+        """Trace-once builders for the stacked execution graphs."""
+        tmap = jax.tree_util.tree_map
+        client_update = self._build_client_update()
+        server_opt = self.server_opt
+        decay = float(self.rc.staleness_decay)
+
+        def stacked_messages(params, stacked, e_counts):
+            """All K clients' local updates in one graph -> (K, ...)."""
+            return jax.vmap(client_update, in_axes=(None, 0, 0))(
+                params, stacked, e_counts)
+
+        def fused_sync(params, server_state, stacked, e_counts, weights,
+                       round_idx):
+            """messages -> Eq. (2) combine -> server update, zero host
+            hops (the synchronous fast path)."""
+            msgs, losses = stacked_messages(params, stacked, e_counts)
+            bar = agg.aggregate_stacked(msgs, weights)
+            new_params, new_state = server_opt.apply(
+                params, bar, server_state, round_idx)
+            rel = _rel_change(params, new_params)
+            return new_params, new_state, losses, rel
+
+        def ring_deliver(params, server_state, ring, round_idx,
+                         fresh=None):
+            """The in-graph equivalent of ``_deliver_and_apply``:
+            fresh (K,)-stacked messages (optional) + due ring slots ->
+            staleness-discounted Eq. (2) combine -> gated server update ->
+            cleared slots.  Matches :func:`combine_arrivals` on the same
+            arrivals up to float32 reduction order (tested)."""
+            occupied = ring["weight"] > 0.0
+            due = occupied & (ring["due"] <= round_idx)
+            due_w = jnp.where(due, ring["weight"], 0.0)          # (C,)
+            discount = jnp.power(decay, ring["age"].astype(jnp.float32))
+            total_w = due_w.sum()
+            fresh_w = None
+            if fresh is not None:
+                msgs, weights, delays = fresh
+                fresh_w = jnp.where(delays == 0,
+                                    weights.astype(jnp.float32), 0.0)
+                total_w = total_w + fresh_w.sum()
+            has = total_w > 0.0
+            denom = jnp.maximum(total_w, 1e-12)
+            ring_coef = due_w * discount                         # (C,)
+
+            def combine(ring_leaf, fresh_leaf=None):
+                # coefficient-vector matvec over flattened slots: one
+                # BLAS pass over the ring instead of a masked
+                # multiply+sum materializing a ring-sized temporary
+                acc = ring_coef @ ring_leaf.reshape(
+                    (ring_leaf.shape[0], -1)).astype(jnp.float32)
+                if fresh_leaf is not None:
+                    acc = acc + fresh_w @ fresh_leaf.reshape(
+                        (fresh_leaf.shape[0], -1)).astype(jnp.float32)
+                return (acc / denom).reshape(ring_leaf.shape[1:])
+
+            if fresh is None:
+                bar = tmap(combine, ring["delta"])
+            else:
+                bar = tmap(combine, ring["delta"], fresh[0])
+            upd_p, upd_s = server_opt.apply(params, bar, server_state,
+                                            round_idx)
+            # an all-straggler round leaves params AND server state alone
+            # (momentum must not decay on a no-arrival round)
+            sel = lambda o, n_: tmap(  # noqa: E731
+                lambda a, b: jnp.where(has, b, a), o, n_)
+            new_params, new_state = sel(params, upd_p), sel(server_state,
+                                                            upd_s)
+            rel = jnp.where(has, _rel_change(params, new_params), 0.0)
+            ring = dict(ring,
+                        weight=jnp.where(due, 0.0, ring["weight"]),
+                        due=jnp.where(due, -1, ring["due"]))
+            return new_params, new_state, ring, rel, due.sum(), has
+
+        def fused_stale(params, server_state, ring, stacked, e_counts,
+                        weights, delays, round_idx):
+            """One straggler-regime round, fully in-graph: local updates,
+            ring delivery + combine + server update, straggler insertion.
+            The per-client deltas never leave the device."""
+            msgs, losses = stacked_messages(params, stacked, e_counts)
+            w = weights.astype(jnp.float32)
+            new_params, new_state, ring, rel, n_due, _ = ring_deliver(
+                params, server_state, ring, round_idx, (msgs, w, delays))
+            # insert this round's stragglers into the freed slots:
+            # j-th straggler (cohort order) -> j-th free slot (slot order),
+            # computed with cumsum ranks so the scatter is one fixed-shape
+            # .at[].set per leaf (index C = the dropped dummy row)
+            c = ring["weight"].shape[0]
+            free = ring["weight"] <= 0.0
+            slot_of_rank = jnp.sort(jnp.where(free, jnp.arange(c), c))
+            is_strag = (delays > 0) & (w > 0)
+            rank = jnp.cumsum(is_strag.astype(jnp.int32)) - 1
+            tgt = jnp.where(is_strag,
+                            slot_of_rank[jnp.clip(rank, 0, c - 1)], c)
+            ring = dict(
+                delta=jax.tree_util.tree_map(
+                    lambda buf, m: buf.at[tgt].set(m.astype(buf.dtype),
+                                                   mode="drop"),
+                    ring["delta"], msgs),
+                weight=ring["weight"].at[tgt].set(w, mode="drop"),
+                due=ring["due"].at[tgt].set(
+                    round_idx + delays, mode="drop"),
+                age=ring["age"].at[tgt].set(delays, mode="drop"))
+            arrived = ((delays == 0) & (w > 0)).sum() + n_due
+            in_flight = (ring["weight"] > 0).sum()
+            return (new_params, new_state, ring, losses, rel, arrived,
+                    in_flight)
+
+        def deliver_only(params, server_state, ring, round_idx):
+            """Empty-cohort round: due stragglers still deliver."""
+            new_params, new_state, ring, rel, n_due, _ = ring_deliver(
+                params, server_state, ring, round_idx)
+            in_flight = (ring["weight"] > 0).sum()
+            return new_params, new_state, ring, rel, n_due, in_flight
+
+        # donation reuses the param/server-state/ring buffers in place on
+        # accelerators; CPU ignores donation, skip the warning
+        dn = jax.default_backend() != "cpu"
+        self._fused_sync = jax.jit(fused_sync,
+                                   donate_argnums=(0, 1) if dn else ())
+        self._fused_stale = jax.jit(fused_stale,
+                                    donate_argnums=(0, 1, 2) if dn else ())
+        self._deliver_only = jax.jit(deliver_only,
+                                     donate_argnums=(0, 1, 2) if dn else ())
+
+    def _init_ring(self):
+        """Fixed-capacity device ring buffer for in-flight deltas.
+
+        Capacity C = K_max * max_staleness can never overflow: a round
+        inserts at most K stragglers and every entry lives at most
+        max_staleness rounds, so at the insertion point of round r at
+        most K*(max_staleness-1) older entries are still in flight.
+        """
+        c = max(1, self.scheduler.clients_per_round * self.rc.max_staleness)
+        return {
+            "delta": jax.tree_util.tree_map(
+                lambda p: jnp.zeros((c,) + p.shape, p.dtype), self.params),
+            "weight": jnp.zeros((c,), jnp.float32),
+            "due": jnp.full((c,), -1, jnp.int32),
+            "age": jnp.zeros((c,), jnp.int32),
+        }
+
+    # -- one round, vmap mode ---------------------------------------------
+    def _round_vmap(self, r: int, round_key, cohort) -> Dict[str, float]:
+        cohort = [int(l) for l in cohort]
+        if self._fused_sync is None:
+            self._build_vmap_fns()
+        ri = np.int32(r)
+
+        if not cohort:
+            # nobody active this round; due stragglers still deliver
+            rel, arrived, in_flight = 0.0, 0, 0
+            if self._stale_enabled and self._ring is not None:
+                (self.params, self.server_state, self._ring, rel, arrived,
+                 in_flight) = self._deliver_only(
+                    self.params, self.server_state, self._ring, ri)
+                rel, arrived = float(rel), int(arrived)
+                in_flight = int(in_flight)
+            return {"round": r, "loss": float("nan"), "rel_change": rel,
+                    "participants": 0, "arrived": arrived,
+                    "in_flight": in_flight}
+
+        stacked, counts = stacked_round_batches(
+            [self.clients[l].data for l in cohort],
+            [self.clients[l].num_docs for l in cohort], round_key, cohort,
+            batch_size=self.batch_size, local_epochs=self._e_max)
+        e_counts = self._epochs[cohort].astype(np.int32)
+        # epochs beyond a client's count are gated off in-graph; their
+        # draws must not weigh into Eq. (2) or the loss bookkeeping
+        counts = counts * (np.arange(self._e_max)[None, :]
+                           < e_counts[:, None])
+        weights = counts.sum(axis=1)            # (K,) Eq. (2) weights
+
+        if not self._stale_enabled:
+            # fast path: one jitted call per round, donated buffers
+            self.params, self.server_state, losses, rel = self._fused_sync(
+                self.params, self.server_state, stacked, e_counts, weights,
+                ri)
+            arrived, in_flight = len(cohort), 0
+            rel = float(rel)
+        else:
+            # straggler regime, equally fused: the stacked deltas go
+            # straight into the in-graph ring buffer — no host round-trip
+            if self._ring is None:
+                self._ring = self._init_ring()
+            delays = np.asarray([self._straggler_delay(r, l)
+                                 for l in cohort], np.int32)
+            (self.params, self.server_state, self._ring, losses, rel,
+             arrived, in_flight) = self._fused_stale(
+                self.params, self.server_state, self._ring, stacked,
+                e_counts, weights, delays, ri)
+            rel = float(rel)
+            arrived, in_flight = int(arrived), int(in_flight)
+
+        losses = np.asarray(losses)             # (K, E) per-epoch means
+        client_loss = (losses * counts).sum(axis=1) \
+            / np.maximum(counts.sum(axis=1), 1.0)
+        return {"round": r,
+                "loss": float(np.average(client_loss, weights=weights))
+                if len(cohort) else float("nan"),
+                "rel_change": rel,
+                "participants": len(cohort),
+                "arrived": arrived,
+                "in_flight": in_flight}
+
+    # -- one round --------------------------------------------------------
+    def round(self, seed: Optional[int] = None) -> Dict[str, float]:
+        """Sample cohort -> local updates -> transforms -> staleness
+        routing -> Eq. (2) combine -> server-optimizer update."""
+        r = self._round
+        round_key = jax.random.PRNGKey(seed if seed is not None else r)
+        cohort = self.scheduler.select(r)
+        if self.exec_mode == "vmap":
+            rec = self._round_vmap(r, round_key, cohort)
+        else:
+            rec = self._round_loop(r, round_key, cohort)
+        self.history.append(rec)
+        self._round += 1
+        return rec
+
+    def fit(self, *, seed: int = 0, verbose: bool = False) -> Pytree:
+        """Run ``fed.max_rounds`` rounds with the fixed per-round seed
+        schedule (trajectory-comparable across presets/exec modes) and
+        the Alg.-1 stopping criterion — only applied to rounds where an
+        update landed."""
+        for e in range(self.fed.max_rounds):
+            rec = self.round(seed=seed * 100003 + e)
+            if verbose and e % 10 == 0:
+                print(f"[round {e:4d}] loss={rec['loss']:.4f} "
+                      f"rel={rec['rel_change']:.2e} "
+                      f"K={rec['participants']} "
+                      f"arrived={rec['arrived']}")
+            if rec["arrived"] and rec["rel_change"] < self.fed.rel_tol:
+                break
+        return self.params

@@ -1,12 +1,16 @@
 """gFedNTM federated training protocol (paper Algorithm 1).
 
-Two faithful realizations of the same math (DESIGN.md §2):
+Three faithful realizations of the same math (DESIGN.md §2):
 
 1. ``FederatedTrainer`` — the literal Algorithm 1: a server object and L
    client objects in one process (the gRPC transport of the reference
    implementation replaced by function calls; the *information flow* is
    identical — the server sees vocabularies and gradients, never
    documents).  Used for the paper's NTM experiments, runs on CPU.
+   Since PR 3 it is a thin preset over the unified
+   :class:`~repro.core.engine.FederationEngine` (``message="grad"``,
+   E = 1, K = L, server = the wrapped client optimizer) — one code path
+   maintains the equivalence guarantee for every execution stack.
 
 2. ``make_federated_train_step`` — the TPU-native in-graph protocol:
    ``shard_map`` over the mesh client axis; each device computes its
@@ -25,76 +29,23 @@ Two faithful realizations of the same math (DESIGN.md §2):
 """
 from __future__ import annotations
 
-import inspect
-from dataclasses import dataclass, field
-from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import FederatedConfig, ModelConfig
+from repro.configs.base import FederatedConfig, RoundConfig
 from repro.core import aggregation as agg
-from repro.data.federated_split import (round_minibatches, sample_minibatch,
-                                        stacked_round_batches)
-from repro.optim.optimizers import Optimizer, global_norm, sgd
+# the client-side primitives and the engine live in core/engine.py since
+# the PR-3 unification; re-exported here so every historical import path
+# (`from repro.core.protocol import ClientState, ...`) keeps working
+from repro.core.engine import (  # noqa: F401
+    EXEC_MODES, ClientState, FederationEngine, _check_vmap_preconditions,
+    _rel_change, client_round_update, masked_mean_loss, param_delta)
+from repro.optim.optimizers import Optimizer, sgd
 
 Pytree = Any
-
-EXEC_MODES = ("loop", "vmap")
-
-
-def masked_mean_loss(loss_fn, loss_sum_fn=None):
-    """Client objective for the stacked (vmap) execution path.
-
-    The stacked batches of :func:`stacked_round_batches` carry a
-    ``doc_mask`` marking padded rows.  A mask-aware ``loss_sum_fn(params,
-    batch) -> (sum_loss, count)`` (e.g. ``prodlda.elbo_loss_sum``) keeps
-    those rows out of the objective and its gradient; the masked mean
-    ``sum/count`` then equals the plain mean the loop path takes over the
-    unpadded batch (DESIGN.md §4).  Without a ``loss_sum_fn`` the plain
-    mean ``loss_fn`` is used with the mask stripped — only valid when no
-    client pads (every ``num_docs >= batch_size``); the engines enforce
-    that precondition at construction.
-
-    CAVEAT (stochastic losses + padding): in-batch noise (dropout /
-    reparametrization) inside the loss is drawn over the PADDED row count
-    P, and threefry's counter layout is shape-dependent, so those draws
-    differ from the loop path's n-row draws even on the real rows.  A
-    padded client under a ``train=True`` loss therefore trains correctly
-    (same noise distribution, masked objective) but does NOT retrace the
-    loop trajectory bit-for-bit; the vmap==loop guarantee for stochastic
-    losses holds exactly when no client pads.  Deterministic losses
-    (``train=False``, the equivalence-test setting) are unaffected.
-    """
-    if loss_sum_fn is not None:
-        def mean_loss(params, batch):
-            s, n = loss_sum_fn(params, batch)
-            return s / jnp.maximum(n, 1.0)
-        return mean_loss
-
-    def mean_loss(params, batch):
-        return loss_fn(params, {k: v for k, v in batch.items()
-                                if k != "doc_mask"})
-    return mean_loss
-
-
-def _check_vmap_preconditions(fed: FederatedConfig, clients, batch_size: int,
-                              loss_sum_fn, *, what: str) -> None:
-    """The stacked path's constructor-time guards (never silent)."""
-    if (fed.dp_noise_multiplier > 0 or fed.compression_topk > 0
-            or fed.secure_aggregation):
-        raise NotImplementedError(
-            f"{what} exec_mode='vmap' does not apply grad-level "
-            "dp_noise_multiplier / compression_topk / secure_aggregation; "
-            "use exec_mode='loop'")
-    if loss_sum_fn is None and any(c.num_docs < batch_size for c in clients):
-        raise ValueError(
-            f"{what} exec_mode='vmap' with ragged clients (num_docs < "
-            f"batch_size={batch_size}) needs a mask-aware loss_sum_fn "
-            "(e.g. prodlda.elbo_loss_sum) so padded rows stay out of the "
-            "objective; pass loss_sum_fn= or use exec_mode='loop'")
 
 
 # ---------------------------------------------------------------------------
@@ -186,31 +137,40 @@ def make_federated_train_step(
 
 
 # ---------------------------------------------------------------------------
-# (1) Algorithm 1, literal: server + clients in one process
+# (1) Algorithm 1, literal: the grad-message preset of FederationEngine
 # ---------------------------------------------------------------------------
-@dataclass
-class ClientState:
-    """What lives on one node N_l: its corpus, never shared."""
-    data: Dict[str, np.ndarray]
-    num_docs: int
-    error_memory: Optional[Pytree] = None   # top-k error feedback
-    rng: Any = None
+def _wrap_client_optimizer(optimizer: Optimizer) -> agg.ServerOptimizer:
+    """Adapt a client-side Eq. (3) ``Optimizer`` to the engine's server
+    stage: the combined message IS the Eq. (2) gradient average, and the
+    server applies ``optimizer.update`` to it verbatim."""
+    return agg.ServerOptimizer(
+        "client-optimizer", optimizer.init,
+        lambda params, gbar, state, round_idx=0:
+            optimizer.update(params, gbar, state, round_idx))
 
 
-class FederatedTrainer:
+class FederatedTrainer(FederationEngine):
     """The gFedNTM server loop (Alg. 1) over explicit client objects.
+
+    DEPRECATED-as-a-class, preserved-as-an-entry-point: this is the
+    ``message="grad"`` preset of :class:`FederationEngine` (full
+    participation, one minibatch gradient per client per round, Eq. (2)
+    combine, client ``Optimizer`` applied as the server stage) and
+    produces the identical parameter trajectory the pre-unification
+    class did (tests/test_engine_unified.py).
 
     ``loss_fn(params, batch) -> scalar mean loss`` is the client's local
     objective (grad of it == G_l of Eq. 2 for that minibatch).
 
     ``exec_mode="loop"`` (default) polls clients one by one — the literal
     Alg. 1 composition, and the only mode that applies the grad-level
-    privacy/compression knobs.  ``exec_mode="vmap"`` stacks all L client
-    minibatches on a leading axis and runs every client gradient, the
-    Eq. (2) combine and the Eq. (3) update in ONE jitted graph — same
-    trajectory (same keys, same math; tested), one dispatch per round
-    (DESIGN.md §4).  Ragged clients additionally need the mask-aware
-    ``loss_sum_fn`` (see :func:`masked_mean_loss`).
+    privacy/compression transforms (derived automatically from the
+    ``FederatedConfig`` knobs, exactly as before).  ``exec_mode="vmap"``
+    stacks all L client minibatches on a leading axis and runs every
+    client gradient, the Eq. (2) combine and the Eq. (3) update in ONE
+    jitted graph — same trajectory (same keys, same math; tested), one
+    dispatch per round (DESIGN.md §4).  Ragged clients additionally need
+    the mask-aware ``loss_sum_fn`` (see ``engine.masked_mean_loss``).
     """
 
     def __init__(self, loss_fn, init_params: Pytree,
@@ -221,222 +181,80 @@ class FederatedTrainer:
                  num_clients_for_masks: Optional[int] = None,
                  exec_mode: str = "loop",
                  loss_sum_fn=None):
-        if exec_mode not in EXEC_MODES:
-            raise ValueError(f"unknown exec_mode {exec_mode!r}; "
-                             f"one of {EXEC_MODES}")
-        self.loss_fn = loss_fn
-        self.params = init_params
-        self.clients = list(clients)
-        self.fed = fed
-        self.optimizer = optimizer or sgd(fed.learning_rate)
-        self.opt_state = self.optimizer.init(init_params)
-        self.batch_size = batch_size
-        self.exec_mode = exec_mode
-        if exec_mode == "vmap":
-            _check_vmap_preconditions(fed, self.clients, batch_size,
-                                      loss_sum_fn, what="FederatedTrainer")
-        self._mean_loss = masked_mean_loss(loss_fn, loss_sum_fn)
-        self._grad_fn = jax.jit(jax.value_and_grad(loss_fn))
-        self._vmap_step = None
-        self._nmask = num_clients_for_masks or len(self.clients)
-        self.history: List[Dict[str, float]] = []
-        self._round = 0
+        optimizer = optimizer or sgd(fed.learning_rate)
+        # grad transforms exactly as the pre-unification trainer wired
+        # them: dp -> top-k error feedback -> secure masks
+        names = []
+        if fed.dp_noise_multiplier > 0:
+            names.append("dp")
+        if fed.compression_topk > 0:
+            names.append("topk")
+        if fed.secure_aggregation:
+            names.append("secure")
+        super().__init__(
+            loss_fn, init_params, clients, fed, RoundConfig(),
+            batch_size=batch_size, exec_mode=exec_mode,
+            loss_sum_fn=loss_sum_fn, message="grad",
+            server=_wrap_client_optimizer(optimizer),
+            transforms=tuple(names),
+            num_clients_for_masks=num_clients_for_masks)
+        self.optimizer = optimizer
 
-    # -- client-side ------------------------------------------------------
-    def _client_minibatch(self, c: ClientState, rng) -> Dict[str, Any]:
-        return sample_minibatch(c.data, c.num_docs, rng, self.batch_size)
+    # the historical name for the server stage's state
+    @property
+    def opt_state(self):
+        return self.server_state
 
+    @opt_state.setter
+    def opt_state(self, value):
+        self.server_state = value
+
+    # kept because the protocol equivalence tests drive it directly
     def _client_grad(self, l: int, c: ClientState, round_key):
         """GETCLIENTGRAD(N_l, W): local minibatch grad + count (Alg. 1)."""
-        rng = jax.random.fold_in(round_key, l)
-        batch, n = self._client_minibatch(c, rng)
-        loss, grads = self._grad_fn(self.params, batch)
-
-        if self.fed.dp_noise_multiplier > 0:
-            grads = agg.dp_privatize(
-                grads, jax.random.fold_in(rng, 7),
-                clip_norm=self.fed.dp_clip_norm,
-                noise_multiplier=self.fed.dp_noise_multiplier)
-        if self.fed.compression_topk > 0:
-            grads, c.error_memory = agg.compress_with_error_feedback(
-                grads, c.error_memory, self.fed.compression_topk)
-        if self.fed.secure_aggregation:
-            grads = agg.secure_mask_grads(
-                grads, round_key, l, self._nmask, n)
-        return float(loss), grads, float(n)
-
-    # -- server-side ------------------------------------------------------
-    def _build_vmap_step(self):
-        grad_fn = jax.value_and_grad(self._mean_loss)
-        optimizer = self.optimizer
-
-        def step(params, opt_state, stacked, weights, step_idx):
-            losses, grads = jax.vmap(grad_fn, in_axes=(None, 0))(params,
-                                                                 stacked)
-            gbar = agg.aggregate_stacked(grads, weights)       # Eq. (2)
-            new_params, new_opt = optimizer.update(
-                params, gbar, opt_state, step_idx)             # Eq. (3)
-            rel = _rel_change(params, new_params)
-            return new_params, new_opt, losses, rel
-
-        # donated params/opt_state buffers are reused in place round over
-        # round on accelerators; CPU ignores donation, skip the warning
-        dn = () if jax.default_backend() == "cpu" else (0, 1)
-        self._vmap_step = jax.jit(step, donate_argnums=dn)
-
-    def _round_vmap(self, seed: Optional[int]) -> Dict[str, float]:
-        """All L client grads + combine + update in one jitted call."""
-        e = self._round
-        round_key = jax.random.PRNGKey(seed if seed is not None else e)
-        stacked, counts = stacked_round_batches(
-            [c.data for c in self.clients],
-            [c.num_docs for c in self.clients], round_key,
-            list(range(len(self.clients))),
-            batch_size=self.batch_size, local_epochs=1)
-        stacked = {k: v[:, 0] for k, v in stacked.items()}  # E=1: drop axis
-        weights = counts[:, 0]
-        if self._vmap_step is None:
-            self._build_vmap_step()
-        self.params, self.opt_state, losses, rel = self._vmap_step(
-            self.params, self.opt_state, stacked, weights, e)
-        rec = {"round": e,
-               "loss": float(np.average(np.asarray(losses), weights=weights)),
-               "rel_change": float(rel)}
-        self.history.append(rec)
-        self._round += 1
-        return rec
-
-    def round(self, seed: Optional[int] = None) -> Dict[str, float]:
-        """One synchronous round: Eq. (1)/(2) aggregation + Eq. (3) update."""
-        if self.exec_mode == "vmap":
-            return self._round_vmap(seed)
-        e = self._round
-        round_key = jax.random.PRNGKey(seed if seed is not None else e)
-        losses, grads, weights = [], [], []
-        for l, c in enumerate(self.clients):          # "in parallel"
-            loss, g, n = self._client_grad(l, c, round_key)
-            losses.append(loss)
-            grads.append(g)
-            weights.append(n)
-        gbar = agg.aggregate_host(grads, weights)     # Eq. (2)
-        old = self.params
-        self.params, self.opt_state = self.optimizer.update(
-            self.params, gbar, self.opt_state, e)     # Eq. (3)
-        rel = float(_rel_change(old, self.params))
-        rec = {"round": e,
-               "loss": float(np.average(losses, weights=weights)),
-               "rel_change": rel}
-        self.history.append(rec)
-        self._round += 1
-        return rec
-
-    def fit(self, *, seed: int = 0, verbose: bool = False) -> Pytree:
-        """Run until the stopping criterion (rel weight change / max I)."""
-        for e in range(self.fed.max_rounds):
-            rec = self.round(seed=seed * 100003 + e)
-            if verbose and e % 10 == 0:
-                print(f"[round {e:4d}] loss={rec['loss']:.4f} "
-                      f"rel={rec['rel_change']:.2e}")
-            if rec["rel_change"] < self.fed.rel_tol:
-                break
-        return self.params
-
-
-def _rel_change(old: Pytree, new: Pytree) -> jnp.ndarray:
-    num = global_norm(jax.tree_util.tree_map(lambda a, b: a - b, old, new))
-    den = jnp.maximum(global_norm(old), 1e-12)
-    return num / den
-
-
-# ---------------------------------------------------------------------------
-# per-round client primitives (used by the round engine, core/rounds.py)
-# ---------------------------------------------------------------------------
-def param_delta(old: Pytree, new: Pytree) -> Pytree:
-    """The client's round message in delta form: W_l - W (DESIGN.md §3)."""
-    return jax.tree_util.tree_map(lambda a, b: b - a, old, new)
-
-
-def client_round_update(grad_fn, params: Pytree, client: ClientState,
-                        round_rng, *, learning_rate: float,
-                        local_epochs: int = 1,
-                        batch_size: int = 64) -> Tuple[Pytree, float, float]:
-    """Run E local SGD epochs on one client starting from the server
-    weights; return ``(delta, n_total, mean_loss)``.
-
-    With ``local_epochs=1`` the delta is exactly ``-lr * G_l`` for the
-    minibatch FederatedTrainer would draw from ``round_rng`` — the
-    identity that makes the round engine reproduce Algorithm 1 (tested in
-    tests/test_rounds.py).  ``grad_fn`` is a jitted value_and_grad of the
-    client's local mean loss.
-    """
-    local = params
-    tot_loss, tot_n = 0.0, 0.0
-    for batch, n in round_minibatches(client.data, client.num_docs,
-                                      round_rng, batch_size=batch_size,
-                                      local_epochs=local_epochs):
-        loss, grads = grad_fn(local, batch)
-        local = jax.tree_util.tree_map(
-            lambda p, g: p - learning_rate * g.astype(p.dtype), local, grads)
-        tot_loss += float(loss) * n
-        tot_n += n
-    return param_delta(params, local), float(tot_n), \
-        tot_loss / max(tot_n, 1.0)
+        msg, n, loss = self._local_message(l, round_key)
+        return loss, msg, n
 
 
 # ---------------------------------------------------------------------------
 # FedAvg-style local steps (beyond paper — collective-volume optimization)
 # ---------------------------------------------------------------------------
-class FedAvgTrainer(FederatedTrainer):
+class FedAvgTrainer(FederationEngine):
     """K local SGD steps between synchronizations [McMahan et al. 2017].
 
     Beyond-paper: the paper's Sync-Opt syncs every minibatch; FedAvg
     divides the synchronization (collective) volume by
-    ``fed.local_steps`` at the cost of update staleness.  Kept as a
-    subclass so the benchmark can compare both under identical data.
+    ``fed.local_steps`` at the cost of update staleness.  Now the
+    ``message="delta"`` preset of :class:`FederationEngine` with
+    ``local_epochs = fed.local_steps`` and a FedAvg(server_lr=1) server
+    — the weighted average of client weights IS ``W +`` the weighted
+    average of client deltas.  Loop-only, as before;
+    ``RoundEngine(exec_mode='vmap')`` is the batched path for
+    multi-local-step clients.
     """
 
-    def __init__(self, *args, **kwargs):
-        # resolve exec_mode however it was passed (keyword OR positional)
-        bound = inspect.signature(FederatedTrainer.__init__).bind_partial(
-            self, *args, **kwargs)
-        if bound.arguments.get("exec_mode", "loop") != "loop":
+    def __init__(self, loss_fn, init_params: Pytree,
+                 clients: Sequence[ClientState],
+                 fed: FederatedConfig,
+                 optimizer: Optional[Optimizer] = None,
+                 batch_size: int = 64,
+                 num_clients_for_masks: Optional[int] = None,
+                 exec_mode: str = "loop",
+                 loss_sum_fn=None):
+        if exec_mode != "loop":
             raise NotImplementedError(
-                "FedAvgTrainer overrides round() and is loop-only; "
-                "RoundEngine(exec_mode='vmap') is the batched path for "
-                "multi-local-step clients")
-        super().__init__(*args, **kwargs)
-
-    def round(self, seed: Optional[int] = None) -> Dict[str, float]:
-        e = self._round
-        round_key = jax.random.PRNGKey(seed if seed is not None else e)
-        new_weights, losses, counts = [], [], []
-        for l, c in enumerate(self.clients):
-            rng = jax.random.fold_in(round_key, l)
-            local = self.params
-            tot_loss, tot_n = 0.0, 0.0
-            # step 0 draws the same minibatch as SyncOpt would, so
-            # local_steps=1 reduces to FederatedTrainer exactly
-            for batch, n in round_minibatches(
-                    c.data, c.num_docs, rng, batch_size=self.batch_size,
-                    local_epochs=self.fed.local_steps):
-                loss, grads = self._grad_fn(local, batch)
-                local = jax.tree_util.tree_map(
-                    lambda p, g: p - self.fed.learning_rate * g,
-                    local, grads)
-                tot_loss += float(loss) * n
-                tot_n += n
-            new_weights.append(local)
-            losses.append(tot_loss / max(tot_n, 1))
-            counts.append(tot_n)
-        old = self.params
-        self.params = agg.aggregate_host(new_weights, counts)  # weight avg
-        rel = float(_rel_change(old, self.params))
-        rec = {"round": e,
-               "loss": float(np.average(losses, weights=counts)),
-               "rel_change": rel}
-        self.history.append(rec)
-        self._round += 1
-        return rec
+                "FedAvgTrainer averages full client weights and is "
+                "loop-only; RoundEngine(exec_mode='vmap') is the batched "
+                "path for multi-local-step clients")
+        super().__init__(
+            loss_fn, init_params, clients, fed,
+            RoundConfig(local_epochs=fed.local_steps),
+            batch_size=batch_size, exec_mode="loop",
+            loss_sum_fn=loss_sum_fn, message="delta",
+            num_clients_for_masks=num_clients_for_masks)
+        # kept for signature compatibility; the FedAvg update rule ignores
+        # the client optimizer (plain local SGD + weight averaging)
+        self.optimizer = optimizer
 
 
 # ---------------------------------------------------------------------------

@@ -1,191 +1,55 @@
-"""Multi-round federated simulation engine (DESIGN.md §3).
+"""Multi-round federated simulation (DESIGN.md §3) — engine preset.
 
-The paper's Algorithm 1 is fully synchronous with full participation:
-every client contributes a gradient to every server update.  Real
-federations are messier — only K of the L clients answer a round, slow
-clients ("stragglers") deliver their updates rounds late, and the server
-may apply momentum or Adam to the aggregated update [Reddi et al. 2021].
-This module simulates all of that on top of the existing protocol
-primitives, while collapsing EXACTLY to the paper's trainer in the
-degenerate configuration:
+Everything that used to be implemented here (cohort sampling, the
+staleness buffer, the loop/vmap execution paths) lives in the unified
+:mod:`repro.core.engine` since the PR-3 unification; this module keeps
+the historical import surface:
+
+  * :class:`RoundEngine` — the ``message="delta"`` preset of
+    :class:`~repro.core.engine.FederationEngine`, i.e. the full
+    ``RoundConfig`` regime surface (K-of-L sampling, E local epochs,
+    stragglers, server optimizers, transforms, heterogeneous epochs,
+    client dropout/join).  Construction arguments, attributes
+    (``scheduler`` / ``pending`` / ``history`` / ``server_state``) and
+    trajectories are unchanged — the deprecation-shim test pins the
+    params bit-for-bit against an explicit ``FederationEngine``.
+  * :class:`RoundScheduler`, :class:`PendingUpdate`,
+    :func:`combine_arrivals` — re-exported from the engine;
+    ``combine_arrivals`` remains the loop-mode reference the fused
+    in-graph ring buffer is tested against.
+
+The degenerate configuration still collapses to the paper's trainer:
 
     K = L, E = 1, no stragglers, FedAvg(server_lr=1)
         ==  FederatedTrainer  (same parameter trajectory; tested)
 
-Two execution paths over the same math (``exec_mode``, DESIGN.md §4):
-``"loop"`` steps the cohort client-by-client on the host; ``"vmap"``
-stacks the cohort's minibatches on a leading client axis and runs all K
-local-update loops, the Eq. (2) combine and the server optimizer in ONE
-jitted graph (padding+masking for ragged corpora) — same trajectory,
-one dispatch per round instead of K*E.
-
-Composition (in loop mode, host-side orchestration over the same
-jitted client grad the Algorithm-1 trainer uses):
-
-  * :class:`RoundScheduler` — picks the round-r cohort: uniform /
-    corpus-size-weighted sampling without replacement, or a deterministic
-    seeded round-robin (reproducible cohorts, full coverage).
-  * :func:`client_round_update` (core/protocol.py) — E local SGD epochs
-    on one client, returning the weight delta W_l - W.
-  * staleness buffer — each selected client straggles independently with
-    probability ``straggler_prob``; a straggler's delta is computed
-    against the CURRENT weights but delivered 1..max_staleness rounds
-    later, its delta scaled by ``staleness_decay ** age`` before the
-    Eq. (2) combine (the async-FL staleness discount — scaling the
-    delta, not the aggregation weight, so the discount survives the
-    weighted-mean normalization even when a round's arrivals all share
-    one age).
-  * :class:`~repro.core.aggregation.ServerOptimizer` — FedAvg / FedAvgM /
-    FedAdam applied to the Eq.-(2)-weighted mean of the arriving deltas.
-
 Related-work anchors: partial participation + pruning regimes are the
 setting of arXiv:2311.00314; K-of-L sampling over short-text federations
-is arXiv:2205.13300.  See docs/rounds.md for the knob -> regime map.
+is arXiv:2205.13300.  See docs/rounds.md for the knob -> regime map and
+docs/scenarios.md for the scenario suite.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
-
-import jax
-import numpy as np
+from typing import Any, Optional, Sequence
 
 from repro.configs.base import FederatedConfig, RoundConfig
-from repro.core import aggregation as agg
-from repro.core.protocol import (EXEC_MODES, ClientState, _rel_change,
-                                 client_round_update, masked_mean_loss,
-                                 _check_vmap_preconditions)
-from repro.data.federated_split import stacked_round_batches
+from repro.core.engine import (  # noqa: F401
+    ClientState, FederationEngine, PendingUpdate, RoundScheduler,
+    combine_arrivals)
 
 Pytree = Any
 
 
-# ---------------------------------------------------------------------------
-# client sampling
-# ---------------------------------------------------------------------------
-class RoundScheduler:
-    """Samples the K-of-L client cohort for each round.
-
-    Modes:
-      * ``uniform`` — K clients uniformly without replacement per round;
-      * ``weighted`` — sampling probability proportional to per-client
-        corpus size (larger nodes are polled more often);
-      * ``deterministic`` — a fixed seeded permutation walked round-robin,
-        K at a time: zero sampling variance and every client is selected
-        at least once per ceil(L/K) rounds (exactly once when K divides
-        L; the wrap-around block repeats a few clients otherwise).
-
-    All modes are deterministic functions of ``(seed, round_idx)`` — two
-    schedulers built with the same arguments produce identical cohorts,
-    which is what makes simulation sweeps reproducible.
-    """
-
-    MODES = ("uniform", "weighted", "deterministic")
-
-    def __init__(self, num_clients: int, clients_per_round: int = 0, *,
-                 mode: str = "uniform",
-                 weights: Optional[Sequence[float]] = None, seed: int = 0):
-        if mode not in self.MODES:
-            raise ValueError(f"unknown sampling mode {mode!r}; "
-                             f"one of {self.MODES}")
-        self.num_clients = num_clients
-        k = clients_per_round or num_clients
-        self.clients_per_round = min(k, num_clients)
-        self.mode = mode
-        self.seed = seed
-        if mode == "weighted":
-            if weights is None:
-                raise ValueError("weighted sampling needs per-client weights")
-            w = np.asarray(weights, np.float64)
-            self.probs = w / w.sum()
-        else:
-            self.probs = None
-        # deterministic mode: one fixed permutation, walked K at a time
-        self._perm = np.random.default_rng(seed).permutation(num_clients)
-
-    def select(self, round_idx: int) -> np.ndarray:
-        """Sorted client ids of the round-``round_idx`` cohort."""
-        L, K = self.num_clients, self.clients_per_round
-        if K >= L:
-            return np.arange(L)          # full participation, paper Alg. 1
-        if self.mode == "deterministic":
-            start = (round_idx * K) % L
-            idx = self._perm[np.arange(start, start + K) % L]
-            return np.sort(idx)
-        rng = np.random.default_rng([self.seed, round_idx])
-        idx = rng.choice(L, K, replace=False, p=self.probs)
-        return np.sort(idx)
-
-
-# ---------------------------------------------------------------------------
-# staleness buffer
-# ---------------------------------------------------------------------------
-@dataclass
-class PendingUpdate:
-    """A straggler's in-flight round message."""
-    client: int
-    issued_round: int
-    due_round: int
-    delta: Pytree
-    weight: float
-
-
-def combine_arrivals(arrivals: Sequence[Any],
-                     staleness_decay: float) -> Pytree:
-    """Eq. (2) weighted mean of one round's arriving deltas.
-
-    ``arrivals`` is a list of ``(age, delta, weight)``.  INVARIANT: the
-    ``staleness_decay ** age`` discount scales the DELTA, not the Eq. (2)
-    weight — a weight-only discount would cancel in the weighted-mean
-    normalization whenever a round's arrivals all share one age (e.g. any
-    single-arrival round), silently trusting stale updates fully.  Both
-    execution modes and the regression test in tests/test_rounds.py go
-    through this one function.
-    """
-    scaled = [d if age == 0 else jax.tree_util.tree_map(
-        lambda x: x * staleness_decay ** age, d)
-        for age, d, _ in arrivals]
-    return agg.aggregate_host(scaled, [w for _, _, w in arrivals])
-
-
-# ---------------------------------------------------------------------------
-# the engine
-# ---------------------------------------------------------------------------
-class RoundEngine:
+class RoundEngine(FederationEngine):
     """Round-based federated simulator over explicit client objects.
 
-    Same client/corpus model as :class:`FederatedTrainer` — the engine
-    only changes WHO participates each round, HOW MANY local steps they
-    run, WHEN their update lands, and WHAT the server does with it.
-    The grad-level privacy/compression features of ``FederatedConfig``
-    (local DP, top-k, secure aggregation) are NOT yet implemented on the
-    delta path; the constructor refuses configs that request them rather
-    than silently dropping the guarantee.
-
-    ``loss_fn(params, batch) -> scalar mean loss`` as everywhere else.
-
-    Execution modes (``exec_mode`` overrides ``RoundConfig.exec_mode``):
-
-      * ``"loop"`` — the cohort is stepped client-by-client on the host
-        (one jitted grad per client per epoch).  Wall-clock grows
-        linearly with K; this is the literal Alg.-1 composition.
-      * ``"vmap"`` — the cohort's E-epoch minibatches are stacked on a
-        leading client axis (``data/federated_split.stacked_round_batches``,
-        zero-padded + ``doc_mask``-masked for ragged corpora) and ALL K
-        local-epoch loops run as one ``vmap``-of-``scan`` inside a single
-        jitted graph; with the staleness buffer off, the Eq. (2) combine,
-        the server optimizer and the rel-change norm run in the same
-        graph with donated buffers — one dispatch per round, no host
-        round-trips per client (DESIGN.md §4).  With stragglers enabled
-        the per-client deltas must outlive the round, so the stacked
-        deltas come back to the host and join the same pending-buffer /
-        ``combine_arrivals`` path the loop mode uses.  Both modes draw
-        identical minibatches and retrace the same trajectory (property
-        suite in tests/test_vmap_equivalence.py).
-
-    Ragged federations (some ``num_docs < batch_size``) under ``"vmap"``
-    need a mask-aware ``loss_sum_fn(params, batch) -> (sum, count)``
-    (e.g. ``prodlda.elbo_loss_sum``); see ``protocol.masked_mean_loss``.
+    Preserved entry point for the delta-message
+    :class:`FederationEngine` preset — see the engine docstring for the
+    stage pipeline and execution modes.  The grad-level
+    privacy/compression features of ``FederatedConfig`` now DO apply on
+    the delta path when declared via ``RoundConfig.transforms``; an
+    undeclared request still raises rather than silently dropping the
+    guarantee.
     """
 
     def __init__(self, loss_fn, init_params: Pytree,
@@ -193,226 +57,6 @@ class RoundEngine:
                  rounds: Optional[RoundConfig] = None, *,
                  batch_size: int = 64, exec_mode: Optional[str] = None,
                  loss_sum_fn=None):
-        if (fed.dp_noise_multiplier > 0 or fed.compression_topk > 0
-                or fed.secure_aggregation):
-            raise NotImplementedError(
-                "RoundEngine does not apply FederatedConfig's "
-                "dp_noise_multiplier / compression_topk / "
-                "secure_aggregation to delta messages yet; use "
-                "FederatedTrainer for those features")
-        self.loss_fn = loss_fn
-        self.params = init_params
-        self.clients = list(clients)
-        self.fed = fed
-        self.rc = rounds or RoundConfig()
-        self.batch_size = batch_size
-        self.exec_mode = exec_mode or self.rc.exec_mode
-        if self.exec_mode not in EXEC_MODES:
-            raise ValueError(f"unknown exec_mode {self.exec_mode!r}; "
-                             f"one of {EXEC_MODES}")
-        if self.exec_mode == "vmap":
-            _check_vmap_preconditions(fed, self.clients, batch_size,
-                                      loss_sum_fn, what="RoundEngine")
-        self._mean_loss = masked_mean_loss(loss_fn, loss_sum_fn)
-        # staleness buffer active <=> both knobs on; decides whether the
-        # vmap path can fuse the combine+server update into the same graph
-        self._stale_enabled = (self.rc.straggler_prob > 0.0
-                               and self.rc.max_staleness > 0)
-        self._deltas_fn = None      # built lazily (vmap mode only)
-        self._fused_fn = None
-        self._grad_fn = jax.jit(jax.value_and_grad(loss_fn))
-        self.scheduler = RoundScheduler(
-            len(self.clients), self.rc.clients_per_round,
-            mode=self.rc.sampling,
-            weights=[c.num_docs for c in self.clients]
-            if self.rc.sampling == "weighted" else None,
-            seed=self.rc.sampling_seed)
-        self.server_opt = self._make_server_opt(self.rc)
-        self.server_state = self.server_opt.init(init_params)
-        self.pending: List[PendingUpdate] = []
-        self.history: List[Dict[str, float]] = []
-        self._round = 0
-
-    @staticmethod
-    def _make_server_opt(rc: RoundConfig) -> agg.ServerOptimizer:
-        # every registered factory takes server_lr; per-name extras on top
-        # (unknown names raise the registry KeyError before kwargs apply)
-        kw = {"server_lr": rc.server_lr}
-        if rc.server_optimizer == "fedavgm":
-            kw["momentum"] = rc.server_momentum
-        elif rc.server_optimizer == "fedadam":
-            kw.update(b1=rc.server_momentum, b2=rc.server_beta2,
-                      eps=rc.server_eps)
-        return agg.get_server_optimizer(rc.server_optimizer, **kw)
-
-    # -- staleness --------------------------------------------------------
-    def _straggler_delay(self, round_idx: int, client: int) -> int:
-        """0 = delivered this round; d>0 = arrives d rounds late."""
-        rc = self.rc
-        if rc.straggler_prob <= 0.0 or rc.max_staleness <= 0:
-            return 0
-        rng = np.random.default_rng(
-            [rc.sampling_seed, 0x57A1E, round_idx, client])
-        if rng.random() >= rc.straggler_prob:
-            return 0
-        return int(rng.integers(1, rc.max_staleness + 1))
-
-    # -- arrival delivery (shared by both exec modes) ---------------------
-    def _deliver_and_apply(self, r: int, fresh) -> tuple:
-        """Merge this round's fresh arrivals with due stragglers, run the
-        Eq. (2) combine (staleness-discounted) + server-optimizer update.
-        Returns ``(rel_change, num_arrived)``."""
-        due = [p for p in self.pending if p.due_round <= r]
-        self.pending = [p for p in self.pending if p.due_round > r]
-        arrivals = list(fresh) + [(r - p.issued_round, p.delta, p.weight)
-                                  for p in due]
-        rel = 0.0
-        if arrivals:
-            delta_bar = combine_arrivals(arrivals, self.rc.staleness_decay)
-            old = self.params
-            self.params, self.server_state = self.server_opt.apply(
-                self.params, delta_bar, self.server_state, r)
-            rel = float(_rel_change(old, self.params))
-        return rel, len(arrivals)
-
-    # -- one round, loop mode ---------------------------------------------
-    def _round_loop(self, r: int, round_key, cohort) -> Dict[str, float]:
-        losses, loss_w = [], []
-        fresh = []                         # (age=0, delta, weight)
-        for l in cohort:
-            l = int(l)
-            rng = jax.random.fold_in(round_key, l)
-            delta, n, loss = client_round_update(
-                self._grad_fn, self.params, self.clients[l], rng,
-                learning_rate=self.fed.learning_rate,
-                local_epochs=self.rc.local_epochs,
-                batch_size=self.batch_size)
-            losses.append(loss)
-            loss_w.append(n)
-            d = self._straggler_delay(r, l)
-            if d == 0:
-                fresh.append((0, delta, n))
-            else:
-                self.pending.append(PendingUpdate(l, r, r + d, delta, n))
-
-        rel, arrived = self._deliver_and_apply(r, fresh)
-        return {"round": r,
-                "loss": float(np.average(losses, weights=loss_w))
-                if losses else float("nan"),
-                "rel_change": rel,
-                "participants": len(cohort),
-                "arrived": arrived,
-                "in_flight": len(self.pending)}
-
-    # -- one round, vmap mode ---------------------------------------------
-    def _build_vmap_fns(self):
-        """Trace-once builders for the stacked execution graphs."""
-        lr = self.fed.learning_rate
-        grad_fn = jax.value_and_grad(self._mean_loss)
-        tmap = jax.tree_util.tree_map
-
-        def client_update(params, batches):
-            # batches: pytree of (E, ...) leaves — one client's epoch stack
-            def epoch(local, b):
-                loss, grads = grad_fn(local, b)
-                local = tmap(lambda p, g: p - lr * g.astype(p.dtype),
-                             local, grads)
-                return local, loss
-            local, losses = jax.lax.scan(epoch, params, batches)
-            return tmap(lambda a, b: b - a, params, local), losses
-
-        def stacked_deltas(params, stacked):
-            """All K clients' E-epoch local updates in one graph."""
-            return jax.vmap(client_update, in_axes=(None, 0))(params, stacked)
-
-        server_opt = self.server_opt
-
-        def fused_round(params, server_state, stacked, weights, round_idx):
-            """deltas -> Eq. (2) combine -> server update, zero host hops."""
-            deltas, losses = stacked_deltas(params, stacked)
-            delta_bar = agg.aggregate_stacked(deltas, weights)
-            new_params, new_state = server_opt.apply(
-                params, delta_bar, server_state, round_idx)
-            rel = _rel_change(params, new_params)
-            return new_params, new_state, losses, rel
-
-        # donation reuses the param/server-state buffers in place on
-        # accelerators; CPU ignores donation, skip the warning
-        dn = () if jax.default_backend() == "cpu" else (0, 1)
-        self._deltas_fn = jax.jit(stacked_deltas)
-        self._fused_fn = jax.jit(fused_round, donate_argnums=dn)
-
-    def _round_vmap(self, r: int, round_key, cohort) -> Dict[str, float]:
-        cohort = [int(l) for l in cohort]
-        stacked, counts = stacked_round_batches(
-            [self.clients[l].data for l in cohort],
-            [self.clients[l].num_docs for l in cohort], round_key, cohort,
-            batch_size=self.batch_size, local_epochs=self.rc.local_epochs)
-        weights = counts.sum(axis=1)            # (K,) Eq. (2) weights
-        if self._fused_fn is None:
-            self._build_vmap_fns()
-
-        if not self._stale_enabled:
-            # fast path: one jitted call per round, donated buffers
-            self.params, self.server_state, losses, rel = self._fused_fn(
-                self.params, self.server_state, stacked, weights, r)
-            arrived, in_flight = len(cohort), 0
-            rel = float(rel)
-        else:
-            # stragglers' deltas must survive into later rounds: compute
-            # all K deltas in one graph, then route them through the same
-            # pending buffer / combine path as loop mode
-            deltas, losses = self._deltas_fn(self.params, stacked)
-            fresh = []
-            for i, l in enumerate(cohort):
-                delta_i = jax.tree_util.tree_map(
-                    lambda x, i=i: x[i], deltas)
-                d = self._straggler_delay(r, l)
-                if d == 0:
-                    fresh.append((0, delta_i, float(weights[i])))
-                else:
-                    self.pending.append(PendingUpdate(
-                        l, r, r + d, delta_i, float(weights[i])))
-            rel, arrived = self._deliver_and_apply(r, fresh)
-            in_flight = len(self.pending)
-
-        losses = np.asarray(losses)             # (K, E) per-epoch means
-        client_loss = (losses * counts).sum(axis=1) \
-            / np.maximum(counts.sum(axis=1), 1.0)
-        return {"round": r,
-                "loss": float(np.average(client_loss, weights=weights))
-                if len(cohort) else float("nan"),
-                "rel_change": rel,
-                "participants": len(cohort),
-                "arrived": arrived,
-                "in_flight": in_flight}
-
-    # -- one round --------------------------------------------------------
-    def round(self, seed: Optional[int] = None) -> Dict[str, float]:
-        """Sample cohort -> E local epochs each -> staleness buffer ->
-        server-optimizer update on whatever arrived this round."""
-        r = self._round
-        round_key = jax.random.PRNGKey(seed if seed is not None else r)
-        cohort = self.scheduler.select(r)
-        if self.exec_mode == "vmap":
-            rec = self._round_vmap(r, round_key, cohort)
-        else:
-            rec = self._round_loop(r, round_key, cohort)
-        self.history.append(rec)
-        self._round += 1
-        return rec
-
-    def fit(self, *, seed: int = 0, verbose: bool = False) -> Pytree:
-        """Run ``fed.max_rounds`` rounds with FederatedTrainer's exact
-        per-round seed schedule (trajectory-comparable) and its stopping
-        criterion — only applied to rounds where an update landed."""
-        for e in range(self.fed.max_rounds):
-            rec = self.round(seed=seed * 100003 + e)
-            if verbose and e % 10 == 0:
-                print(f"[round {e:4d}] loss={rec['loss']:.4f} "
-                      f"rel={rec['rel_change']:.2e} "
-                      f"K={rec['participants']} "
-                      f"arrived={rec['arrived']}")
-            if rec["arrived"] and rec["rel_change"] < self.fed.rel_tol:
-                break
-        return self.params
+        super().__init__(loss_fn, init_params, clients, fed, rounds,
+                         batch_size=batch_size, exec_mode=exec_mode,
+                         loss_sum_fn=loss_sum_fn, message="delta")

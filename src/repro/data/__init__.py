@@ -1,4 +1,6 @@
 from repro.data.synthetic_lda import (  # noqa: F401
     SyntheticLDA, generate_lda_corpus, make_federated_topic_split)
 from repro.data.lm_data import synthetic_lm_batch, SyntheticLMStream  # noqa: F401
-from repro.data.federated_split import split_corpus_across_clients  # noqa: F401
+from repro.data.federated_split import (  # noqa: F401
+    PARTITIONERS, parse_partition_spec, partition_corpus,
+    split_corpus_across_clients)

@@ -1,26 +1,143 @@
 """Partition a corpus across L federated clients + per-round batch iterators.
 
-Supports the two regimes the paper evaluates:
-  * ``by_label`` — each client holds documents of distinct categories
-    (the §4.2 Semantic Scholar fields-of-study setup);
-  * ``iid`` / ``dirichlet`` — random or Dirichlet-skewed splits, the
-    standard federated-learning heterogeneity knob (beyond paper, used by
-    the heterogeneity ablations).
+The partitioner REGISTRY at the top is the scenario-diversity layer
+(DESIGN.md §3): every named partitioner maps ``(n_docs, num_clients,
+labels, seed, **kwargs)`` to disjoint per-client index arrays covering
+``[0, n_docs)``:
+
+  * ``iid`` — uniform random equal-size split (the homogeneous baseline);
+  * ``by_label`` (alias ``topic``) — each client holds documents of
+    distinct categories (the paper's §4.2 fields-of-study setup);
+  * ``dirichlet`` — per-label Dirichlet(alpha) allocation across clients
+    [Hsu et al. 2019]: alpha → 0 gives one-label clients, alpha → ∞
+    recovers ``iid`` (tested in tests/test_scenarios.py);
+  * ``quantity_skew`` — content-iid but per-client corpus SIZES drawn
+    from Dirichlet(alpha): the size-imbalance regime of the federated
+    short-text literature (arXiv:2205.13300).
+
+Specs are strings — ``"dirichlet(0.3)"``, ``"quantity_skew(0.5)"`` —
+parsed by :func:`parse_partition_spec` so configs/CLIs can carry them
+verbatim (``RoundConfig.partition``, ``simulate.py --partition``).
 
 The minibatch samplers at the bottom are the single source of truth for
 how a client draws data inside one federated round: ``sample_minibatch``
 is the Alg.-1 draw used by ``FederatedTrainer``, and ``round_minibatches``
-extends it to E local epochs for the round engine (``core/rounds.py``)
-with the FedAvgTrainer key schedule — epoch 0 reuses the round key, so
+extends it to E local epochs for the unified engine (``core/engine.py``)
+with the FedAvg key schedule — epoch 0 reuses the round key, so
 ``local_epochs=1`` draws the exact same minibatch Sync-Opt would.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+import re
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# partitioner registry
+# ---------------------------------------------------------------------------
+def _partition_iid(n_docs: int, num_clients: int, *, labels=None,
+                   seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(n_docs)
+    return [np.sort(part) for part in np.array_split(idx, num_clients)]
+
+
+def _partition_by_label(n_docs: int, num_clients: int, *, labels=None,
+                        seed: int = 0) -> List[np.ndarray]:
+    if labels is None:
+        raise ValueError("by_label split needs labels")
+    labels = np.asarray(labels)
+    uniq = np.unique(labels)
+    groups = [np.where(np.isin(labels, u))[0]
+              for u in np.array_split(uniq, num_clients)]
+    return [np.sort(g) for g in groups]
+
+
+def _partition_dirichlet(n_docs: int, num_clients: int, *, labels=None,
+                         seed: int = 0,
+                         alpha: float = 0.5) -> List[np.ndarray]:
+    if labels is None:
+        raise ValueError("dirichlet split needs labels")
+    if alpha <= 0:
+        raise ValueError(f"dirichlet alpha must be > 0, got {alpha}")
+    labels = np.asarray(labels)
+    rng = np.random.default_rng(seed)
+    rng.permutation(n_docs)     # keep the historical stream position
+    out = [[] for _ in range(num_clients)]
+    for u in np.unique(labels):
+        members = rng.permutation(np.where(labels == u)[0])
+        props = rng.dirichlet(np.full(num_clients, alpha))
+        cuts = (np.cumsum(props)[:-1] * len(members)).astype(int)
+        for c, part in enumerate(np.split(members, cuts)):
+            out[c].extend(part.tolist())
+    return [np.sort(np.array(o, dtype=np.int64)) for o in out]
+
+
+def _partition_quantity_skew(n_docs: int, num_clients: int, *, labels=None,
+                             seed: int = 0,
+                             alpha: float = 0.5) -> List[np.ndarray]:
+    """Content-iid split with Dirichlet(alpha)-skewed client sizes.
+
+    Every client is guaranteed at least one document (a zero-size client
+    has no round message and would break the Eq. (2) weighting), so the
+    skew operates on the remaining ``n_docs - num_clients`` documents.
+    """
+    if alpha <= 0:
+        raise ValueError(f"quantity_skew alpha must be > 0, got {alpha}")
+    if n_docs < num_clients:
+        raise ValueError(f"cannot give {num_clients} clients >=1 of "
+                         f"{n_docs} docs")
+    rng = np.random.default_rng(seed)
+    props = rng.dirichlet(np.full(num_clients, alpha))
+    spare = n_docs - num_clients
+    sizes = 1 + np.floor(props * spare).astype(np.int64)
+    # distribute the flooring remainder to the largest shares
+    for c in np.argsort(-props)[: n_docs - int(sizes.sum())]:
+        sizes[c] += 1
+    idx = rng.permutation(n_docs)
+    cuts = np.cumsum(sizes)[:-1]
+    return [np.sort(part) for part in np.split(idx, cuts)]
+
+
+PARTITIONERS: Dict[str, Callable[..., List[np.ndarray]]] = {
+    "iid": _partition_iid,
+    "by_label": _partition_by_label,
+    "topic": _partition_by_label,        # the paper's name for the regime
+    "dirichlet": _partition_dirichlet,
+    "quantity_skew": _partition_quantity_skew,
+}
+
+_SPEC_RE = re.compile(r"^\s*([a-z_]+)\s*(?:\(\s*([0-9.eE+-]+)?\s*\))?\s*$")
+
+
+def parse_partition_spec(spec: str) -> Tuple[str, Dict[str, float]]:
+    """``"dirichlet(0.3)"`` -> ``("dirichlet", {"alpha": 0.3})``.
+
+    A bare name parses to no kwargs (partitioner defaults apply); an
+    unknown name or malformed spec raises ``ValueError`` listing the
+    registry.
+    """
+    m = _SPEC_RE.match(spec or "")
+    if not m or m.group(1) not in PARTITIONERS:
+        raise ValueError(f"unknown partition spec {spec!r}; known: "
+                         f"{sorted(set(PARTITIONERS))} "
+                         "(optionally with '(alpha)')")
+    name, arg = m.group(1), m.group(2)
+    return name, ({"alpha": float(arg)} if arg is not None else {})
+
+
+def partition_corpus(n_docs: int, num_clients: int, spec: str = "iid", *,
+                     labels: Optional[Sequence[int]] = None,
+                     seed: int = 0) -> List[np.ndarray]:
+    """Registry front-door: spec string -> per-client doc index arrays."""
+    name, kw = parse_partition_spec(spec)
+    return PARTITIONERS[name](n_docs, num_clients, labels=labels, seed=seed,
+                              **kw)
 
 
 def split_corpus_across_clients(
@@ -32,32 +149,18 @@ def split_corpus_across_clients(
     dirichlet_alpha: float = 0.5,
     seed: int = 0,
 ) -> List[np.ndarray]:
-    """Return per-client index arrays covering [0, n_docs) disjointly."""
-    rng = np.random.default_rng(seed)
-    idx = rng.permutation(n_docs)
-    if mode == "iid":
-        return [np.sort(part) for part in np.array_split(idx, num_clients)]
-    if mode == "by_label":
-        if labels is None:
-            raise ValueError("by_label split needs labels")
-        labels = np.asarray(labels)
-        uniq = np.unique(labels)
-        groups = [np.where(np.isin(labels, u))[0]
-                  for u in np.array_split(uniq, num_clients)]
-        return [np.sort(g) for g in groups]
-    if mode == "dirichlet":
-        if labels is None:
-            raise ValueError("dirichlet split needs labels")
-        labels = np.asarray(labels)
-        out = [[] for _ in range(num_clients)]
-        for u in np.unique(labels):
-            members = rng.permutation(np.where(labels == u)[0])
-            props = rng.dirichlet(np.full(num_clients, dirichlet_alpha))
-            cuts = (np.cumsum(props)[:-1] * len(members)).astype(int)
-            for c, part in enumerate(np.split(members, cuts)):
-                out[c].extend(part.tolist())
-        return [np.sort(np.array(o, dtype=np.int64)) for o in out]
-    raise ValueError(f"unknown split mode {mode!r}")
+    """Pre-registry entry point, kept for API compatibility.
+
+    Delegates to the :data:`PARTITIONERS` registry; ``mode`` accepts any
+    registered name (``dirichlet_alpha`` feeds the alpha-parameterized
+    partitioners).
+    """
+    if mode not in PARTITIONERS:
+        raise ValueError(f"unknown split mode {mode!r}")
+    kw = {"alpha": dirichlet_alpha} if mode in ("dirichlet",
+                                                "quantity_skew") else {}
+    return PARTITIONERS[mode](n_docs, num_clients, labels=labels, seed=seed,
+                              **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -1,12 +1,13 @@
-"""Multi-round federated simulation driver (the round engine's CLI).
+"""Multi-round federated simulation driver (the unified engine's CLI).
 
-Runs :class:`repro.core.rounds.RoundEngine` over a synthetic LDA
-federation and reports training history plus held-out quality (ELBO
-perplexity, NPMI coherence, TSS against the generative ground truth).
-This is the scenario-diversity entry point: the flags map 1:1 onto
-:class:`repro.configs.base.RoundConfig` (see docs/rounds.md for the
-knob -> literature-regime table), and the all-defaults invocation is
-exactly the paper's Algorithm 1.
+Runs the unified :class:`repro.core.engine.FederationEngine` (via its
+``RoundEngine`` preset) over a synthetic LDA federation and reports
+training history plus held-out quality (ELBO perplexity, NPMI coherence,
+TSS against the generative ground truth).  This is the
+scenario-diversity entry point: the flags map 1:1 onto
+:class:`repro.configs.base.RoundConfig` (see docs/rounds.md and
+docs/scenarios.md for the knob -> literature-regime tables), and the
+all-defaults invocation is exactly the paper's Algorithm 1.
 
 Usage:
 
@@ -24,10 +25,18 @@ Usage:
         --num-clients 64 --clients-per-round 16 --exec-mode vmap
 
     # straggler federation: 30% of selected clients deliver 1-3 rounds
-    # late, stale updates discounted by 0.5 per round of age
+    # late, stale updates discounted by 0.5 per round of age (under
+    # --exec-mode vmap this runs the fused in-graph ring buffer)
     PYTHONPATH=src python -m repro.launch.simulate \\
         --straggler-prob 0.3 --max-staleness 3 --staleness-decay 0.5 \\
         --local-epochs 2 --out experiments/simulate.json
+
+    # non-IID scenario: pooled corpus re-partitioned with a Dirichlet
+    # label skew, heterogeneous per-client epoch counts, one client
+    # joining mid-training, local-DP message transform
+    PYTHONPATH=src python -m repro.launch.simulate \\
+        --partition 'dirichlet(0.3)' --hetero-epochs 1,2,4 \\
+        --join-rounds 0,0,0,0,20 --transforms dp --dp-noise 0.3
 
 Programmatic equivalent of the CLI:
 
@@ -52,11 +61,42 @@ import numpy as np
 
 from repro.configs.base import NTM, FederatedConfig, ModelConfig, RoundConfig
 from repro.core.aggregation import SERVER_OPTIMIZERS
+from repro.core.engine import TRANSFORMS
 from repro.core.ntm import prodlda
 from repro.core.protocol import ClientState
 from repro.core.rounds import RoundEngine, RoundScheduler
+from repro.data.federated_split import parse_partition_spec, partition_corpus
 from repro.data.synthetic_lda import generate_lda_corpus
 from repro.metrics import npmi_coherence, tss
+
+
+def _int_tuple(s: str):
+    return tuple(int(x) for x in s.split(",") if x.strip())
+
+
+def _str_tuple(s: str):
+    return tuple(x.strip() for x in s.split(",") if x.strip())
+
+
+def build_clients(syn, num_clients: int, partition: str,
+                  seed: int = 0):
+    """Turn the synthetic federation into ClientStates per the partition
+    spec: ``topic`` keeps the paper's natural per-node topic split; any
+    other registry spec pools the nodes' corpora and re-partitions the
+    documents (labels = each document's dominant ground-truth topic)."""
+    name, _ = parse_partition_spec(partition)
+    if name in ("topic", "by_label"):
+        return [ClientState(data={"bow": b}, num_docs=len(b))
+                for b in syn.node_bows]
+    bows = syn.concat_bows()
+    labels = np.concatenate(syn.node_thetas).argmax(axis=1)
+    parts = partition_corpus(len(bows), num_clients, partition,
+                             labels=labels, seed=seed)
+    if any(len(p) == 0 for p in parts):
+        raise ValueError(f"partition {partition!r} left a client with no "
+                         "documents; raise alpha or shrink num_clients")
+    return [ClientState(data={"bow": bows[p]}, num_docs=len(p))
+            for p in parts]
 
 
 def heldout_elbo_per_token(params, cfg: ModelConfig, val_bows: np.ndarray,
@@ -104,7 +144,10 @@ def run_simulation(args) -> dict:
         p, cfg, b, train=args.stochastic_loss)
     init = prodlda.init_params(jax.random.PRNGKey(args.seed), cfg)
     fed = FederatedConfig(num_clients=args.num_clients, learning_rate=args.lr,
-                          max_rounds=args.rounds, rel_tol=args.rel_tol)
+                          max_rounds=args.rounds, rel_tol=args.rel_tol,
+                          dp_noise_multiplier=args.dp_noise,
+                          dp_clip_norm=args.dp_clip,
+                          compression_topk=args.topk)
     rc = RoundConfig(exec_mode=args.exec_mode,
                      clients_per_round=args.clients_per_round,
                      sampling=args.sampling, sampling_seed=args.seed,
@@ -114,19 +157,28 @@ def run_simulation(args) -> dict:
                      server_momentum=args.server_momentum,
                      straggler_prob=args.straggler_prob,
                      max_staleness=args.max_staleness,
-                     staleness_decay=args.staleness_decay)
-    clients = [ClientState(data={"bow": b}, num_docs=len(b))
-               for b in syn.node_bows]
+                     staleness_decay=args.staleness_decay,
+                     transforms=_str_tuple(args.transforms),
+                     local_epochs_by_client=_int_tuple(args.hetero_epochs),
+                     client_join_round=_int_tuple(args.join_rounds),
+                     client_leave_round=_int_tuple(args.leave_rounds),
+                     partition=args.partition)
+    clients = build_clients(syn, args.num_clients, args.partition,
+                            seed=args.seed)
     eng = RoundEngine(loss_fn, init, clients, fed, rc,
                       batch_size=args.batch, loss_sum_fn=loss_sum_fn)
 
     sched: RoundScheduler = eng.scheduler
     print(f"simulating {fed.max_rounds} rounds [{eng.exec_mode}]: "
           f"K={sched.clients_per_round}/{len(clients)} ({rc.sampling}), "
-          f"E={rc.local_epochs}, server={rc.server_optimizer}"
+          f"E={rc.local_epochs}"
+          + (f" hetero={rc.local_epochs_by_client}"
+             if rc.local_epochs_by_client else "")
+          + f", partition={rc.partition}, server={rc.server_optimizer}"
           f"(lr={rc.server_lr}), "
           f"stragglers p={rc.straggler_prob} "
-          f"max_stale={rc.max_staleness}")
+          f"max_stale={rc.max_staleness}"
+          + (f", transforms={rc.transforms}" if rc.transforms else ""))
     t0 = time.time()
     params = eng.fit(seed=args.seed, verbose=True)
     wall = time.time() - t0
@@ -140,6 +192,11 @@ def run_simulation(args) -> dict:
                    "clients_per_round": sched.clients_per_round,
                    "sampling": rc.sampling,
                    "local_epochs": rc.local_epochs,
+                   "local_epochs_by_client": list(rc.local_epochs_by_client),
+                   "partition": rc.partition,
+                   "transforms": list(rc.transforms),
+                   "client_join_round": list(rc.client_join_round),
+                   "client_leave_round": list(rc.client_leave_round),
                    "server_optimizer": rc.server_optimizer,
                    "server_lr": rc.server_lr,
                    "straggler_prob": rc.straggler_prob,
@@ -194,6 +251,33 @@ def main(argv=None):
     ap.add_argument("--straggler-prob", type=float, default=0.0)
     ap.add_argument("--max-staleness", type=int, default=0)
     ap.add_argument("--staleness-decay", type=float, default=0.5)
+    ap.add_argument("--partition", default="topic",
+                    help="data partitioner spec (registry in "
+                         "data/federated_split.py): 'topic' = the paper's "
+                         "per-node topic split; 'iid', 'dirichlet(a)', "
+                         "'quantity_skew(a)' pool the corpus and "
+                         "re-partition it")
+    ap.add_argument("--transforms", default="",
+                    help="comma list of message transforms "
+                         f"({sorted(TRANSFORMS)}); loop-mode only")
+    ap.add_argument("--dp-noise", type=float, default=0.0,
+                    help="local-DP Gaussian noise multiplier (used by the "
+                         "'dp' transform)")
+    ap.add_argument("--dp-clip", type=float, default=1.0,
+                    help="local-DP clip norm")
+    ap.add_argument("--topk", type=float, default=0.0,
+                    help="top-k compression fraction (used by the 'topk' "
+                         "transform)")
+    ap.add_argument("--hetero-epochs", default="",
+                    help="comma list of per-client local-epoch counts, "
+                         "cycled over clients (device heterogeneity); "
+                         "empty = homogeneous --local-epochs")
+    ap.add_argument("--join-rounds", default="",
+                    help="comma list: round at which client l joins "
+                         "(cycled; empty = all present from round 0)")
+    ap.add_argument("--leave-rounds", default="",
+                    help="comma list: round at which client l leaves "
+                         "(0 = never; cycled)")
     ap.add_argument("--stochastic-loss", action="store_true",
                     help="train-mode ELBO (dropout + reparam noise)")
     ap.add_argument("--seed", type=int, default=0)

@@ -59,6 +59,40 @@ def rng():
     return np.random.default_rng(0)
 
 
+# ---------------------------------------------------------------------------
+# shared federated-engine test helpers (import via `from conftest import …`;
+# the single home for the loop==vmap deviation metric and the tiny
+# synthetic federation used across the equivalence/engine/scenario suites)
+# ---------------------------------------------------------------------------
+def max_param_dev(a, b) -> float:
+    """Max abs leafwise deviation between two param pytrees — the metric
+    behind every loop-vs-vmap acceptance bound."""
+    import jax
+    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def make_tiny_federation(vocab=64, topics=4, docs=(48, 48, 48), seed=0,
+                         name="tiny-fed"):
+    """Tiny synthetic federation (per-client poisson BoW corpora):
+    returns ``(cfg, loss, loss_sum, init, clients)``."""
+    import jax
+    from repro.configs.base import NTM, ModelConfig
+    from repro.core.ntm import prodlda
+    from repro.core.protocol import ClientState
+    cfg = ModelConfig(name=name, kind=NTM, vocab_size=vocab,
+                      num_topics=topics, ntm_hidden=(16, 16))
+    gen = np.random.default_rng(seed)
+    clients = [ClientState(
+        data={"bow": gen.poisson(0.3, (n, vocab)).astype(np.float32)},
+        num_docs=n) for n in docs]
+    loss = lambda p, b: prodlda.elbo_loss(p, cfg, b, train=False)  # noqa: E731,E501
+    loss_sum = lambda p, b: prodlda.elbo_loss_sum(p, cfg, b, train=False)  # noqa: E731,E501
+    init = prodlda.init_params(jax.random.PRNGKey(seed), cfg)
+    return cfg, loss, loss_sum, init, clients
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
 

@@ -160,6 +160,20 @@ def test_combine_arrivals_same_age_discount_survives_normalization():
                                    rtol=1e-6)
 
 
+def test_combine_arrivals_validates_inputs():
+    """REGRESSION (PR-3 satellite): decay outside [0, 1] used to silently
+    amplify/sign-flip stale deltas and an empty arrival list used to
+    surface as an opaque IndexError/NaN from the weighted mean — both
+    must be clear ValueErrors now."""
+    delta = {"w": jnp.ones((2,), jnp.float32)}
+    with pytest.raises(ValueError, match="staleness_decay"):
+        combine_arrivals([(1, delta, 1.0)], -0.5)
+    with pytest.raises(ValueError, match="staleness_decay"):
+        combine_arrivals([(1, delta, 1.0)], 1.01)
+    with pytest.raises(ValueError, match="at least one"):
+        combine_arrivals([], 0.5)
+
+
 def test_engine_refuses_unimplemented_privacy_features(setup):
     """Grad-level privacy knobs must not be silently dropped."""
     cfg, loss, init, clients = setup

@@ -1,0 +1,277 @@
+"""Non-IID scenario suite: partitioner registry + heterogeneity knobs.
+
+Partitioner statistics are checked with chi-square-style sanity bounds:
+per-client doc-count and label histograms must reflect the requested
+alpha/skew (extreme alpha -> extreme concentration, alpha -> inf ->
+the iid split), not exact distributional tests — the splits are seeded
+and deterministic, so loose bounds are stable.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import FederatedConfig, RoundConfig
+from repro.core.engine import RoundScheduler
+from repro.core.rounds import RoundEngine
+from repro.data.federated_split import (PARTITIONERS, parse_partition_spec,
+                                        partition_corpus,
+                                        split_corpus_across_clients)
+from conftest import make_tiny_federation, max_param_dev
+
+TOL = 1e-5
+
+
+def _label_props(parts, labels, num_labels):
+    """Per-client label-proportion histograms (rows sum to 1)."""
+    out = np.zeros((len(parts), num_labels))
+    for i, p in enumerate(parts):
+        if len(p):
+            out[i] = np.bincount(labels[p], minlength=num_labels) / len(p)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# partitioner registry
+# ---------------------------------------------------------------------------
+def test_parse_partition_spec():
+    assert parse_partition_spec("iid") == ("iid", {})
+    assert parse_partition_spec("dirichlet(0.3)") == ("dirichlet",
+                                                      {"alpha": 0.3})
+    assert parse_partition_spec("quantity_skew(2)") == ("quantity_skew",
+                                                        {"alpha": 2.0})
+    assert parse_partition_spec("topic") == ("topic", {})
+    for bad in ("", "nope", "dirichlet(x)", "iid)3("):
+        with pytest.raises(ValueError, match="partition spec"):
+            parse_partition_spec(bad)
+
+
+@pytest.mark.parametrize("spec", ["iid", "topic", "dirichlet(0.5)",
+                                  "quantity_skew(0.5)"])
+def test_partitioners_disjoint_and_covering(spec):
+    labels = np.repeat(np.arange(10), 100)
+    parts = partition_corpus(1000, 5, spec, labels=labels, seed=0)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 1000
+    assert len(np.unique(allidx)) == 1000
+
+
+def test_quantity_skew_doc_count_histograms():
+    """Low alpha -> heavy size imbalance; high alpha -> near-equal."""
+    skew = partition_corpus(2000, 8, "quantity_skew(0.1)", seed=0)
+    flat = partition_corpus(2000, 8, "quantity_skew(200)", seed=0)
+    s_sizes = np.array([len(p) for p in skew], float)
+    f_sizes = np.array([len(p) for p in flat], float)
+    assert all(s >= 1 for s in s_sizes)            # every client non-empty
+    assert s_sizes.max() / s_sizes.min() > 3.0     # visibly skewed
+    assert f_sizes.max() / f_sizes.min() < 1.5     # visibly flat
+    # chi-square-style bound vs the uniform expectation n/L
+    expect = 2000 / 8
+    chi_flat = float(((f_sizes - expect) ** 2 / expect).sum())
+    chi_skew = float(((s_sizes - expect) ** 2 / expect).sum())
+    assert chi_flat < 30.0 < chi_skew
+
+
+def test_dirichlet_topic_prior_histograms():
+    """Low alpha concentrates each client on few labels; alpha -> inf
+    recovers per-client label histograms close to the global mix."""
+    num_labels = 10
+    labels = np.repeat(np.arange(num_labels), 200)
+    conc = partition_corpus(2000, 5, "dirichlet(0.05)", labels=labels,
+                            seed=0)
+    flat = partition_corpus(2000, 5, "dirichlet(1e4)", labels=labels,
+                            seed=0)
+    p_conc = _label_props(conc, labels, num_labels)
+    p_flat = _label_props(flat, labels, num_labels)
+    global_mix = np.full(num_labels, 1.0 / num_labels)
+    # concentrated: most clients dominated by a handful of labels
+    assert np.median(p_conc.max(axis=1)) > 0.4
+    # flat: every client's histogram within a tight band of the mix
+    assert np.abs(p_flat - global_mix).max() < 0.05
+    # chi-square-style per-client statistic against the global mix
+    sizes = np.array([len(p) for p in flat])[:, None]
+    chi = ((p_flat - global_mix) ** 2 / global_mix * sizes).sum(axis=1)
+    assert chi.max() < 40.0
+
+
+def test_dirichlet_alpha_inf_approaches_iid():
+    """dirichlet(alpha -> inf) ~ iid: same label balance, similar sizes."""
+    num_labels = 8
+    labels = np.repeat(np.arange(num_labels), 150)
+    iid = partition_corpus(1200, 4, "iid", labels=labels, seed=0)
+    diri = partition_corpus(1200, 4, "dirichlet(1e5)", labels=labels,
+                            seed=0)
+    p_iid = _label_props(iid, labels, num_labels)
+    p_diri = _label_props(diri, labels, num_labels)
+    assert np.abs(p_diri - p_iid).max() < 0.06
+    sizes = np.array([len(p) for p in diri], float)
+    assert sizes.max() / sizes.min() < 1.25
+
+
+def test_partitioner_errors():
+    with pytest.raises(ValueError, match="alpha"):
+        partition_corpus(100, 4, "dirichlet(0)", labels=np.zeros(100, int))
+    with pytest.raises(ValueError, match="labels"):
+        partition_corpus(100, 4, "dirichlet(0.5)")
+    with pytest.raises(ValueError, match=">=1"):
+        partition_corpus(3, 4, "quantity_skew(0.5)")
+    # the legacy entry point still works and rides the registry
+    parts = split_corpus_across_clients(
+        100, 4, mode="quantity_skew", dirichlet_alpha=0.5, seed=0)
+    assert sum(len(p) for p in parts) == 100
+    with pytest.raises(ValueError, match="split mode"):
+        split_corpus_across_clients(100, 4, mode="nope")
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous local epochs
+# ---------------------------------------------------------------------------
+_setup = make_tiny_federation
+_max_dev = max_param_dev
+
+
+def test_hetero_epochs_cycled_equals_homogeneous():
+    """A single-entry schedule cycles to every client == the plain knob."""
+    cfg, loss, loss_sum, init, clients = _setup()
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=3,
+                          rel_tol=0.0)
+    a = RoundEngine(loss, init, clients, fed,
+                    RoundConfig(local_epochs_by_client=(2,)), batch_size=32)
+    b = RoundEngine(loss, init, clients, fed,
+                    RoundConfig(local_epochs=2), batch_size=32)
+    a.fit(seed=0)
+    b.fit(seed=0)
+    assert _max_dev(a.params, b.params) == 0.0
+
+
+def test_hetero_epochs_actually_heterogeneous():
+    """(1,3,2) epochs != homogeneous E=1 and != E=3 — the schedule has
+    real per-client effect, and loop == vmap on it."""
+    cfg, loss, loss_sum, init, clients = _setup()
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=4,
+                          rel_tol=0.0)
+    rc = RoundConfig(local_epochs_by_client=(1, 3, 2))
+    het = RoundEngine(loss, init, clients, fed, rc, batch_size=32)
+    het.fit(seed=0)
+    for e in (1, 3):
+        homog = RoundEngine(loss, init, clients, fed,
+                            RoundConfig(local_epochs=e), batch_size=32)
+        homog.fit(seed=0)
+        assert _max_dev(het.params, homog.params) > 0
+    vm = RoundEngine(loss, init, clients, fed, rc, batch_size=32,
+                     exec_mode="vmap", loss_sum_fn=loss_sum)
+    vm.fit(seed=0)
+    assert _max_dev(het.params, vm.params) < TOL
+
+
+def test_grad_preset_rejects_hetero_epochs():
+    from repro.core.engine import FederationEngine
+    from repro.core.protocol import _wrap_client_optimizer
+    from repro.optim import sgd
+    cfg, loss, loss_sum, init, clients = _setup()
+    with pytest.raises(ValueError, match="local_epochs"):
+        FederationEngine(loss, init, clients, FederatedConfig(num_clients=3),
+                         RoundConfig(local_epochs_by_client=(1, 2)),
+                         message="grad",
+                         server=_wrap_client_optimizer(sgd(1e-2)))
+
+
+# ---------------------------------------------------------------------------
+# mid-training client dropout / join
+# ---------------------------------------------------------------------------
+def test_scheduler_availability_windows():
+    s = RoundScheduler(4, 0, mode="uniform", seed=0,
+                       join_rounds=(0, 1, 2, 0), leave_rounds=(3, 0, 0, 2))
+    np.testing.assert_array_equal(s.active(0), [0, 3])
+    np.testing.assert_array_equal(s.active(1), [0, 1, 3])
+    np.testing.assert_array_equal(s.active(2), [0, 1, 2])
+    np.testing.assert_array_equal(s.active(3), [1, 2])
+    # selection only ever returns active clients
+    for r in range(6):
+        assert set(s.select(r)) <= set(s.active(r))
+
+
+def test_scheduler_availability_all_modes_deterministic():
+    for mode in RoundScheduler.MODES:
+        kw = {"weights": [1, 2, 3, 4, 5]} if mode == "weighted" else {}
+        a = RoundScheduler(5, 2, mode=mode, seed=3, join_rounds=(0, 0, 1),
+                           leave_rounds=(0, 4, 0), **kw)
+        b = RoundScheduler(5, 2, mode=mode, seed=3, join_rounds=(0, 0, 1),
+                           leave_rounds=(0, 4, 0), **kw)
+        for r in range(8):
+            np.testing.assert_array_equal(a.select(r), b.select(r))
+            assert set(a.select(r)) <= set(a.active(r))
+
+
+def test_scheduler_no_availability_is_bit_identical_to_legacy():
+    """With no join/leave the new scheduler must reproduce the exact
+    historical cohorts (the cross-PR trajectory anchor)."""
+    s = RoundScheduler(10, 3, mode="uniform", seed=7)
+    for r in range(10):
+        rng = np.random.default_rng([7, r])
+        legacy = np.sort(rng.choice(10, 3, replace=False))
+        np.testing.assert_array_equal(s.select(r), legacy)
+
+
+def test_dropout_join_engine_loop_vs_vmap():
+    """Cohorts shrink/grow mid-training; both exec modes agree, and an
+    all-absent round is a no-op, not a crash."""
+    cfg, loss, loss_sum, init, clients = _setup()
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=6,
+                          rel_tol=0.0)
+    # round 0: nobody yet (all join at 1); client 1 leaves at round 3;
+    # client 2 joins at round 2
+    rc = RoundConfig(client_join_round=(1, 1, 2),
+                     client_leave_round=(0, 3, 0))
+    loop = RoundEngine(loss, init, clients, fed, rc, batch_size=32,
+                       exec_mode="loop")
+    vm = RoundEngine(loss, init, clients, fed, rc, batch_size=32,
+                     exec_mode="vmap", loss_sum_fn=loss_sum)
+    for r in range(6):
+        ra = loop.round(seed=9 * 100003 + r)
+        rb = vm.round(seed=9 * 100003 + r)
+        assert ra["participants"] == rb["participants"]
+        assert _max_dev(loop.params, vm.params) < TOL
+    assert loop.history[0]["participants"] == 0
+    assert loop.history[2]["participants"] == 3
+    assert loop.history[3]["participants"] == 2
+    # the no-cohort round left the params untouched
+    assert loop.history[0]["rel_change"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# scenario benchmark + CLI integration
+# ---------------------------------------------------------------------------
+def test_bench_scenarios_quick_sweep(tmp_path):
+    """Acceptance artifact: the sweep runs sync + straggler + a non-IID
+    cell, reports the fused-ring ratio and a <1e-5 loop/vmap dev."""
+    from benchmarks.bench_scenarios import run
+    out = tmp_path / "scenarios.json"
+    payload = run(str(out), vocab=200, topics=5, hidden=32, num_clients=4,
+                  docs_per_client=40, batch=16, rounds=2,
+                  scenarios=("sync", "straggler", "dirichlet-noniid"))
+    assert out.exists()
+    assert len(payload["results"]) == 3
+    assert payload["straggler_over_sync_vmap"] is not None
+    for rec in payload["results"]:
+        assert np.isfinite(rec["final_loss"])
+        if "max_param_dev" in rec:
+            assert rec["max_param_dev"] < 1e-5
+
+
+def test_simulate_cli_scenario_flags(tmp_path):
+    """End-to-end: partition + transforms + hetero epochs through the
+    simulate CLI entry point."""
+    from repro.launch.simulate import main
+    out = tmp_path / "sim.json"
+    res = main(["--vocab", "120", "--topics", "4", "--hidden", "16",
+                "--num-clients", "3", "--docs-per-node", "40",
+                "--val-docs", "10", "--rounds", "2", "--batch", "16",
+                "--partition", "dirichlet(0.5)", "--transforms", "dp",
+                # clip/noise sized for DELTA messages (magnitude ~ lr*|G|),
+                # not raw gradients — 0.2*1.0 noise would swamp them
+                "--dp-noise", "0.1", "--dp-clip", "0.05",
+                "--hetero-epochs", "1,2",
+                "--out", str(out)])
+    assert out.exists()
+    assert res["config"]["partition"] == "dirichlet(0.5)"
+    assert res["config"]["transforms"] == ["dp"]
+    assert np.isfinite(res["final_loss"])

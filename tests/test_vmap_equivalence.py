@@ -9,7 +9,10 @@ one.  Two layers:
 
   * a deterministic regime grid that always runs (partial participation,
     multi-epoch clients, ragged corpora with padding+masking, staleness
-    buffer, adaptive server optimizers, weighted sampling);
+    buffer — under vmap the fused IN-GRAPH ring buffer, checked against
+    the loop-mode ``combine_arrivals`` reference — adaptive server
+    optimizers, weighted sampling, heterogeneous per-client epochs,
+    mid-training dropout/join);
   * a hypothesis fuzz over random (L, K, E, vocab, topics, staleness,
     corpus-size) tuples (skipped when the optional [test] extra is not
     installed, like the other property suites).
@@ -28,28 +31,12 @@ from repro.core.ntm import prodlda
 from repro.core.protocol import ClientState, FederatedTrainer, FedAvgTrainer
 from repro.core.rounds import RoundEngine
 from repro.data.federated_split import stacked_round_batches
+from conftest import make_tiny_federation, max_param_dev
 
 TOL = 1e-5
-
-
-def _max_dev(a, b) -> float:
-    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
-               for x, y in zip(jax.tree_util.tree_leaves(a),
-                               jax.tree_util.tree_leaves(b)))
-
-
-def _make_setup(vocab=64, topics=4, docs=(48, 48, 48), seed=0):
-    """Tiny synthetic federation: per-client poisson BoW corpora."""
-    cfg = ModelConfig(name="vmap-eq", kind=NTM, vocab_size=vocab,
-                      num_topics=topics, ntm_hidden=(16, 16))
-    rng = np.random.default_rng(seed)
-    clients = [ClientState(
-        data={"bow": rng.poisson(0.3, (n, vocab)).astype(np.float32)},
-        num_docs=n) for n in docs]
-    loss = lambda p, b: prodlda.elbo_loss(p, cfg, b, train=False)  # noqa: E731,E501
-    loss_sum = lambda p, b: prodlda.elbo_loss_sum(p, cfg, b, train=False)  # noqa: E731,E501
-    init = prodlda.init_params(jax.random.PRNGKey(seed), cfg)
-    return cfg, loss, loss_sum, init, clients
+# single home for the deviation metric + tiny federation: tests/conftest.py
+_max_dev = max_param_dev
+_make_setup = make_tiny_federation
 
 
 def _assert_trajectories_match(loss, loss_sum, init, clients, fed, rc, *,
@@ -93,6 +80,17 @@ REGIMES = {
     "staleness-partial": dict(clients_per_round=2, local_epochs=2,
                               straggler_prob=0.5, max_staleness=2,
                               staleness_decay=0.25),
+    # PR 3 scenario knobs: under vmap the staleness regimes above now run
+    # the fused in-graph ring buffer, so this grid doubles as the
+    # fused-vs-combine_arrivals acceptance check
+    "staleness-odd-decay": dict(straggler_prob=0.6, max_staleness=3,
+                                staleness_decay=0.3),
+    "hetero-epochs": dict(local_epochs_by_client=(1, 3, 2)),
+    "hetero-epochs-staleness": dict(clients_per_round=2,
+                                    local_epochs_by_client=(2, 1, 3),
+                                    straggler_prob=0.5, max_staleness=2),
+    "dropout-join": dict(client_join_round=(0, 0, 2),
+                         client_leave_round=(0, 3, 0)),
 }
 
 
