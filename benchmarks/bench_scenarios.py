@@ -2,18 +2,22 @@
 
 One synthetic federation, many regimes: for each named scenario
 (partitioner x participation x staleness x heterogeneity x transforms)
-the engine is stepped in its natural execution mode(s) and the sweep
-records steady-state seconds/round, the loop-vs-vmap speedup, the
-max loop/vmap parameter deviation (the correctness tripwire), and the
-final training loss.
+the engine is stepped in BOTH execution modes and the sweep records
+steady-state seconds/round, the loop-vs-vmap speedup, the max loop/vmap
+parameter deviation (the correctness tripwire — since PR 4 that
+includes the dp/topk/secure transform cells, which run IN-GRAPH on the
+vmap path), the vmap trace count (the fixed-K retrace-free contract:
+every scenario must compile its fused graph exactly once, including
+``dropout-join``'s churning cohort sizes), and the final training loss.
 
-The HEADLINE measurement is the fused straggler path: with the in-graph
-ring buffer (DESIGN.md §4) the straggler regime runs inside the same
-jitted graph as the synchronous one, so its vmap round time must sit
-within 1.5x of the synchronous vmap round at K=16 (the host-side
-pending-list path it replaces paid a device->host transfer of every
-cohort delta plus a host-side combine, every round).  The ratio is
-written as ``straggler_over_sync_vmap`` in the JSON payload.
+Two headline measurements:
+  * ``straggler_over_sync_vmap`` — the fused in-graph ring buffer
+    (DESIGN.md §4): the straggler vmap round must sit within 1.5x of
+    the synchronous vmap round at K=16;
+  * ``secure_mask_sum_abs`` — the secure transform's pairwise masks
+    summed over the client axis: BITWISE zero (exactly 0.0) by the
+    dyadic-grid construction of ``core/transforms.py``; any non-zero
+    value is a broken privacy invariant, hard-failed in CI.
 
     PYTHONPATH=src python -m benchmarks.bench_scenarios \\
         --out experiments/bench_scenarios.json
@@ -21,9 +25,14 @@ written as ``straggler_over_sync_vmap`` in the JSON payload.
     # CI smoke: tiny federation, sync + straggler + one non-IID cell
     PYTHONPATH=src python -m benchmarks.bench_scenarios --quick
 
+    # CI privacy smoke: add the in-graph transform cells
+    PYTHONPATH=src python -m benchmarks.bench_scenarios --quick \\
+        --transforms dp,topk
+
 JSON layout: {"setup": {...}, "straggler_over_sync_vmap": float,
-"results": [{"scenario", "partition", "loop_s_per_round",
-"vmap_s_per_round", "speedup", "max_param_dev", "final_loss", ...}]}.
+"secure_mask_sum_abs": float, "results": [{"scenario", "partition",
+"loop_s_per_round", "vmap_s_per_round", "speedup", "max_param_dev",
+"vmap_traces", "final_loss", ...}]}.
 """
 from __future__ import annotations
 
@@ -33,11 +42,13 @@ import os
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import NTM, FederatedConfig, ModelConfig, RoundConfig
 from repro.core.ntm import prodlda
 from repro.core.rounds import RoundEngine
+from repro.core.transforms import pairwise_mask_stack
 from repro.data.synthetic_lda import generate_lda_corpus
 from repro.launch.simulate import build_clients
 
@@ -64,7 +75,24 @@ def scenario_grid(k: int, rounds_for_leave: int):
         "dropout-join": ("topic", dict(client_join_round=join,
                                        client_leave_round=leave)),
         "dp-transform": ("topic", dict(transforms=("dp",))),
+        "topk-transform": ("topic", dict(transforms=("topk",))),
+        "secure-transform": ("topic", dict(transforms=("secure",))),
+        "dp-straggler": ("topic", dict(transforms=("dp",),
+                                       straggler_prob=0.3, max_staleness=3,
+                                       staleness_decay=0.5)),
     }
+
+
+def secure_mask_cancellation(num_clients: int, seed: int = 0) -> float:
+    """Max |sum over clients| of the secure transform's stacked pairwise
+    masks — bitwise 0.0 by construction (``core/transforms.py``); any
+    other value means the privacy invariant broke.  Probed on a small
+    mixed-shape template; the property is shape-independent."""
+    tmpl = {"w": jnp.zeros((13, 7), jnp.float32),
+            "b": jnp.zeros((11,), jnp.float32)}
+    stack = pairwise_mask_stack(jax.random.PRNGKey(seed), tmpl, num_clients)
+    return max(float(np.abs(np.asarray(jnp.sum(leaf, axis=0))).max())
+               for leaf in jax.tree_util.tree_leaves(stack))
 
 
 def _max_dev(a, b) -> float:
@@ -107,47 +135,58 @@ def run(out_path="experiments/bench_scenarios.json", *, vocab=1000,
                           max_rounds=warmup + rounds, rel_tol=0.0)
     grid = scenario_grid(num_clients, warmup + rounds)
     if scenarios:
+        unknown = sorted(set(scenarios) - set(grid))
+        if unknown:
+            raise ValueError(f"unknown scenario(s) {unknown}; known: "
+                             f"{sorted(grid)} — a typo must not silently "
+                             "shrink the sweep")
         grid = {k: v for k, v in grid.items() if k in scenarios}
 
     results = []
     for name, (partition, rc_kw) in grid.items():
         rc_kw = dict(rc_kw, sampling_seed=seed, partition=partition)
-        if "dp" in rc_kw.get("transforms", ()):
+        tnames = rc_kw.get("transforms", ())
+        if tnames:
+            # clip/noise/frac sized for DELTA messages (magnitude ~
+            # lr * |G|), not raw gradients
             sfed = FederatedConfig(
                 num_clients=num_clients, learning_rate=lr,
                 max_rounds=warmup + rounds, rel_tol=0.0,
-                dp_noise_multiplier=0.3, dp_clip_norm=1.0)
+                dp_noise_multiplier=0.3 if "dp" in tnames else 0.0,
+                dp_clip_norm=0.05,
+                compression_topk=0.25 if "topk" in tnames else 0.0)
         else:
             sfed = fed
         rc = RoundConfig(**rc_kw)
         clients = build_clients(syn, num_clients, partition, seed=seed)
-        loop_only = bool(rc.transforms)   # the vmap path refuses transforms
 
         loop = RoundEngine(loss_fn, init, clients, sfed, rc,
                            batch_size=batch, exec_mode="loop",
                            loss_sum_fn=loss_sum_fn)
         t_loop = _time_rounds(loop, warmup=warmup, rounds=rounds, seed=seed)
+        # since PR 4 every scenario — transforms included — rides the
+        # fused vmap path; the loop run above is its reference
+        vm = RoundEngine(loss_fn, init, clients, sfed, rc,
+                         batch_size=batch, exec_mode="vmap",
+                         loss_sum_fn=loss_sum_fn)
+        t_vmap = _time_rounds(vm, warmup=warmup, rounds=rounds, seed=seed)
         rec = {"scenario": name, "partition": partition,
                "loop_s_per_round": t_loop,
+               "vmap_s_per_round": t_vmap,
+               "speedup": t_loop / max(t_vmap, 1e-12),
+               "max_param_dev": _max_dev(loop.params, vm.params),
+               # fixed-K contract: ONE compile per fused graph per run
+               # (dropout-join's churning cohort sizes included)
+               "vmap_traces": sum(vm.trace_counts.values()),
                "client_docs_min": min(c.num_docs for c in clients),
                "client_docs_max": max(c.num_docs for c in clients),
                "final_loss": loop.history[-1]["loss"]}
-        if not loop_only:
-            vm = RoundEngine(loss_fn, init, clients, sfed, rc,
-                             batch_size=batch, exec_mode="vmap",
-                             loss_sum_fn=loss_sum_fn)
-            t_vmap = _time_rounds(vm, warmup=warmup, rounds=rounds,
-                                  seed=seed)
-            rec.update(vmap_s_per_round=t_vmap,
-                       speedup=t_loop / max(t_vmap, 1e-12),
-                       max_param_dev=_max_dev(loop.params, vm.params))
         results.append(rec)
-        msg = f"{name:18s} loop={t_loop * 1e3:8.1f}ms/round"
-        if not loop_only:
-            msg += (f" vmap={rec['vmap_s_per_round'] * 1e3:8.1f}ms/round "
-                    f"speedup={rec['speedup']:5.1f}x "
-                    f"dev={rec['max_param_dev']:.1e}")
-        print(msg)
+        print(f"{name:18s} loop={t_loop * 1e3:8.1f}ms/round "
+              f"vmap={t_vmap * 1e3:8.1f}ms/round "
+              f"speedup={rec['speedup']:5.1f}x "
+              f"dev={rec['max_param_dev']:.1e} "
+              f"traces={rec['vmap_traces']}")
 
     by_name = {r["scenario"]: r for r in results}
     ratio = None
@@ -158,6 +197,16 @@ def run(out_path="experiments/bench_scenarios.json", *, vocab=1000,
         print(f"fused straggler ring buffer: {ratio:.2f}x the synchronous "
               f"vmap round (acceptance <= 1.5x at K=16)")
 
+    # privacy invariant probe: the secure masks must sum to BITWISE zero
+    # over the client axis at this federation's K (and a couple more;
+    # clipped to the transform's 1024-client population cap)
+    probe_ks = {k for k in (2, 3, num_clients, 2 * num_clients)
+                if k <= 1024}
+    mask_sum = max(secure_mask_cancellation(k, seed=seed)
+                   for k in sorted(probe_ks))
+    print(f"secure-mask cancellation: max |sum_l mask_l| = {mask_sum!r} "
+          f"(must be exactly 0.0)")
+
     payload = {"setup": {"vocab": vocab, "topics": topics, "hidden": hidden,
                          "num_clients": num_clients,
                          "docs_per_client": docs_per_client, "batch": batch,
@@ -165,6 +214,7 @@ def run(out_path="experiments/bench_scenarios.json", *, vocab=1000,
                          "timed_rounds": rounds,
                          "backend": jax.default_backend()},
                "straggler_over_sync_vmap": ratio,
+               "secure_mask_sum_abs": mask_sum,
                "results": results}
     if out_path:
         os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
@@ -188,16 +238,27 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scenarios", default="",
                     help="comma list to restrict the scenario grid")
+    ap.add_argument("--transforms", default="",
+                    help="comma list of transform names (dp, topk, "
+                         "secure): adds the matching '<name>-transform' "
+                         "cells to the selected scenario set — the CI "
+                         "privacy-smoke entry point")
     ap.add_argument("--quick", action="store_true",
                     help="tiny federation, sync+straggler+one non-IID "
                          "cell — CI smoke for the fused ring buffer")
     a = ap.parse_args(argv)
     wanted = tuple(s for s in a.scenarios.split(",") if s) or None
+    extra = tuple(f"{t.strip()}-transform"
+                  for t in a.transforms.split(",") if t.strip())
     if a.quick:
+        base = wanted or ("sync", "straggler", "dirichlet-noniid")
         return run(a.out, vocab=200, topics=5, hidden=32, num_clients=4,
                    docs_per_client=40, batch=16, rounds=2, seed=a.seed,
-                   scenarios=wanted or ("sync", "straggler",
-                                        "dirichlet-noniid"))
+                   scenarios=tuple(base) + extra)
+    if extra and wanted is not None:
+        wanted = wanted + extra
+    # (no --scenarios: wanted stays None = the FULL grid, which already
+    # contains every *-transform cell — --transforms must never shrink it)
     return run(a.out, vocab=a.vocab, topics=a.topics, hidden=a.hidden,
                num_clients=a.num_clients,
                docs_per_client=a.docs_per_client, batch=a.batch,

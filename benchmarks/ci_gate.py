@@ -1,0 +1,121 @@
+"""CI perf/regression gate for the scenario-suite bench payloads.
+
+Compares a freshly-produced ``bench_scenarios`` JSON against the
+committed baseline (``benchmarks/baselines/BENCH_scenarios_ci.json``)
+and enforces a two-tier policy:
+
+  * HARD FAIL (exit 1) — correctness/privacy invariants.  These do not
+    drift with runner noise, so any violation is a real regression:
+      - ``max_param_dev >= 1e-5`` in any scenario (loop/vmap parity,
+        transforms included);
+      - ``secure_mask_sum_abs != 0.0`` (the bitwise secure-mask
+        cancellation invariant);
+      - ``vmap_traces > 1`` for any scenario (the fixed-K retrace-free
+        contract — a second trace means the fused path silently
+        degenerated to per-cohort-size recompiles);
+      - a scenario present in the baseline missing from the current
+        payload (a silently-shrunk grid reads as "all green").
+  * WARN ONLY (``::warning::`` annotations, exit 0) — timing trends.
+    Shared CI runners are noisy, so these inform rather than block:
+      - ``straggler_over_sync_vmap`` worsened beyond the allowed ratio
+        over baseline;
+      - any scenario's vmap seconds/round or loop/vmap speedup worsened
+        beyond the allowed ratio.
+
+Usage (what .github/workflows/ci.yml runs):
+
+    python -m benchmarks.ci_gate experiments/bench_scenarios_ci.json \\
+        benchmarks/baselines/BENCH_scenarios_ci.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEV_BOUND = 1e-5
+TIMING_SLACK = 2.0       # warn when current > slack * baseline
+
+
+def _warn(msg: str) -> None:
+    # GitHub Actions annotation; plain stderr elsewhere
+    print(f"::warning::{msg}")
+
+
+def gate(current: dict, baseline: dict, *,
+         dev_bound: float = DEV_BOUND,
+         timing_slack: float = TIMING_SLACK) -> int:
+    failures = []
+    cur = {r["scenario"]: r for r in current.get("results", [])}
+    base = {r["scenario"]: r for r in baseline.get("results", [])}
+
+    # ---- hard gates: correctness / privacy / retrace contract -----------
+    for name in base:
+        if name not in cur:
+            failures.append(f"scenario {name!r} present in baseline but "
+                            "missing from the current payload")
+    for name, r in cur.items():
+        dev = r.get("max_param_dev")
+        if dev is None or not dev < dev_bound:
+            failures.append(f"{name}: max_param_dev={dev!r} (bound "
+                            f"{dev_bound:g}) — loop/vmap parity broke")
+        traces = r.get("vmap_traces")
+        if traces is not None and traces > 1:
+            failures.append(f"{name}: vmap_traces={traces} — the fixed-K "
+                            "fused graph retraced (contract: exactly one "
+                            "compile per run)")
+    mask_sum = current.get("secure_mask_sum_abs")
+    if mask_sum != 0.0:
+        failures.append(f"secure_mask_sum_abs={mask_sum!r} — secure-mask "
+                        "cancellation must be bitwise exact (0.0)")
+
+    # ---- warn-only trend gates: timings -------------------------------
+    ratio, base_ratio = (current.get("straggler_over_sync_vmap"),
+                         baseline.get("straggler_over_sync_vmap"))
+    if ratio is not None and base_ratio:
+        if ratio > timing_slack * base_ratio:
+            _warn(f"straggler_over_sync_vmap {ratio:.2f} vs baseline "
+                  f"{base_ratio:.2f} (> {timing_slack:g}x) — the fused "
+                  "ring buffer may be paying host round-trips again")
+    for name, r in cur.items():
+        b = base.get(name)
+        if not b:
+            continue
+        for key, worse_is in (("vmap_s_per_round", "higher"),
+                              ("speedup", "lower")):
+            c_v, b_v = r.get(key), b.get(key)
+            if not (c_v and b_v):
+                continue
+            degraded = (c_v > timing_slack * b_v if worse_is == "higher"
+                        else c_v * timing_slack < b_v)
+            if degraded:
+                _warn(f"{name}: {key} {c_v:.4g} vs baseline {b_v:.4g} "
+                      f"(beyond {timing_slack:g}x slack)")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print(f"ci_gate: {len(cur)} scenarios pass "
+          f"(dev<{dev_bound:g}, secure masks bitwise-cancelled, "
+          "single-trace fixed-K); timing deltas warn-only")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="freshly produced bench payload")
+    ap.add_argument("baseline", help="committed BENCH_*.json baseline")
+    ap.add_argument("--dev-bound", type=float, default=DEV_BOUND)
+    ap.add_argument("--timing-slack", type=float, default=TIMING_SLACK)
+    a = ap.parse_args(argv)
+    with open(a.current) as f:
+        current = json.load(f)
+    with open(a.baseline) as f:
+        baseline = json.load(f)
+    return gate(current, baseline, dev_bound=a.dev_bound,
+                timing_slack=a.timing_slack)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

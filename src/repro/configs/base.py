@@ -319,13 +319,22 @@ class RoundConfig:
     staleness_decay: float = 0.5
     # message transforms applied to each client's round message (delta or
     # grad) before the Eq. (2) combine — names from
-    # ``core.engine.TRANSFORMS``: "dp" (clip + Gaussian local DP, driven
-    # by FederatedConfig.dp_*), "topk" (top-k sparsification + error
-    # feedback, FederatedConfig.compression_topk), "secure" (pairwise
-    # cancelling masks; requires synchronous full participation).
-    # Loop-mode only; the vmap path refuses transforms rather than
-    # silently dropping them.
+    # ``core.transforms.TRANSFORMS``: "dp" (clip + Gaussian local DP,
+    # driven by FederatedConfig.dp_*), "topk" (top-k sparsification +
+    # error feedback, FederatedConfig.compression_topk), "secure"
+    # (pairwise cancelling masks, bitwise-exact sum-to-zero; requires
+    # synchronous full participation).  Both exec modes apply them: the
+    # loop path per client on the host, the vmap path as vectorized ops
+    # INSIDE the fused jitted graph (loop/vmap parity <1e-5, tested).
     transforms: Tuple[str, ...] = ()
+    # fixed-K cohort stacking (vmap mode): pad cohorts shrunken by
+    # mid-training dropout/join with zero-weight rows up to
+    # clients_per_round, so every round — including empty ones under the
+    # straggler buffer — reuses ONE compiled graph instead of retracing
+    # per distinct cohort size.  Zero-weight rows are absent from the
+    # combine, the ring buffer and all transform state.  Disable only to
+    # reproduce the pre-PR-4 retrace-per-size behavior.
+    pad_cohorts: bool = True
     # device heterogeneity: per-client local-epoch counts (client l runs
     # local_epochs_by_client[l % len] epochs).  () = homogeneous
     # ``local_epochs``.  Under vmap the cohort is stacked to the max and

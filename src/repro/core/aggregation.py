@@ -55,17 +55,27 @@ def aggregate_stacked(tree: Pytree, weights) -> Pytree:
 
     Every leaf is ``(K, ...)`` — one slice per cohort member — and
     ``weights`` is ``(K,)``.  Used by the vmap execution path
-    (``core/rounds.py``): the per-client deltas/grads never leave the
+    (``core/engine.py``): the per-client deltas/grads never leave the
     device, the weighted mean happens inside the same jitted graph that
-    produced them.  A zero weight drops that client's contribution
-    (masked non-arrivals), matching ``aggregate_host`` over the survivors.
+    produced them.
+
+    Zero-weight rows are ABSENT, not merely down-weighted: their values
+    are ``where``-masked out before the multiply, so the fixed-K padding
+    rows of DESIGN.md §4 — whose local-update output on an all-zero
+    batch is unconstrained garbage, possibly non-finite — can never
+    poison the sum (``0 * nan`` is ``nan``; ``where`` is not), and the
+    result matches ``aggregate_host`` over the positive-weight
+    survivors.  An ALL-zero weight vector yields a zero combine (guarded
+    denominator), never 0/0 — callers gate the server update on
+    ``weights.sum() > 0``.
     """
     w = jnp.asarray(weights, jnp.float32)
     total = jnp.maximum(jnp.sum(w), 1e-12)
 
     def combine(leaf):
         wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
-        return jnp.sum(wb * leaf.astype(jnp.float32), axis=0) / total
+        contrib = jnp.where(wb > 0.0, leaf.astype(jnp.float32), 0.0)
+        return jnp.sum(wb * contrib, axis=0) / total
 
     return _tmap(combine, tree)
 

@@ -32,14 +32,25 @@ duplicated per class:
     the loop-mode reference the fused buffer is tested against
     (tests/test_vmap_equivalence.py, tests/test_engine_unified.py).
 
-Message transforms (the previously-orphaned privacy/compression ops in
-``core/aggregation.py``) plug into the transform stage by name:
-``"dp"`` (clip + Gaussian local DP), ``"topk"`` (top-k sparsification
-with error feedback), ``"secure"`` (pairwise cancelling masks).  They
-apply to whatever the engine's message kind is — gradients for the
-Algorithm-1 preset (byte-identical to the pre-refactor trainer), deltas
-for round engines — and are loop-mode only: the vmap path refuses them
-rather than silently dropping a privacy guarantee.
+Message transforms (``core/transforms.py`` registry) plug into the
+transform stage by name: ``"dp"`` (clip + Gaussian local DP), ``"topk"``
+(top-k sparsification with error feedback), ``"secure"`` (pairwise
+cancelling masks, bitwise-exact sum-to-zero).  They apply to whatever
+the engine's message kind is — gradients for the Algorithm-1 preset,
+deltas for round engines — and run on BOTH execution paths: the loop
+mode applies them per client on the host, the vmap mode applies the
+stacked implementations INSIDE the fused graph (same keys, same state
+semantics; loop/vmap parity <1e-5 is a tested invariant).
+
+Cohorts on the vmap path are padded to a FIXED K (the scheduler's
+``clients_per_round``) with zero-weight rows, so mid-training
+dropout/join churn and shrunken active sets reuse ONE compiled graph
+instead of retracing per distinct cohort size (``trace_counts`` records
+every trace; tests pin it to exactly one).  Zero-weight rows are
+treated as absent everywhere: they are re-zeroed after the transform
+stage, contribute nothing to the Eq. (2) combine (numerator or
+denominator), never enter the straggler ring, and never update
+transform state.
 
 Scenario diversity (per-client heterogeneous local epochs, mid-training
 client dropout/join) threads through ``RoundConfig`` — see
@@ -48,7 +59,7 @@ docs/scenarios.md for the knob -> regime map.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +67,12 @@ import numpy as np
 
 from repro.configs.base import FederatedConfig, RoundConfig
 from repro.core import aggregation as agg
+# the transform registry lives in core/transforms.py since PR 4; the
+# names are re-exported here because this module is the historical
+# import surface (launch/simulate.py, tests)
+from repro.core.transforms import (  # noqa: F401
+    TRANSFORMS, MessageTransform, StackedTransformCtx, TransformCtx,
+    build_transforms, pairwise_mask_stack)
 from repro.data.federated_split import (round_minibatches, sample_minibatch,
                                         stacked_round_batches)
 from repro.optim.optimizers import global_norm
@@ -146,15 +163,13 @@ def masked_mean_loss(loss_fn, loss_sum_fn=None):
 
 
 def _check_vmap_preconditions(fed: FederatedConfig, clients, batch_size: int,
-                              loss_sum_fn, *, what: str,
-                              transforms: Sequence[str] = ()) -> None:
-    """The stacked path's constructor-time guards (never silent)."""
-    if (fed.dp_noise_multiplier > 0 or fed.compression_topk > 0
-            or fed.secure_aggregation or transforms):
-        raise NotImplementedError(
-            f"{what} exec_mode='vmap' does not apply message transforms "
-            "(dp_noise_multiplier / compression_topk / secure_aggregation "
-            "/ RoundConfig.transforms); use exec_mode='loop'")
+                              loss_sum_fn, *, what: str) -> None:
+    """The stacked path's constructor-time guards (never silent).
+
+    Message transforms are NOT refused here anymore: since PR 4 the
+    ``dp``/``topk``/``secure`` registry entries carry stacked in-graph
+    implementations (core/transforms.py) and ride the fused path.
+    """
     if loss_sum_fn is None and any(c.num_docs < batch_size for c in clients):
         raise ValueError(
             f"{what} exec_mode='vmap' with ragged clients (num_docs < "
@@ -288,6 +303,13 @@ def combine_arrivals(arrivals: Sequence[Any],
     outside [0, 1] amplifies or sign-flips stale updates) or an opaque
     IndexError from the empty weighted mean.
 
+    Zero-weight arrivals are treated as ABSENT, mirroring the fused
+    path's fixed-K padding contract: a padded row must not advance any
+    staleness bookkeeping, weigh into the combine, or turn the weighted
+    mean into 0/0 — and a round whose arrivals are ALL zero-weight is an
+    empty round (same ``ValueError`` as an empty list: the caller must
+    skip the combine, not average nothing).
+
     INVARIANT: the ``staleness_decay ** age`` discount scales the DELTA,
     not the Eq. (2) weight — a weight-only discount would cancel in the
     weighted-mean normalization whenever a round's arrivals all share one
@@ -300,11 +322,12 @@ def combine_arrivals(arrivals: Sequence[Any],
         raise ValueError(f"staleness_decay must be in [0, 1], got "
                          f"{staleness_decay!r} (values outside amplify or "
                          "sign-flip stale deltas)")
-    arrivals = list(arrivals)
+    arrivals = [a for a in arrivals if a[2] > 0]
     if not arrivals:
         raise ValueError("combine_arrivals needs at least one (age, delta, "
-                         "weight) arrival; an all-straggler round must skip "
-                         "the combine, not average nothing")
+                         "weight) arrival with weight > 0; an all-straggler "
+                         "(or all-padded) round must skip the combine, not "
+                         "average nothing")
     scaled = [d if age == 0 else jax.tree_util.tree_map(
         lambda x: x * staleness_decay ** age, d)
         for age, d, _ in arrivals]
@@ -312,73 +335,10 @@ def combine_arrivals(arrivals: Sequence[Any],
 
 
 # ---------------------------------------------------------------------------
-# stage 3: message transforms (privacy / compression)
+# stage 3: message transforms — registry + both (loop/stacked) application
+# modes live in core/transforms.py; TRANSFORMS / build_transforms /
+# TransformCtx are re-exported above for the historical import surface
 # ---------------------------------------------------------------------------
-@dataclass
-class TransformCtx:
-    """Per-client call context handed to every message transform."""
-    round_key: Any          # the round's shared key (secure-mask PRG seed)
-    client_rng: Any         # fold_in(round_key, client_id) — the draw key
-    client_id: int
-    num_clients: int        # mask-cancellation population
-    weight: float           # Eq. (2) weight n_l of this message
-    client: ClientState     # for persistent per-client state (error memory)
-
-
-def _dp_transform(fed: FederatedConfig):
-    """Per-client clip + Gaussian noise [Wang et al. 2020 ref 25]."""
-    if fed.dp_noise_multiplier <= 0:
-        raise ValueError("the 'dp' transform needs "
-                         "FederatedConfig.dp_noise_multiplier > 0 — with "
-                         "zero noise it would silently degrade to "
-                         "clip-only while claiming local DP")
-
-    def f(msg, ctx: TransformCtx):
-        return agg.dp_privatize(
-            msg, jax.random.fold_in(ctx.client_rng, 7),
-            clip_norm=fed.dp_clip_norm,
-            noise_multiplier=fed.dp_noise_multiplier)
-    return f
-
-
-def _topk_transform(fed: FederatedConfig):
-    """Top-k sparsification with error feedback (collective-bytes cut)."""
-    if fed.compression_topk <= 0:
-        raise ValueError("the 'topk' transform needs "
-                         "FederatedConfig.compression_topk > 0")
-
-    def f(msg, ctx: TransformCtx):
-        msg, ctx.client.error_memory = agg.compress_with_error_feedback(
-            msg, ctx.client.error_memory, fed.compression_topk)
-        return msg
-    return f
-
-
-def _secure_transform(fed: FederatedConfig):
-    """Pairwise antisymmetric masks that cancel in the Eq. (2) sum."""
-    def f(msg, ctx: TransformCtx):
-        return agg.secure_mask_grads(msg, ctx.round_key, ctx.client_id,
-                                     ctx.num_clients, ctx.weight)
-    return f
-
-
-TRANSFORMS: Dict[str, Callable[[FederatedConfig], Callable]] = {
-    "dp": _dp_transform,
-    "topk": _topk_transform,
-    "secure": _secure_transform,
-}
-
-
-def build_transforms(names: Sequence[str],
-                     fed: FederatedConfig) -> List[Tuple[str, Callable]]:
-    """Resolve transform names against the registry (order preserved)."""
-    out = []
-    for name in names:
-        if name not in TRANSFORMS:
-            raise KeyError(f"unknown transform {name!r}; "
-                           f"available: {sorted(TRANSFORMS)}")
-        out.append((name, TRANSFORMS[name](fed)))
-    return out
 
 
 # ---------------------------------------------------------------------------
@@ -458,9 +418,16 @@ class FederationEngine:
                 "the knobs are never silently dropped")
         if self.exec_mode == "vmap":
             _check_vmap_preconditions(fed, self.clients, batch_size,
-                                      loss_sum_fn, what=type(self).__name__,
-                                      transforms=names)
+                                      loss_sum_fn, what=type(self).__name__)
         self._transforms = build_transforms(names, fed)
+        # stacked transform state (e.g. the topk error memory, one row
+        # per GLOBAL client) — threaded through every fused call
+        self._tstate: Dict[str, Any] = {}
+        if self.exec_mode == "vmap":
+            for name, t in self._transforms:
+                st = t.init_state(init_params, len(self.clients))
+                if st is not None:
+                    self._tstate[name] = st
 
         # -- local-update stage ----------------------------------------
         self._epochs = self._resolve_epochs()
@@ -484,6 +451,11 @@ class FederationEngine:
         self._fused_sync = None
         self._fused_stale = None
         self._deliver_only = None
+        self._zero_stacked = None      # all-padded round template (vmap)
+        # one entry per TRACE of each fused graph (the bodies bump it at
+        # trace time only) — the retrace-free fixed-K contract is
+        # asserted against this in tests and the CI bench payload
+        self.trace_counts: Dict[str, int] = {}
 
         # -- sampler stage ---------------------------------------------
         self.scheduler = RoundScheduler(
@@ -501,6 +473,11 @@ class FederationEngine:
         # routes the round through the fused ring buffer
         self._stale_enabled = (self.rc.straggler_prob > 0.0
                                and self.rc.max_staleness > 0)
+        # fixed-K stacking: pad shrunken cohorts (availability churn)
+        # with zero-weight rows up to clients_per_round so every round
+        # reuses ONE compiled graph (trace_counts pins this)
+        self._pad = (self.exec_mode == "vmap" and self.rc.pad_cohorts
+                     and len(self.clients) > 0)
         self.pending: List[PendingUpdate] = []   # loop-mode reference
         self._ring = None                        # vmap-mode device buffer
 
@@ -665,22 +642,59 @@ class FederationEngine:
         client_update = self._build_client_update()
         server_opt = self.server_opt
         decay = float(self.rc.staleness_decay)
+        transforms = self._transforms
+        nmask = self._nmask
+        counts = self.trace_counts
+
+        def transform_stage(msgs, tstate, round_key, ids, w):
+            """Stage 3 INSIDE the fused graph: every registry transform
+            applied to the stacked (K, ...) messages, then zero-weight
+            (padded) rows re-zeroed so neither transform output nor
+            local-update garbage from an all-zero padded batch can leak
+            into the combine or the ring (a NaN delta times a zero
+            weight is still NaN)."""
+            if transforms:
+                ctx = StackedTransformCtx(
+                    round_key=round_key, client_ids=ids, valid=w > 0.0,
+                    weights=w, num_clients=nmask)
+                tstate = dict(tstate)
+                for name, t in transforms:
+                    msgs, st = t.stacked(msgs, ctx, tstate.get(name))
+                    if name in tstate:
+                        tstate[name] = st
+            valid = w > 0.0
+            msgs = tmap(
+                lambda m: jnp.where(
+                    valid.reshape((-1,) + (1,) * (m.ndim - 1)), m, 0.0),
+                msgs)
+            return msgs, tstate
 
         def stacked_messages(params, stacked, e_counts):
             """All K clients' local updates in one graph -> (K, ...)."""
             return jax.vmap(client_update, in_axes=(None, 0, 0))(
                 params, stacked, e_counts)
 
-        def fused_sync(params, server_state, stacked, e_counts, weights,
-                       round_idx):
-            """messages -> Eq. (2) combine -> server update, zero host
-            hops (the synchronous fast path)."""
+        def fused_sync(params, server_state, tstate, stacked, e_counts,
+                       weights, ids, round_key, round_idx):
+            """messages -> transforms -> Eq. (2) combine -> server
+            update, zero host hops (the synchronous fast path).  The
+            update is gated on any positive weight: an all-padded
+            (empty) cohort leaves params AND server state untouched —
+            momentum must not decay on a no-arrival round."""
+            counts["fused_sync"] = counts.get("fused_sync", 0) + 1
             msgs, losses = stacked_messages(params, stacked, e_counts)
-            bar = agg.aggregate_stacked(msgs, weights)
-            new_params, new_state = server_opt.apply(
-                params, bar, server_state, round_idx)
-            rel = _rel_change(params, new_params)
-            return new_params, new_state, losses, rel
+            w = weights.astype(jnp.float32)
+            msgs, tstate = transform_stage(msgs, tstate, round_key, ids, w)
+            bar = agg.aggregate_stacked(msgs, w)
+            upd_p, upd_s = server_opt.apply(params, bar, server_state,
+                                            round_idx)
+            has = w.sum() > 0.0
+            sel = lambda o, n_: tmap(  # noqa: E731
+                lambda a, b: jnp.where(has, b, a), o, n_)
+            new_params, new_state = sel(params, upd_p), sel(server_state,
+                                                            upd_s)
+            rel = jnp.where(has, _rel_change(params, new_params), 0.0)
+            return new_params, new_state, tstate, losses, rel
 
         def ring_deliver(params, server_state, ring, round_idx,
                          fresh=None):
@@ -733,13 +747,20 @@ class FederationEngine:
                         due=jnp.where(due, -1, ring["due"]))
             return new_params, new_state, ring, rel, due.sum(), has
 
-        def fused_stale(params, server_state, ring, stacked, e_counts,
-                        weights, delays, round_idx):
+        def fused_stale(params, server_state, tstate, ring, stacked,
+                        e_counts, weights, delays, ids, round_key,
+                        round_idx):
             """One straggler-regime round, fully in-graph: local updates,
-            ring delivery + combine + server update, straggler insertion.
-            The per-client deltas never leave the device."""
+            message transforms, ring delivery + combine + server update,
+            straggler insertion.  The per-client deltas never leave the
+            device.  Padded zero-weight rows are absent throughout: they
+            contribute no fresh weight, are never inserted into the ring
+            (so no staleness age ever starts for them), and an
+            all-padded cohort degenerates to a deliver-only round."""
+            counts["fused_stale"] = counts.get("fused_stale", 0) + 1
             msgs, losses = stacked_messages(params, stacked, e_counts)
             w = weights.astype(jnp.float32)
+            msgs, tstate = transform_stage(msgs, tstate, round_key, ids, w)
             new_params, new_state, ring, rel, n_due, _ = ring_deliver(
                 params, server_state, ring, round_idx, (msgs, w, delays))
             # insert this round's stragglers into the freed slots:
@@ -764,23 +785,28 @@ class FederationEngine:
                 age=ring["age"].at[tgt].set(delays, mode="drop"))
             arrived = ((delays == 0) & (w > 0)).sum() + n_due
             in_flight = (ring["weight"] > 0).sum()
-            return (new_params, new_state, ring, losses, rel, arrived,
-                    in_flight)
+            return (new_params, new_state, tstate, ring, losses, rel,
+                    arrived, in_flight)
 
         def deliver_only(params, server_state, ring, round_idx):
-            """Empty-cohort round: due stragglers still deliver."""
+            """Empty-cohort round (unpadded mode): due stragglers still
+            deliver.  With ``pad_cohorts`` the all-padded cohort runs
+            through ``fused_stale`` instead — one graph for every round."""
+            counts["deliver_only"] = counts.get("deliver_only", 0) + 1
             new_params, new_state, ring, rel, n_due, _ = ring_deliver(
                 params, server_state, ring, round_idx)
             in_flight = (ring["weight"] > 0).sum()
             return new_params, new_state, ring, rel, n_due, in_flight
 
-        # donation reuses the param/server-state/ring buffers in place on
-        # accelerators; CPU ignores donation, skip the warning
+        # donation reuses the param/server-state/transform-state/ring
+        # buffers in place on accelerators; CPU ignores donation, skip
+        # the warning
         dn = jax.default_backend() != "cpu"
         self._fused_sync = jax.jit(fused_sync,
-                                   donate_argnums=(0, 1) if dn else ())
+                                   donate_argnums=(0, 1, 2) if dn else ())
         self._fused_stale = jax.jit(fused_stale,
-                                    donate_argnums=(0, 1, 2) if dn else ())
+                                    donate_argnums=(0, 1, 2, 3) if dn
+                                    else ())
         self._deliver_only = jax.jit(deliver_only,
                                      donate_argnums=(0, 1, 2) if dn else ())
 
@@ -801,15 +827,34 @@ class FederationEngine:
             "age": jnp.zeros((c,), jnp.int32),
         }
 
+    def _zero_cohort(self, k_fix: int):
+        """All-padded stacked round template (cached): the fixed-K shape
+        with every row zero-weight, used when nobody is active but the
+        round must still run the fused graph (straggler delivery) —
+        keeping even empty rounds retrace-free."""
+        if self._zero_stacked is None:
+            e, p = self._e_max, self.batch_size
+            st = {k: np.zeros((k_fix, e, p) + np.asarray(v).shape[1:],
+                              np.asarray(v).dtype)
+                  for k, v in self.clients[0].data.items()}
+            st["doc_mask"] = np.zeros((k_fix, e, p), np.float32)
+            st["rng"] = np.zeros((k_fix, e, 2), np.uint32)
+            self._zero_stacked = (st, np.zeros((k_fix, e), np.float32))
+        return self._zero_stacked
+
     # -- one round, vmap mode ---------------------------------------------
     def _round_vmap(self, r: int, round_key, cohort) -> Dict[str, float]:
         cohort = [int(l) for l in cohort]
         if self._fused_sync is None:
             self._build_vmap_fns()
         ri = np.int32(r)
+        # fixed-K stacking: availability churn shrinks the cohort, the
+        # stacked axis stays clients_per_round wide (zero-weight rows)
+        k_fix = self.scheduler.clients_per_round if self._pad \
+            else len(cohort)
 
-        if not cohort:
-            # nobody active this round; due stragglers still deliver
+        if not cohort and not self._pad:
+            # unpadded mode: nobody active; due stragglers still deliver
             rel, arrived, in_flight = 0.0, 0, 0
             if self._stale_enabled and self._ring is not None:
                 (self.params, self.server_state, self._ring, rel, arrived,
@@ -821,22 +866,31 @@ class FederationEngine:
                     "participants": 0, "arrived": arrived,
                     "in_flight": in_flight}
 
-        stacked, counts = stacked_round_batches(
-            [self.clients[l].data for l in cohort],
-            [self.clients[l].num_docs for l in cohort], round_key, cohort,
-            batch_size=self.batch_size, local_epochs=self._e_max)
-        e_counts = self._epochs[cohort].astype(np.int32)
+        if cohort:
+            stacked, counts = stacked_round_batches(
+                [self.clients[l].data for l in cohort],
+                [self.clients[l].num_docs for l in cohort], round_key,
+                cohort, batch_size=self.batch_size,
+                local_epochs=self._e_max, pad_to=k_fix)
+        else:
+            stacked, counts = self._zero_cohort(k_fix)
+        e_counts = np.zeros((k_fix,), np.int32)
+        e_counts[:len(cohort)] = self._epochs[cohort]
+        ids = np.zeros((k_fix,), np.int32)
+        ids[:len(cohort)] = cohort
         # epochs beyond a client's count are gated off in-graph; their
         # draws must not weigh into Eq. (2) or the loss bookkeeping
+        # (padded rows have e_count 0, so their counts zero out here)
         counts = counts * (np.arange(self._e_max)[None, :]
                            < e_counts[:, None])
-        weights = counts.sum(axis=1)            # (K,) Eq. (2) weights
+        weights = counts.sum(axis=1)        # (K,) Eq. (2) weights, pad=0
 
         if not self._stale_enabled:
             # fast path: one jitted call per round, donated buffers
-            self.params, self.server_state, losses, rel = self._fused_sync(
-                self.params, self.server_state, stacked, e_counts, weights,
-                ri)
+            (self.params, self.server_state, self._tstate, losses,
+             rel) = self._fused_sync(
+                self.params, self.server_state, self._tstate, stacked,
+                e_counts, weights, ids, round_key, ri)
             arrived, in_flight = len(cohort), 0
             rel = float(rel)
         else:
@@ -844,21 +898,27 @@ class FederationEngine:
             # straight into the in-graph ring buffer — no host round-trip
             if self._ring is None:
                 self._ring = self._init_ring()
-            delays = np.asarray([self._straggler_delay(r, l)
-                                 for l in cohort], np.int32)
-            (self.params, self.server_state, self._ring, losses, rel,
-             arrived, in_flight) = self._fused_stale(
-                self.params, self.server_state, self._ring, stacked,
-                e_counts, weights, delays, ri)
+            delays = np.zeros((k_fix,), np.int32)
+            delays[:len(cohort)] = [self._straggler_delay(r, l)
+                                    for l in cohort]
+            (self.params, self.server_state, self._tstate, self._ring,
+             losses, rel, arrived, in_flight) = self._fused_stale(
+                self.params, self.server_state, self._tstate, self._ring,
+                stacked, e_counts, weights, delays, ids, round_key, ri)
             rel = float(rel)
             arrived, in_flight = int(arrived), int(in_flight)
 
         losses = np.asarray(losses)             # (K, E) per-epoch means
+        # zero-count epochs (padded rows under homogeneous E, where the
+        # in-scan loss gate is compiled out; gated-off hetero epochs) may
+        # carry garbage values — 0-weighting alone would keep a NaN/inf
+        # (0 * inf = nan), so mask them out before the weighted average
+        losses = np.where(counts > 0, losses, 0.0)
         client_loss = (losses * counts).sum(axis=1) \
             / np.maximum(counts.sum(axis=1), 1.0)
         return {"round": r,
                 "loss": float(np.average(client_loss, weights=weights))
-                if len(cohort) else float("nan"),
+                if cohort else float("nan"),
                 "rel_change": rel,
                 "participants": len(cohort),
                 "arrived": arrived,

@@ -163,14 +163,15 @@ class FederatedTrainer(FederationEngine):
     objective (grad of it == G_l of Eq. 2 for that minibatch).
 
     ``exec_mode="loop"`` (default) polls clients one by one — the literal
-    Alg. 1 composition, and the only mode that applies the grad-level
-    privacy/compression transforms (derived automatically from the
-    ``FederatedConfig`` knobs, exactly as before).  ``exec_mode="vmap"``
-    stacks all L client minibatches on a leading axis and runs every
-    client gradient, the Eq. (2) combine and the Eq. (3) update in ONE
-    jitted graph — same trajectory (same keys, same math; tested), one
-    dispatch per round (DESIGN.md §4).  Ragged clients additionally need
-    the mask-aware ``loss_sum_fn`` (see ``engine.masked_mean_loss``).
+    Alg. 1 composition.  ``exec_mode="vmap"`` stacks all L client
+    minibatches on a leading axis and runs every client gradient, the
+    grad-level privacy/compression transforms (derived automatically
+    from the ``FederatedConfig`` knobs, applied as vectorized in-graph
+    ops since PR 4 — loop/vmap parity tested), the Eq. (2) combine and
+    the Eq. (3) update in ONE jitted graph — same trajectory (same keys,
+    same math; tested), one dispatch per round (DESIGN.md §4).  Ragged
+    clients additionally need the mask-aware ``loss_sum_fn`` (see
+    ``engine.masked_mean_loss``).
     """
 
     def __init__(self, loss_fn, init_params: Pytree,

@@ -1,0 +1,340 @@
+"""Message transforms (privacy / compression) for BOTH execution modes.
+
+Until PR 4 the ``dp`` / ``topk`` / ``secure`` transforms were loop-mode
+only and the fused vmap path refused them — the fast path and the
+private path were mutually exclusive, which contradicts the paper's
+whole value proposition (federation == centralized training *plus* node
+privacy).  This module is the single registry both modes dispatch
+through: every transform ships two applications of the SAME math,
+
+  * ``transform(msg, ctx)``           — one client's message, host loop
+    (the Alg.-1-literal reference path);
+  * ``transform.stacked(msgs, ctx, state)`` — the whole ``(K, ...)``
+    stacked cohort INSIDE the jitted vmap graph, messages never leaving
+    the device.
+
+Loop/vmap parity is a tested invariant (<1e-5, tests/
+test_transforms_vmap.py): the stacked implementations fold the same
+per-client keys (``dp``: ``fold_in(fold_in(round_key, client_id), 7)``,
+byte-identical noise to the loop path), carry the same error-feedback
+state (``topk``: a ``(L, ...)`` device-resident memory gathered /
+scattered by global client id), and draw the same pairwise masks
+(``secure``).
+
+Padded zero-weight cohort rows (the fixed-K retrace-free stacking,
+DESIGN.md §4) flow through every stacked transform: ``ctx.valid`` marks
+the real rows, state updates are scatter-dropped for padding, and the
+engine re-zeroes invalid rows after the stage — a padded row can never
+leak into the combine or the error memory.
+
+Exact secure-mask cancellation
+------------------------------
+``secure`` simulates pairwise-mask secure aggregation: client l adds
+``mask_l / n_l`` to its message, where ``sum_l mask_l == 0``.  The
+float32 masks here cancel **bitwise** (``jnp.sum(masks, axis=0)`` is
+exactly 0.0 at every K, under ANY summation order): the pairwise noise
+is drawn on a dyadic grid — integers in ``[-2^b, 2^b]`` times a
+power-of-two unit, with ``b`` chosen so that every partial sum of every
+subset of the K^2 antisymmetric terms stays below 2^24 grid units.
+Integer-valued float32 arithmetic in that range is exact, so no
+association of the additions ever rounds, and the antisymmetric pairs
+(``U - U^T`` is exactly antisymmetric: IEEE subtraction of equals and
+negation are exact) annihilate to +0.0.  This is the property the CI
+privacy-smoke gate asserts (``secure_mask_sum_abs == 0.0``).  The
+residual *combine* deviation between a masked and an unmasked run is
+then pure float rounding of ``msg + mask/n`` (≈1e-7, bound 1e-5) — the
+masks themselves contribute nothing.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FederatedConfig
+from repro.core import aggregation as agg
+
+Pytree = Any
+_tmap = jax.tree_util.tree_map
+
+# fold-in salt separating the secure-mask PRG stream from the minibatch
+# draw / model-noise streams that also derive from the round key
+_SECURE_SALT = 0x5EC
+
+
+# ---------------------------------------------------------------------------
+# call contexts
+# ---------------------------------------------------------------------------
+@dataclass
+class TransformCtx:
+    """Per-client call context handed to every loop-mode transform."""
+    round_key: Any          # the round's shared key (secure-mask PRG seed)
+    client_rng: Any         # fold_in(round_key, client_id) — the draw key
+    client_id: int
+    num_clients: int        # mask-cancellation population
+    weight: float           # Eq. (2) weight n_l of this message
+    client: Any             # ClientState, for persistent per-client state
+
+
+@dataclass
+class StackedTransformCtx:
+    """Whole-cohort context handed to every stacked (in-graph) transform.
+
+    ``client_ids`` / ``weights`` are ``(K,)`` arrays over the FIXED-K
+    stacked axis; ``valid`` is ``weights > 0`` — padded rows carry weight
+    0 and must neither receive meaningful output nor update any state.
+    """
+    round_key: Any          # traced inside the fused graph
+    client_ids: Any         # (K,) int32 global ids (padded rows: 0, masked)
+    valid: Any              # (K,) bool — real (non-padded) rows
+    weights: Any            # (K,) float32 Eq. (2) weights
+    num_clients: int        # static: mask population / state row count
+
+
+@dataclass(frozen=True)
+class MessageTransform:
+    """One named transform, applicable per-client (loop) or stacked (vmap).
+
+    ``stacked`` returns ``(msgs, state)``; stateless transforms pass
+    ``state`` through unchanged.  ``init_state(template, num_clients)``
+    builds the per-engine device state (or ``None``) — e.g. the ``topk``
+    error memory, one ``(L, ...)`` row per global client.
+    """
+    name: str
+    _client: Callable[..., Pytree]
+    _stacked: Callable[..., Tuple[Pytree, Any]]
+    _init_state: Optional[Callable[..., Pytree]] = None
+
+    def __call__(self, msg: Pytree, ctx: TransformCtx) -> Pytree:
+        return self._client(msg, ctx)
+
+    def stacked(self, msgs: Pytree, ctx: StackedTransformCtx,
+                state) -> Tuple[Pytree, Any]:
+        return self._stacked(msgs, ctx, state)
+
+    def init_state(self, template: Pytree, num_clients: int):
+        if self._init_state is None:
+            return None
+        return self._init_state(template, num_clients)
+
+
+def _row_bcast(vec, leaf):
+    """(K,) -> (K, 1, ..., 1) broadcast shape against a (K, ...) leaf."""
+    return vec.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+# ---------------------------------------------------------------------------
+# dp: per-client clip + Gaussian noise [Wang et al. 2020 ref 25]
+# ---------------------------------------------------------------------------
+def _dp_transform(fed: FederatedConfig) -> MessageTransform:
+    if fed.dp_noise_multiplier <= 0:
+        raise ValueError("the 'dp' transform needs "
+                         "FederatedConfig.dp_noise_multiplier > 0 — with "
+                         "zero noise it would silently degrade to "
+                         "clip-only while claiming local DP")
+    clip, mult = fed.dp_clip_norm, fed.dp_noise_multiplier
+
+    def client(msg, ctx: TransformCtx):
+        return agg.dp_privatize(msg, jax.random.fold_in(ctx.client_rng, 7),
+                                clip_norm=clip, noise_multiplier=mult)
+
+    def stacked(msgs, ctx: StackedTransformCtx, state):
+        # the SAME key composition the loop path runs eagerly:
+        # fold_in(fold_in(round_key, client_id), 7) — threefry is a pure
+        # function of (key, shape), so the noise bits are identical
+        def one(row, cid):
+            key = jax.random.fold_in(
+                jax.random.fold_in(ctx.round_key, cid), 7)
+            return agg.dp_privatize(row, key, clip_norm=clip,
+                                    noise_multiplier=mult)
+        return jax.vmap(one)(msgs, ctx.client_ids), state
+
+    return MessageTransform("dp", client, stacked)
+
+
+# ---------------------------------------------------------------------------
+# topk: magnitude sparsification + per-client error feedback
+# ---------------------------------------------------------------------------
+def _topk_transform(fed: FederatedConfig) -> MessageTransform:
+    if fed.compression_topk <= 0:
+        raise ValueError("the 'topk' transform needs "
+                         "FederatedConfig.compression_topk > 0")
+    frac = fed.compression_topk
+
+    def client(msg, ctx: TransformCtx):
+        msg, ctx.client.error_memory = agg.compress_with_error_feedback(
+            msg, ctx.client.error_memory, frac)
+        return msg
+
+    def stacked(msgs, ctx: StackedTransformCtx, state):
+        # state: (L, ...) error memory indexed by GLOBAL client id — the
+        # device-resident mirror of the loop path's per-ClientState
+        # memory.  Gather the cohort's rows, run the identical
+        # correct -> jax.lax.top_k-threshold -> residual math vmapped
+        # over the stacked axis, scatter back (padded rows -> dropped).
+        # Row count comes from the STATE itself, not ctx.num_clients —
+        # the latter is the secure-mask population (num_clients_for_masks)
+        # and may differ from the federation size
+        n = jax.tree_util.tree_leaves(state)[0].shape[0]
+        ids = jnp.clip(ctx.client_ids, 0, n - 1)
+        err = _tmap(lambda e: e[ids], state)
+        # the SAME correct -> sparsify -> residual code the loop path
+        # runs, vmapped over the stacked axis — one implementation,
+        # two batching regimes
+        sent, new_err = jax.vmap(
+            lambda g, e: agg.compress_with_error_feedback(g, e, frac))(
+            msgs, err)
+        tgt = jnp.where(ctx.valid, ctx.client_ids, n)
+        state = _tmap(lambda e, r: e.at[tgt].set(r, mode="drop"),
+                      state, new_err)
+        return sent, state
+
+    def init_state(template, num_clients):
+        return _tmap(lambda p: jnp.zeros((num_clients,) + p.shape,
+                                         jnp.float32), template)
+
+    return MessageTransform("topk", client, stacked, init_state)
+
+
+# ---------------------------------------------------------------------------
+# secure: pairwise masks on a dyadic grid (bitwise-exact cancellation)
+# ---------------------------------------------------------------------------
+def _mask_grid_bits(num_clients: int) -> int:
+    """Noise resolution (bits) keeping EVERY partial sum exact in float32.
+
+    All mask terms are integers in ``[-2^(b+1), 2^(b+1)]`` grid units
+    (after the antisymmetrization ``U - U^T``); any subset of the K^2
+    terms sums to at most ``K^2 * 2^(b+1)`` units, which must stay below
+    the 2^24 exact-integer range of float32.  ``b = 22 - 2*ceil(log2 K)``
+    (capped at 10) satisfies ``K^2 * 2^(b+1) <= 2^23`` for every K up to
+    1024.
+    """
+    if num_clients > 1024:
+        raise ValueError(
+            f"secure masks support at most 1024 clients (got "
+            f"{num_clients}): beyond that the dyadic noise grid that "
+            "makes cancellation bitwise-exact runs out of float32 "
+            "mantissa")
+    b = min(10, 22 - 2 * math.ceil(math.log2(max(num_clients, 2))))
+    return max(b, 1)
+
+
+def pairwise_mask_stack(round_key, template: Pytree, num_clients: int,
+                        scale: float = 1.0) -> Pytree:
+    """All K clients' pairwise-cancelling masks, stacked on a leading axis.
+
+    Conceptually, for each leaf (shape ``S``) there is an antisymmetric
+    pair tensor ``D = U - U^T`` of shape ``(K, K) + S`` (``U`` integer
+    noise on the dyadic grid, see :func:`_mask_grid_bits`) and client
+    l's mask is the row sum ``mask_l = sum_m D[l, m]``.  The
+    implementation never materializes the ``(K, K)`` grid: a
+    ``fori_loop`` over m draws ``U``'s m-th ROW ``(K,) + S`` at a time
+    — every l accumulates ``-U[m, l]`` and client m accumulates its own
+    row sum — keeping memory at O(K * |leaf|).  Row m's noise is a pure
+    function of ``(round_key, leaf index, m)``, so in a real deployment
+    the pair (l, m) derives its shared entries ``U[m, l]`` / ``U[l, m]``
+    from a shared secret without the server learning them.
+
+    INVARIANT (tested at every K): ``sum_l mask_l`` is bitwise +0.0 per
+    leaf under any summation order.  The accumulation itself runs in
+    int32 (trivially exact: all partial sums stay below 2^23 grid
+    units by the :func:`_mask_grid_bits` sizing, far from wrap-around),
+    and the final ``int * power-of-two-unit`` float32 conversion is
+    exact — so the float masks are integers-on-a-grid whose sums never
+    round, and the antisymmetric terms annihilate exactly (module
+    docstring).
+    """
+    bits = _mask_grid_bits(num_clients)
+    # power-of-two unit => int * unit products and all partial sums exact
+    unit = 2.0 ** (math.floor(math.log2(scale)) - bits)
+    base = jax.random.fold_in(round_key, _SECURE_SALT)
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    masks = []
+    for i, leaf in enumerate(leaves):
+        k = jax.random.fold_in(base, i)
+        shape = (num_clients,) + tuple(np.shape(leaf))
+
+        def body(m, acc, k=k, shape=shape):
+            # row = U[m, :]: mask_l -= U[m, l]; mask_m += sum_l U[m, l]
+            row = jax.random.randint(jax.random.fold_in(k, m), shape,
+                                     -(2 ** bits), 2 ** bits + 1)
+            return (acc - row).at[m].add(row.sum(axis=0))
+
+        acc = jax.lax.fori_loop(
+            0, num_clients, body,
+            jnp.zeros(shape, jnp.int32))
+        masks.append(acc.astype(jnp.float32) * unit)
+    return jax.tree_util.tree_unflatten(treedef, masks)
+
+
+# jitted entry for the HOST (loop-mode) path: without it every round
+# re-traces the fori_loop mask construction eagerly, ~1000x slower than
+# the cached dispatch (the fused vmap path traces it inline already)
+_mask_stack_jit = jax.jit(pairwise_mask_stack, static_argnums=(2, 3))
+
+
+def _secure_transform(fed: FederatedConfig) -> MessageTransform:
+    # one mask stack per round; the loop path would otherwise redraw the
+    # per-pair noise once PER CLIENT (keys are concrete on the host, so
+    # the round key is hashable by value)
+    cache: Dict[str, Any] = {}
+
+    def _stack_cached(round_key, template, num_clients):
+        key_bytes = (np.asarray(round_key).tobytes(), num_clients)
+        if cache.get("key") != key_bytes:
+            cache["key"] = key_bytes
+            cache["stack"] = _mask_stack_jit(round_key, template,
+                                             num_clients)
+        return cache["stack"]
+
+    def client(msg, ctx: TransformCtx):
+        stack = _stack_cached(ctx.round_key, msg, ctx.num_clients)
+        row = _tmap(lambda m: m[ctx.client_id], stack)
+        n = jnp.maximum(jnp.asarray(ctx.weight, jnp.float32), 1e-9)
+        # masks must cancel in the Eq. (2) NUMERATOR (the n_l-weighted
+        # sum), so each client adds mask_l / n_l — same convention as
+        # agg.secure_mask_grads
+        return _tmap(lambda g, m: g.astype(jnp.float32) + m / n, msg, row)
+
+    def stacked(msgs, ctx: StackedTransformCtx, state):
+        template = _tmap(lambda m: m[0], msgs)
+        stack = pairwise_mask_stack(ctx.round_key, template,
+                                    ctx.num_clients)
+        rows = _tmap(lambda m: m[ctx.client_ids], stack)
+        w = jnp.maximum(ctx.weights, 1e-9)
+        return _tmap(
+            lambda g, m: g.astype(jnp.float32) + m / _row_bcast(w, m),
+            msgs, rows), state
+
+    return MessageTransform("secure", client, stacked)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+TRANSFORMS: Dict[str, Callable[[FederatedConfig], MessageTransform]] = {
+    "dp": _dp_transform,
+    "topk": _topk_transform,
+    "secure": _secure_transform,
+}
+
+
+def build_transforms(names: Sequence[str], fed: FederatedConfig
+                     ) -> List[Tuple[str, MessageTransform]]:
+    """Resolve transform names against the registry (order preserved).
+
+    Returns ``(name, transform)`` pairs; the transform object applies
+    per-client messages when called directly and stacked cohorts via
+    ``.stacked`` — the SAME registry entry serves both execution modes.
+    """
+    out = []
+    for name in names:
+        if name not in TRANSFORMS:
+            raise KeyError(f"unknown transform {name!r}; "
+                           f"available: {sorted(TRANSFORMS)}")
+        out.append((name, TRANSFORMS[name](fed)))
+    return out

@@ -262,6 +262,7 @@ def stacked_round_batches(
     *,
     batch_size: int,
     local_epochs: int = 1,
+    pad_to: Optional[int] = None,
 ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
     """Assemble one round's cohort minibatches into a leading client axis.
 
@@ -284,21 +285,32 @@ def stacked_round_batches(
     Returns ``(stacked, counts)`` where ``counts`` is ``(K, E)`` float32
     draw sizes (the Eq. (2) weights are ``counts.sum(axis=1)``).
 
+    ``pad_to`` (>= the cohort size) widens the stacked axis to a FIXED
+    K: rows beyond the cohort stay all-zero (data, doc_mask, rng and
+    counts), i.e. zero-weight padding — the retrace-free fixed-K
+    contract of DESIGN.md §4.  The real rows are byte-identical to the
+    unpadded call, so padding never perturbs a draw.
+
     The gathering itself is host-side numpy; the single resulting
     transfer replaces the per-client-per-epoch device round-trips of the
     loop path.
     """
     k_clients = len(datas)
+    k_stack = k_clients if pad_to is None else int(pad_to)
+    if k_stack < k_clients:
+        raise ValueError(f"pad_to={pad_to} is smaller than the cohort "
+                         f"({k_clients} clients); the stacked axis cannot "
+                         "drop cohort members")
     e = local_epochs
     p = batch_size
     stacked: Dict[str, np.ndarray] = {
-        key: np.zeros((k_clients, e, p) + v.shape[1:],
+        key: np.zeros((k_stack, e, p) + v.shape[1:],
                       np.asarray(v).dtype)
         for key, v in datas[0].items()
     }
-    stacked["doc_mask"] = np.zeros((k_clients, e, p), np.float32)
-    stacked["rng"] = np.zeros((k_clients, e, 2), np.uint32)
-    counts = np.zeros((k_clients, e), np.float32)
+    stacked["doc_mask"] = np.zeros((k_stack, e, p), np.float32)
+    stacked["rng"] = np.zeros((k_stack, e, 2), np.uint32)
+    counts = np.zeros((k_stack, e), np.float32)
 
     # group cohort members by draw shape so each group is one jitted call
     groups: Dict[Tuple[int, int], List[int]] = {}

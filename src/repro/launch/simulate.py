@@ -33,10 +33,15 @@ Usage:
 
     # non-IID scenario: pooled corpus re-partitioned with a Dirichlet
     # label skew, heterogeneous per-client epoch counts, one client
-    # joining mid-training, local-DP message transform
+    # joining mid-training, local-DP message transform — and since PR 4
+    # the transforms run IN-GRAPH under --exec-mode vmap (the private
+    # path and the fast path compose; cohorts shrunken by the late
+    # joiner are zero-weight-padded to a fixed K, so the graph compiles
+    # exactly once)
     PYTHONPATH=src python -m repro.launch.simulate \\
         --partition 'dirichlet(0.3)' --hetero-epochs 1,2,4 \\
-        --join-rounds 0,0,0,0,20 --transforms dp --dp-noise 0.3
+        --join-rounds 0,0,0,0,20 --transforms dp --dp-noise 0.3 \\
+        --exec-mode vmap
 
 Programmatic equivalent of the CLI:
 
@@ -162,7 +167,8 @@ def run_simulation(args) -> dict:
                      local_epochs_by_client=_int_tuple(args.hetero_epochs),
                      client_join_round=_int_tuple(args.join_rounds),
                      client_leave_round=_int_tuple(args.leave_rounds),
-                     partition=args.partition)
+                     partition=args.partition,
+                     pad_cohorts=not args.no_pad_cohorts)
     clients = build_clients(syn, args.num_clients, args.partition,
                             seed=args.seed)
     eng = RoundEngine(loss_fn, init, clients, fed, rc,
@@ -259,7 +265,14 @@ def main(argv=None):
                          "re-partition it")
     ap.add_argument("--transforms", default="",
                     help="comma list of message transforms "
-                         f"({sorted(TRANSFORMS)}); loop-mode only")
+                         f"({sorted(TRANSFORMS)}); both exec modes — "
+                         "under --exec-mode vmap they run as vectorized "
+                         "ops inside the fused jitted graph")
+    ap.add_argument("--no-pad-cohorts", action="store_true",
+                    help="disable fixed-K zero-weight padding of "
+                         "shrunken cohorts (vmap mode) — retraces the "
+                         "graph per distinct cohort size, the pre-PR-4 "
+                         "behavior")
     ap.add_argument("--dp-noise", type=float, default=0.0,
                     help="local-DP Gaussian noise multiplier (used by the "
                          "'dp' transform)")

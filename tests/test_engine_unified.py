@@ -177,10 +177,16 @@ def test_transform_guards():
         RoundEngine(loss, init, clients, fed,
                     RoundConfig(transforms=("secure",),
                                 clients_per_round=2))
-    # ... nor the vmap path (refused, never dropped)
-    with pytest.raises(NotImplementedError):
+    # the vmap path ACCEPTS transforms since PR 4 (in-graph stacked
+    # implementations) — but the config validation still fires there
+    with pytest.raises(ValueError, match="dp_noise_multiplier"):
         RoundEngine(loss, init, clients, fed,
-                    RoundConfig(transforms=("dp",), exec_mode="vmap"))
+                    RoundConfig(transforms=("dp",), exec_mode="vmap"),
+                    batch_size=32)
+    RoundEngine(loss, init, clients,
+                FederatedConfig(num_clients=3, dp_noise_multiplier=0.3),
+                RoundConfig(transforms=("dp",), exec_mode="vmap"),
+                batch_size=32)
     # undeclared FederatedConfig privacy knobs on a delta engine still
     # raise (the pre-unification guard, now with a pointer to transforms)
     with pytest.raises(NotImplementedError, match="transforms"):

@@ -1,0 +1,313 @@
+"""In-graph message transforms + fixed-K retrace-free cohorts (PR 4).
+
+Four properties:
+
+  1. TRANSFORM PARITY — ``dp`` / ``topk`` / ``secure`` applied inside
+     the fused vmap graph retrace the loop-mode reference within 1e-5
+     across a regime grid (partial participation, stragglers, hetero
+     epochs, multi-epoch clients).  ``dp`` parity is under SHARED keys:
+     both paths fold ``(round_key, client_id, 7)``, so the noise bits
+     are identical and the only daylight is float32 reduction order.
+  2. EXACT SECURE CANCELLATION — the pairwise mask stack sums to
+     BITWISE zero over the client axis at every K, under any summation
+     order (the dyadic-grid construction of ``core/transforms.py``).
+  3. RETRACE-FREE FIXED-K — mid-training join/leave churns the active
+     set through every cohort size (0..K) and the fused graph still
+     compiles exactly once (``engine.trace_counts``).
+  4. PADDED-ROW ABSENCE — zero-weight (padded) rows are absent from the
+     combine, the ring buffer and the transform state: an all-padded
+     empty-cohort round leaves params, server momentum and the ring
+     bookkeeping exactly as the loop reference does; ``aggregate_stacked``
+     and ``combine_arrivals`` survive NaN garbage carried by zero-weight
+     rows.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FederatedConfig, RoundConfig
+from repro.core import aggregation as agg
+from repro.core.engine import combine_arrivals
+from repro.core.rounds import RoundEngine
+from repro.core.transforms import (TRANSFORMS, build_transforms,
+                                   pairwise_mask_stack)
+from conftest import make_tiny_federation, max_param_dev
+
+TOL = 1e-5
+_make_setup = make_tiny_federation
+_max_dev = max_param_dev
+
+
+def _run_both(fed, rc, *, rounds=5, seed=3, batch_size=32, setup=None):
+    cfg, loss, loss_sum, init, clients = setup or _make_setup()
+    loop = RoundEngine(loss, init, clients, fed, rc, batch_size=batch_size,
+                       exec_mode="loop")
+    vm = RoundEngine(loss, init, clients, fed, rc, batch_size=batch_size,
+                     exec_mode="vmap", loss_sum_fn=loss_sum)
+    for r in range(rounds):
+        ra = loop.round(seed=seed * 100003 + r)
+        rb = vm.round(seed=seed * 100003 + r)
+        dev = _max_dev(loop.params, vm.params)
+        assert dev < TOL, f"round {r}: dev {dev:.2e}"
+        assert ra["arrived"] == rb["arrived"]
+        assert ra["in_flight"] == rb["in_flight"]
+    return loop, vm
+
+
+# ---------------------------------------------------------------------------
+# 1. transform parity across the regime grid
+# ---------------------------------------------------------------------------
+_DP_FED = dict(num_clients=3, learning_rate=1e-2, max_rounds=6, rel_tol=0.0,
+               dp_noise_multiplier=0.3, dp_clip_norm=0.05)
+
+DP_REGIMES = {
+    "dp-sync": dict(transforms=("dp",)),
+    "dp-partial": dict(transforms=("dp",), clients_per_round=2),
+    "dp-multi-epoch": dict(transforms=("dp",), local_epochs=2),
+    "dp-straggler": dict(transforms=("dp",), straggler_prob=0.7,
+                         max_staleness=3, staleness_decay=0.5),
+    "dp-hetero": dict(transforms=("dp",),
+                      local_epochs_by_client=(1, 3, 2)),
+}
+
+
+@pytest.mark.parametrize("regime", sorted(DP_REGIMES))
+def test_dp_parity_loop_vs_vmap(regime):
+    """Shared-key local DP rides the fused path: identical noise bits,
+    <1e-5 trajectory deviation — in every regime, stragglers included."""
+    fed = FederatedConfig(**_DP_FED)
+    _run_both(fed, RoundConfig(**DP_REGIMES[regime]))
+
+
+@pytest.mark.parametrize("regime", [
+    dict(transforms=("topk",)),
+    dict(transforms=("topk",), clients_per_round=2),
+    dict(transforms=("topk",), straggler_prob=0.6, max_staleness=2,
+         staleness_decay=0.5),
+])
+def test_topk_parity_and_error_feedback_state(regime):
+    """Stacked top-k carries the SAME per-client error memory the loop
+    path keeps in ClientState — gathered/scattered by global client id,
+    so partial participation must stay in sync too."""
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=6,
+                          rel_tol=0.0, compression_topk=0.25)
+    loop, vm = _run_both(fed, RoundConfig(**regime), rounds=6)
+    # loop accumulated host-side memory; vmap holds the (L, ...) mirror
+    assert any(c.error_memory is not None for c in loop.clients)
+    assert "topk" in vm._tstate
+    # the stacked state rows match the loop clients' memories
+    for l, c in enumerate(loop.clients):
+        if c.error_memory is None:
+            continue
+        for a, b in zip(jax.tree_util.tree_leaves(c.error_memory),
+                        jax.tree_util.tree_leaves(vm._tstate["topk"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b)[l],
+                                       atol=1e-6)
+
+
+def test_topk_state_rows_independent_of_mask_population():
+    """REGRESSION: the stacked topk error memory is indexed by the
+    federation size, NOT num_clients_for_masks — a smaller mask
+    population must not collapse distinct clients onto one error row."""
+    from repro.core.protocol import FederatedTrainer
+    cfg, loss, loss_sum, init, clients = _make_setup()
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=5,
+                          rel_tol=0.0, compression_topk=0.25)
+    loop = FederatedTrainer(loss, init, clients, fed, batch_size=32,
+                            num_clients_for_masks=2)
+    vm = FederatedTrainer(loss, init, clients, fed, batch_size=32,
+                          num_clients_for_masks=2, exec_mode="vmap",
+                          loss_sum_fn=loss_sum)
+    loop.fit(seed=4)
+    vm.fit(seed=4)
+    assert _max_dev(loop.params, vm.params) < TOL
+
+
+def test_secure_parity_and_combine_cancellation():
+    """Secure masks ride the fused path: loop/vmap parity, and the
+    masked run lands on the unmasked run (masks vanish in Eq. (2))."""
+    cfg, loss, loss_sum, init, clients = _make_setup()
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=5,
+                          rel_tol=0.0)
+    loop, vm = _run_both(fed, RoundConfig(transforms=("secure",)))
+    plain = RoundEngine(loss, init, clients, fed, RoundConfig(),
+                        batch_size=32, exec_mode="vmap",
+                        loss_sum_fn=loss_sum)
+    for r in range(5):
+        plain.round(seed=3 * 100003 + r)
+    assert _max_dev(vm.params, plain.params) < 1e-4
+
+
+def test_transform_order_preserved_and_composed():
+    """dp∘topk composes in declared order on both paths."""
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=4,
+                          rel_tol=0.0, dp_noise_multiplier=0.3,
+                          dp_clip_norm=0.05, compression_topk=0.5)
+    _run_both(fed, RoundConfig(transforms=("topk", "dp")))
+    built = build_transforms(("topk", "dp"), fed)
+    assert [n for n, _ in built] == ["topk", "dp"]
+    assert set(TRANSFORMS) == {"dp", "topk", "secure"}
+
+
+# ---------------------------------------------------------------------------
+# 2. bitwise secure-mask cancellation at every K
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k", [2, 3, 5, 16, 64])
+def test_secure_masks_cancel_bitwise_at_every_k(k):
+    """sum_l mask_l is EXACTLY +0.0 per leaf — under jnp reduction,
+    sequential numpy reduction, and randomly permuted orders (the dyadic
+    grid makes every partial sum exactly representable)."""
+    tmpl = {"w": jnp.zeros((9, 4), jnp.float32),
+            "b": jnp.zeros((7,), jnp.float32)}
+    stack = pairwise_mask_stack(jax.random.PRNGKey(k), tmpl, k)
+    rng = np.random.default_rng(0)
+    for leaf in jax.tree_util.tree_leaves(stack):
+        arr = np.asarray(leaf)
+        assert arr.std() > 0                      # real noise, not zeros
+        np.testing.assert_array_equal(np.asarray(jnp.sum(leaf, axis=0)),
+                                      np.zeros(arr.shape[1:], np.float32))
+        np.testing.assert_array_equal(arr.sum(axis=0), 0.0)
+        for _ in range(3):
+            shuffled = arr[rng.permutation(k)]
+            np.testing.assert_array_equal(
+                np.add.reduce(shuffled, axis=0), 0.0)
+
+
+def test_secure_masks_population_cap():
+    with pytest.raises(ValueError, match="1024"):
+        pairwise_mask_stack(jax.random.PRNGKey(0),
+                            {"w": jnp.zeros((2,), jnp.float32)}, 2000)
+
+
+# ---------------------------------------------------------------------------
+# 3. retrace-free fixed-K cohorts
+# ---------------------------------------------------------------------------
+def test_join_leave_compiles_exactly_once_sync():
+    """Cohort sizes walk 0 -> 2 -> 3 -> 2 across rounds; ONE trace."""
+    cfg, loss, loss_sum, init, clients = _make_setup()
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=6,
+                          rel_tol=0.0)
+    rc = RoundConfig(client_join_round=(1, 1, 2), client_leave_round=(0, 3, 0))
+    loop, vm = _run_both(fed, rc, rounds=6, seed=9)
+    sizes = {h["participants"] for h in vm.history}
+    assert len(sizes) >= 3                       # churn actually happened
+    assert vm.trace_counts == {"fused_sync": 1}
+
+
+def test_join_leave_compiles_exactly_once_stale():
+    """Same churn under the straggler ring buffer — including all-padded
+    empty-cohort rounds — still exactly one trace of ONE graph (the
+    deliver_only graph is never needed when padding is on)."""
+    cfg, loss, loss_sum, init, clients = _make_setup()
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=6,
+                          rel_tol=0.0)
+    rc = RoundConfig(straggler_prob=1.0, max_staleness=3,
+                     staleness_decay=0.5, client_leave_round=(2, 2, 2))
+    loop, vm = _run_both(fed, rc, rounds=6, seed=5)
+    assert any(h["participants"] == 0 for h in vm.history)
+    assert vm.trace_counts == {"fused_stale": 1}
+    assert vm.history[-1]["in_flight"] == 0      # ring drained
+
+
+def test_pad_cohorts_disabled_reproduces_legacy_retrace():
+    """The escape hatch: pad_cohorts=False retraces per cohort size."""
+    cfg, loss, loss_sum, init, clients = _make_setup()
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=6,
+                          rel_tol=0.0)
+    rc = RoundConfig(client_join_round=(1, 1, 2),
+                     client_leave_round=(0, 3, 0), pad_cohorts=False)
+    loop, vm = _run_both(fed, rc, rounds=6, seed=9)
+    assert vm.trace_counts["fused_sync"] > 1
+
+
+# ---------------------------------------------------------------------------
+# 4. padded zero-weight rows are absent everywhere
+# ---------------------------------------------------------------------------
+def test_empty_sync_round_is_bitwise_noop_including_momentum():
+    """An all-padded cohort must not move params OR decay server
+    momentum (the FedAvgM state is where-gated alongside the params)."""
+    cfg, loss, loss_sum, init, clients = _make_setup()
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=4,
+                          rel_tol=0.0)
+    rc = RoundConfig(client_join_round=(2, 2, 2),
+                     server_optimizer="fedavgm", server_momentum=0.5)
+    vm = RoundEngine(loss, init, clients, fed, rc, batch_size=32,
+                     exec_mode="vmap", loss_sum_fn=loss_sum)
+    vm.round(seed=0)     # round 0: nobody joined yet -> all-padded
+    for a, b in zip(jax.tree_util.tree_leaves(init),
+                    jax.tree_util.tree_leaves(vm.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for m in jax.tree_util.tree_leaves(vm.server_state):
+        np.testing.assert_array_equal(np.asarray(m), 0.0)
+    assert vm.history[0]["rel_change"] == 0.0
+    assert vm.trace_counts == {"fused_sync": 1}
+
+
+def test_all_padded_round_with_ring_delivers_like_loop():
+    """REGRESSION (satellite): the fused ring must treat padded rows as
+    absent — no insertion, no staleness-age start, no 0/0 — while due
+    stragglers still deliver on an all-padded round.  Checked against
+    the loop-mode pending-list + combine_arrivals reference round by
+    round (that equality covers ages and weights transitively)."""
+    cfg, loss, loss_sum, init, clients = _make_setup()
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=6,
+                          rel_tol=0.0)
+    rc = RoundConfig(straggler_prob=1.0, max_staleness=3,
+                     staleness_decay=0.5, client_leave_round=(2, 2, 2),
+                     server_optimizer="fedavgm", server_momentum=0.5)
+    loop, vm = _run_both(fed, rc, rounds=6, seed=5)
+    # deliveries happened AFTER everyone left (all-padded rounds)
+    assert sum(h["arrived"] for h in vm.history[2:]) > 0
+    # padded rows never entered the ring: occupancy == loop's pending
+    assert all(hl["in_flight"] == hv["in_flight"]
+               for hl, hv in zip(loop.history, vm.history))
+
+
+def test_aggregate_stacked_zero_weight_rows_are_absent():
+    """A zero-weight row carrying NaN/garbage must not poison the
+    combine (0 * nan == nan; the where-mask is the fix)."""
+    tree = {"w": jnp.stack([jnp.full((3,), 2.0),
+                            jnp.full((3,), jnp.nan),
+                            jnp.full((3,), 7.0)])}
+    out = agg.aggregate_stacked(tree, jnp.asarray([1.0, 0.0, 3.0]))
+    ref = agg.aggregate_host([{"w": jnp.full((3,), 2.0)},
+                              {"w": jnp.full((3,), 7.0)}], [1.0, 3.0])
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(ref["w"]),
+                               rtol=1e-6)
+    # all-padded: zero combine, not 0/0
+    empty = agg.aggregate_stacked(tree, jnp.zeros((3,)))
+    np.testing.assert_array_equal(np.asarray(empty["w"]), 0.0)
+
+
+def test_combine_arrivals_zero_weight_arrivals_absent():
+    delta = {"w": jnp.ones((2,), jnp.float32)}
+    nan_delta = {"w": jnp.full((2,), jnp.nan, jnp.float32)}
+    out = combine_arrivals([(0, delta, 2.0), (1, nan_delta, 0.0)], 0.5)
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0, rtol=1e-6)
+    with pytest.raises(ValueError, match="at least one"):
+        combine_arrivals([(0, nan_delta, 0.0), (2, nan_delta, 0.0)], 0.5)
+
+
+def test_stacked_round_batches_pad_to_contract():
+    """Padded rows are all-zero (data, mask, rng, counts) and the real
+    rows are byte-identical to the unpadded call."""
+    from repro.data.federated_split import stacked_round_batches
+    rng = np.random.default_rng(7)
+    datas = [{"bow": rng.poisson(0.5, (n, 16)).astype(np.float32)}
+             for n in (20, 9)]
+    key = jax.random.PRNGKey(11)
+    plain, counts = stacked_round_batches(datas, [20, 9], key, [0, 1],
+                                          batch_size=8, local_epochs=2)
+    padded, pcounts = stacked_round_batches(datas, [20, 9], key, [0, 1],
+                                            batch_size=8, local_epochs=2,
+                                            pad_to=5)
+    for k in plain:
+        assert padded[k].shape[0] == 5
+        np.testing.assert_array_equal(padded[k][:2], plain[k])
+        np.testing.assert_array_equal(padded[k][2:], 0)
+    np.testing.assert_array_equal(pcounts[:2], counts)
+    np.testing.assert_array_equal(pcounts[2:], 0.0)
+    with pytest.raises(ValueError, match="pad_to"):
+        stacked_round_batches(datas, [20, 9], key, [0, 1], batch_size=8,
+                              pad_to=1)

@@ -185,12 +185,22 @@ def test_vmap_ragged_without_mask_aware_loss_raises():
                 exec_mode="vmap")
 
 
-def test_vmap_refuses_privacy_knobs():
+def test_vmap_applies_privacy_knobs_in_graph():
+    """Since PR 4 the vmap path APPLIES the privacy transforms instead
+    of refusing them: the Alg.-1 trainer with secure aggregation runs
+    fused and the masks still cancel in the combine."""
     cfg, loss, loss_sum, init, clients = _make_setup()
-    fed = FederatedConfig(num_clients=3, secure_aggregation=True)
-    with pytest.raises(NotImplementedError):
-        FederatedTrainer(loss, init, clients, fed, batch_size=32,
-                         exec_mode="vmap")
+    fed = FederatedConfig(num_clients=3, learning_rate=1e-2, max_rounds=4,
+                          rel_tol=0.0, secure_aggregation=True)
+    fed_plain = FederatedConfig(num_clients=3, learning_rate=1e-2,
+                                max_rounds=4, rel_tol=0.0)
+    sec = FederatedTrainer(loss, init, clients, fed, batch_size=32,
+                           exec_mode="vmap", loss_sum_fn=loss_sum)
+    plain = FederatedTrainer(loss, init, clients, fed_plain, batch_size=32,
+                             exec_mode="vmap", loss_sum_fn=loss_sum)
+    sec.fit(seed=0)
+    plain.fit(seed=0)
+    assert _max_dev(sec.params, plain.params) < 1e-4   # masks cancel
 
 
 def test_unknown_exec_mode_raises():
