@@ -1,14 +1,15 @@
 """Loop-vs-vmap cohort execution sweep (the vectorized engine's headline).
 
-For each (K clients-per-round, E local epochs) cell the SAME synthetic
-federation is stepped with ``RoundEngine(exec_mode="loop")`` — one jitted
-grad dispatch per client per epoch, host round-trips between them — and
-``exec_mode="vmap"`` — all K local-update loops, the Eq. (2) combine and
-the server optimizer fused into one jitted graph (DESIGN.md §4).  Both
-modes retrace the same parameter trajectory (property suite in
-tests/test_vmap_equivalence.py); this benchmark records what that costs:
-steady-state seconds per round (post-warm-up, so compile time is
-excluded) and the loop/vmap speedup per cell.
+Each (K clients-per-round, E local epochs) cell is ONE declarative
+``FederationSpec`` (``repro.api``) run through ``Federation.from_spec``
+twice over the same synthetic federation: ``exec_mode="loop"`` — one
+jitted grad dispatch per client per epoch, host round-trips between
+them — and ``exec_mode="vmap"`` — all K local-update loops, the Eq. (2)
+combine and the server optimizer fused into one jitted graph
+(DESIGN.md §4).  Both modes retrace the same parameter trajectory
+(property suite in tests/test_vmap_equivalence.py); this benchmark
+records what that costs: steady-state seconds per round (post-warm-up,
+so compile time is excluded) and the loop/vmap speedup per cell.
 
     PYTHONPATH=src python -m benchmarks.bench_clients \\
         --out experiments/bench_clients.json
@@ -28,25 +29,19 @@ import os
 import time
 
 import jax
-import numpy as np
 
-from repro.configs.base import NTM, FederatedConfig, ModelConfig, RoundConfig
-from repro.core.ntm import prodlda
-from repro.core.protocol import ClientState
-from repro.core.rounds import RoundEngine
-from repro.data.synthetic_lda import generate_lda_corpus
+from repro.api import (DataSpec, ExecutionSpec, Federation, FederationSpec,
+                       ModelSpec, ScheduleSpec, build_corpus, max_param_dev,
+                       spec_replace)
+from repro.core.engine import FederationEngine
 
 K_SWEEP = (4, 16, 64)
 E_SWEEP = (1, 4)
 
-
-def _max_dev(a, b) -> float:
-    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
-               for x, y in zip(jax.tree_util.tree_leaves(a),
-                               jax.tree_util.tree_leaves(b)))
+_max_dev = max_param_dev
 
 
-def _time_rounds(eng: RoundEngine, *, warmup: int, rounds: int,
+def _time_rounds(eng: FederationEngine, *, warmup: int, rounds: int,
                  seed: int) -> float:
     """Steady-state mean seconds/round (first ``warmup`` rounds excluded —
     they pay tracing + compilation)."""
@@ -64,30 +59,27 @@ def run(out_path="experiments/bench_clients.json", *, vocab=1000, topics=20,
         hidden=64, docs_per_client=96, batch=64, lr=2e-3, seed=0,
         warmup=1, rounds=3, k_sweep=K_SWEEP, e_sweep=E_SWEEP):
     num_clients = max(k_sweep)
-    cfg = ModelConfig(name="bench-clients", kind=NTM, vocab_size=vocab,
-                      num_topics=topics, ntm_hidden=(hidden, hidden))
-    syn = generate_lda_corpus(
-        vocab_size=vocab, num_topics=topics, num_nodes=num_clients,
-        shared_topics=max(topics // 5, 1), docs_per_node=docs_per_client,
-        val_docs_per_node=8, seed=seed)
-    loss_fn = lambda p, b: prodlda.elbo_loss(p, cfg, b, train=False)  # noqa: E731,E501
-    loss_sum_fn = lambda p, b: prodlda.elbo_loss_sum(p, cfg, b, train=False)  # noqa: E731,E501
-    init = prodlda.init_params(jax.random.PRNGKey(seed), cfg)
-    clients = [ClientState(data={"bow": b}, num_docs=len(b))
-               for b in syn.node_bows]
-    fed = FederatedConfig(num_clients=num_clients, learning_rate=lr,
-                          max_rounds=warmup + rounds, rel_tol=0.0)
+    base = FederationSpec(
+        name="bench-clients",
+        model=ModelSpec(vocab=vocab, topics=topics, hidden=hidden),
+        data=DataSpec(num_clients=num_clients,
+                      docs_per_node=docs_per_client, val_docs_per_node=8),
+        schedule=ScheduleSpec(rounds=warmup + rounds),
+        execution=ExecutionSpec(batch_size=batch, learning_rate=lr,
+                                rel_tol=0.0, seed=seed))
+    syn = build_corpus(base)
 
     results = []
     for k in k_sweep:
         for e in e_sweep:
-            rc = RoundConfig(clients_per_round=k, local_epochs=e,
-                             sampling_seed=seed)
-            loop = RoundEngine(loss_fn, init, clients, fed, rc,
-                               batch_size=batch, exec_mode="loop")
-            vm = RoundEngine(loss_fn, init, clients, fed, rc,
-                             batch_size=batch, exec_mode="vmap",
-                             loss_sum_fn=loss_sum_fn)
+            spec = spec_replace(base, {"schedule.clients_per_round": k,
+                                       "schedule.local_epochs": e})
+            loop = Federation.from_spec(
+                spec_replace(spec, {"execution.exec_mode": "loop"}),
+                corpus=syn).engine
+            vm = Federation.from_spec(
+                spec_replace(spec, {"execution.exec_mode": "vmap"}),
+                corpus=syn).engine
             t_loop = _time_rounds(loop, warmup=warmup, rounds=rounds,
                                   seed=seed)
             t_vmap = _time_rounds(vm, warmup=warmup, rounds=rounds,

@@ -1,14 +1,17 @@
 """Non-IID scenario-suite sweep over the unified FederationEngine.
 
-One synthetic federation, many regimes: for each named scenario
-(partitioner x participation x staleness x heterogeneity x transforms)
-the engine is stepped in BOTH execution modes and the sweep records
+One synthetic federation, many regimes: the cells are the NAMED registry
+scenarios of ``repro.api.registry`` (``BENCH_SCENARIOS``), rebased onto
+a bench-sized ``FederationSpec`` — there is no bench-local engine
+wiring, so the sweep, the CLI and the CI gate can never drift apart.
+For each scenario the spec is compiled through
+``Federation.from_spec`` in BOTH execution modes and the sweep records
 steady-state seconds/round, the loop-vs-vmap speedup, the max loop/vmap
-parameter deviation (the correctness tripwire — since PR 4 that
-includes the dp/topk/secure transform cells, which run IN-GRAPH on the
-vmap path), the vmap trace count (the fixed-K retrace-free contract:
-every scenario must compile its fused graph exactly once, including
-``dropout-join``'s churning cohort sizes), and the final training loss.
+parameter deviation (the correctness tripwire — the dp/topk/secure
+transform cells run IN-GRAPH on the vmap path), the vmap trace count
+(the fixed-K retrace-free contract: every scenario must compile its
+fused graph exactly once, including ``dropout-join``'s churning cohort
+sizes), and the final training loss.
 
 Two headline measurements:
   * ``straggler_over_sync_vmap`` — the fused in-graph ring buffer
@@ -45,42 +48,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import NTM, FederatedConfig, ModelConfig, RoundConfig
-from repro.core.ntm import prodlda
-from repro.core.rounds import RoundEngine
+from repro.api import (BENCH_SCENARIOS, DataSpec, ExecutionSpec, Federation,
+                       FederationSpec, ModelSpec, ScheduleSpec, build_corpus,
+                       max_param_dev, scenario_spec, spec_replace)
+from repro.core.engine import FederationEngine
 from repro.core.transforms import pairwise_mask_stack
-from repro.data.synthetic_lda import generate_lda_corpus
-from repro.launch.simulate import build_clients
+
+_max_dev = max_param_dev
 
 
-def scenario_grid(k: int, rounds_for_leave: int):
-    """The scenario suite: name -> (partition spec, RoundConfig kwargs).
-
-    Every scenario keeps K participants per round so the timing columns
-    are comparable; the first two cells are the sync-vs-straggler
-    headline pair.
-    """
-    join = (0,) * (k - 1) + (2,)             # one late joiner
-    leave = (0,) * (k - 1) + (max(rounds_for_leave - 1, 1),)
-    return {
-        "sync": ("topic", {}),
-        "straggler": ("topic", dict(straggler_prob=0.3, max_staleness=3,
-                                    staleness_decay=0.5)),
-        "straggler-heavy": ("topic", dict(straggler_prob=0.6,
-                                          max_staleness=3,
-                                          staleness_decay=0.25)),
-        "dirichlet-noniid": ("dirichlet(0.3)", {}),
-        "quantity-skew": ("quantity_skew(0.5)", {}),
-        "hetero-epochs": ("topic", dict(local_epochs_by_client=(1, 2, 4))),
-        "dropout-join": ("topic", dict(client_join_round=join,
-                                       client_leave_round=leave)),
-        "dp-transform": ("topic", dict(transforms=("dp",))),
-        "topk-transform": ("topic", dict(transforms=("topk",))),
-        "secure-transform": ("topic", dict(transforms=("secure",))),
-        "dp-straggler": ("topic", dict(transforms=("dp",),
-                                       straggler_prob=0.3, max_staleness=3,
-                                       staleness_decay=0.5)),
-    }
+def base_spec(*, vocab, topics, hidden, num_clients, docs_per_client,
+              batch, lr, seed, rounds) -> FederationSpec:
+    """The bench-sized base every scenario cell is rebased onto."""
+    return FederationSpec(
+        name="bench-scenarios",
+        model=ModelSpec(vocab=vocab, topics=topics, hidden=hidden),
+        data=DataSpec(num_clients=num_clients,
+                      docs_per_node=docs_per_client, val_docs_per_node=8),
+        schedule=ScheduleSpec(rounds=rounds),
+        execution=ExecutionSpec(batch_size=batch, learning_rate=lr,
+                                rel_tol=0.0, seed=seed))
 
 
 def secure_mask_cancellation(num_clients: int, seed: int = 0) -> float:
@@ -95,13 +82,7 @@ def secure_mask_cancellation(num_clients: int, seed: int = 0) -> float:
                for leaf in jax.tree_util.tree_leaves(stack))
 
 
-def _max_dev(a, b) -> float:
-    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
-               for x, y in zip(jax.tree_util.tree_leaves(a),
-                               jax.tree_util.tree_leaves(b)))
-
-
-def _time_rounds(eng: RoundEngine, *, warmup: int, rounds: int,
+def _time_rounds(eng: FederationEngine, *, warmup: int, rounds: int,
                  seed: int) -> float:
     """Steady-state MEDIAN seconds/round (first ``warmup`` rounds excluded
     — they pay tracing + compilation).  The median, not the mean: a
@@ -122,55 +103,36 @@ def _time_rounds(eng: RoundEngine, *, warmup: int, rounds: int,
 def run(out_path="experiments/bench_scenarios.json", *, vocab=1000,
         topics=20, hidden=64, num_clients=16, docs_per_client=96, batch=64,
         lr=2e-3, seed=0, warmup=2, rounds=4, scenarios=None):
-    cfg = ModelConfig(name="bench-scenarios", kind=NTM, vocab_size=vocab,
-                      num_topics=topics, ntm_hidden=(hidden, hidden))
-    syn = generate_lda_corpus(
-        vocab_size=vocab, num_topics=topics, num_nodes=num_clients,
-        shared_topics=max(topics // 5, 1), docs_per_node=docs_per_client,
-        val_docs_per_node=8, seed=seed)
-    loss_fn = lambda p, b: prodlda.elbo_loss(p, cfg, b, train=False)  # noqa: E731,E501
-    loss_sum_fn = lambda p, b: prodlda.elbo_loss_sum(p, cfg, b, train=False)  # noqa: E731,E501
-    init = prodlda.init_params(jax.random.PRNGKey(seed), cfg)
-    fed = FederatedConfig(num_clients=num_clients, learning_rate=lr,
-                          max_rounds=warmup + rounds, rel_tol=0.0)
-    grid = scenario_grid(num_clients, warmup + rounds)
+    base = base_spec(vocab=vocab, topics=topics, hidden=hidden,
+                     num_clients=num_clients,
+                     docs_per_client=docs_per_client, batch=batch, lr=lr,
+                     seed=seed, rounds=warmup + rounds)
+    syn = build_corpus(base)
+    names = BENCH_SCENARIOS
     if scenarios:
-        unknown = sorted(set(scenarios) - set(grid))
+        unknown = sorted(set(scenarios) - set(BENCH_SCENARIOS))
         if unknown:
             raise ValueError(f"unknown scenario(s) {unknown}; known: "
-                             f"{sorted(grid)} — a typo must not silently "
-                             "shrink the sweep")
-        grid = {k: v for k, v in grid.items() if k in scenarios}
+                             f"{sorted(BENCH_SCENARIOS)} — a typo must "
+                             "not silently shrink the sweep")
+        names = tuple(n for n in BENCH_SCENARIOS if n in scenarios)
 
     results = []
-    for name, (partition, rc_kw) in grid.items():
-        rc_kw = dict(rc_kw, sampling_seed=seed, partition=partition)
-        tnames = rc_kw.get("transforms", ())
-        if tnames:
-            # clip/noise/frac sized for DELTA messages (magnitude ~
-            # lr * |G|), not raw gradients
-            sfed = FederatedConfig(
-                num_clients=num_clients, learning_rate=lr,
-                max_rounds=warmup + rounds, rel_tol=0.0,
-                dp_noise_multiplier=0.3 if "dp" in tnames else 0.0,
-                dp_clip_norm=0.05,
-                compression_topk=0.25 if "topk" in tnames else 0.0)
-        else:
-            sfed = fed
-        rc = RoundConfig(**rc_kw)
-        clients = build_clients(syn, num_clients, partition, seed=seed)
-
-        loop = RoundEngine(loss_fn, init, clients, sfed, rc,
-                           batch_size=batch, exec_mode="loop",
-                           loss_sum_fn=loss_sum_fn)
+    for name in names:
+        spec = scenario_spec(name, base)
+        loop = Federation.from_spec(
+            spec_replace(spec, {"execution.exec_mode": "loop"}),
+            corpus=syn).engine
         t_loop = _time_rounds(loop, warmup=warmup, rounds=rounds, seed=seed)
-        # since PR 4 every scenario — transforms included — rides the
-        # fused vmap path; the loop run above is its reference
-        vm = RoundEngine(loss_fn, init, clients, sfed, rc,
-                         batch_size=batch, exec_mode="vmap",
-                         loss_sum_fn=loss_sum_fn)
+        # every scenario — transforms included — rides the fused vmap
+        # path; the loop run above is its reference
+        vm = Federation.from_spec(
+            spec_replace(spec, {"execution.exec_mode": "vmap"}),
+            corpus=syn).engine
         t_vmap = _time_rounds(vm, warmup=warmup, rounds=rounds, seed=seed)
-        rec = {"scenario": name, "partition": partition,
+        clients = loop.clients
+        rec = {"scenario": name,
+               "partition": spec.data.partition.to_string(),
                "loop_s_per_round": t_loop,
                "vmap_s_per_round": t_vmap,
                "speedup": t_loop / max(t_vmap, 1e-12),

@@ -22,19 +22,31 @@ and enforces a two-tier policy:
       - any scenario's vmap seconds/round or loop/vmap speedup worsened
         beyond the allowed ratio.
 
+The gate's notion of "a scenario" is the NAMED registry of
+``repro.api.registry`` — a payload scenario the registry does not know
+is a hard failure (the bench and the declarative API drifted), and the
+``--spec-validate`` mode round-trips every registry scenario and every
+JSON spec under ``examples/specs/`` through the
+``FederationSpec`` validator (``from_dict(to_dict()) == spec``, JSON
+round trip included) so an invalid or unserializable scenario can never
+land.
+
 Usage (what .github/workflows/ci.yml runs):
 
     python -m benchmarks.ci_gate experiments/bench_scenarios_ci.json \\
         benchmarks/baselines/BENCH_scenarios_ci.json
+    python -m benchmarks.ci_gate --spec-validate
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 DEV_BOUND = 1e-5
 TIMING_SLACK = 2.0       # warn when current > slack * baseline
+SPECS_DIR = "examples/specs"
 
 
 def _warn(msg: str) -> None:
@@ -54,6 +66,24 @@ def gate(current: dict, baseline: dict, *,
         if name not in cur:
             failures.append(f"scenario {name!r} present in baseline but "
                             "missing from the current payload")
+    # the gate's cells ARE the named registry scenarios — a payload name
+    # the registry doesn't know means the bench and the API drifted.
+    # The trend gate itself stays runnable in a stdlib-only env (its
+    # pre-PR-5 contract): if repro isn't importable the membership
+    # check is skipped with a warning, never a traceback.
+    try:
+        from repro.api.registry import SCENARIOS
+    except ImportError:
+        SCENARIOS = None
+        _warn("repro.api not importable (set PYTHONPATH=src) — skipping "
+              "the registry-membership gate")
+    if SCENARIOS is not None:
+        unregistered = sorted(set(cur) - set(SCENARIOS))
+        if unregistered:
+            failures.append(
+                f"scenario(s) {unregistered} in the payload are not in "
+                "the named registry (repro.api.registry.SCENARIOS) — "
+                "bench cells must be registry scenarios")
     for name, r in cur.items():
         dev = r.get("max_param_dev")
         if dev is None or not dev < dev_bound:
@@ -102,13 +132,91 @@ def gate(current: dict, baseline: dict, *,
     return 0
 
 
+def spec_validate(specs_dir: str = SPECS_DIR) -> int:
+    """Round-trip every registry scenario and every ``examples/specs``
+    JSON file through the FederationSpec validator.
+
+    Hard-fails (exit 1) when a scenario fails validation, when
+    ``from_dict(to_dict())`` / JSON round-tripping drifts, or when the
+    specs directory is missing — the step must stay honest even if the
+    example files are deleted.
+    """
+    from repro.api.registry import SCENARIOS, scenario_spec
+    from repro.api.spec import FederationSpec
+
+    failures = []
+    for name in sorted(SCENARIOS):
+        try:
+            s = scenario_spec(name)
+            if FederationSpec.from_dict(s.to_dict()) != s:
+                failures.append(f"registry scenario {name!r}: "
+                                "from_dict(to_dict()) round-trip drifted")
+            if FederationSpec.from_json(s.to_json()) != s:
+                failures.append(f"registry scenario {name!r}: JSON "
+                                "round-trip drifted")
+        except Exception as e:  # validator errors included
+            failures.append(f"registry scenario {name!r}: {e}")
+
+    files = []
+    if os.path.isdir(specs_dir):
+        files = sorted(f for f in os.listdir(specs_dir)
+                       if f.endswith(".json"))
+        if not files:
+            failures.append(f"no *.json specs under {specs_dir!r} — the "
+                            "example specs are part of the contract")
+        for fn in files:
+            path = os.path.join(specs_dir, fn)
+            try:
+                s = FederationSpec.load(path)
+                if FederationSpec.from_dict(s.to_dict()) != s:
+                    failures.append(f"{path}: from_dict(to_dict()) "
+                                    "round-trip drifted")
+                # a spec file named after a registry scenario must BE
+                # that scenario — docs point at both interchangeably
+                stem = os.path.splitext(fn)[0]
+                if stem in SCENARIOS and s != scenario_spec(stem):
+                    failures.append(
+                        f"{path}: drifted from registry scenario "
+                        f"{stem!r} — regenerate it with "
+                        f"scenario_spec({stem!r}).save(...)")
+            except Exception as e:
+                failures.append(f"{path}: {e}")
+    else:
+        failures.append(f"spec directory {specs_dir!r} missing")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print(f"spec-validate: {len(SCENARIOS)} registry scenarios + "
+          f"{len(files)} spec file(s) under {specs_dir} round-trip "
+          "through the validator")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current", help="freshly produced bench payload")
-    ap.add_argument("baseline", help="committed BENCH_*.json baseline")
+    ap.add_argument("current", nargs="?",
+                    help="freshly produced bench payload")
+    ap.add_argument("baseline", nargs="?",
+                    help="committed BENCH_*.json baseline")
     ap.add_argument("--dev-bound", type=float, default=DEV_BOUND)
     ap.add_argument("--timing-slack", type=float, default=TIMING_SLACK)
+    ap.add_argument("--spec-validate", action="store_true",
+                    help="round-trip every registry scenario and every "
+                         f"JSON spec under --specs-dir ({SPECS_DIR}) "
+                         "through the FederationSpec validator")
+    ap.add_argument("--specs-dir", default=SPECS_DIR)
     a = ap.parse_args(argv)
+    if a.spec_validate:
+        if a.current or a.baseline:
+            ap.error("--spec-validate is a standalone mode — payload "
+                     "arguments would be silently ignored; run the "
+                     "trend gate as a separate invocation")
+        return spec_validate(a.specs_dir)
+    if not (a.current and a.baseline):
+        ap.error("current and baseline payload paths are required "
+                 "(or pass --spec-validate)")
     with open(a.current) as f:
         current = json.load(f)
     with open(a.baseline) as f:

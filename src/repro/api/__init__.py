@@ -1,0 +1,20 @@
+"""Declarative federation API (docs/api.md).
+
+One serializable scenario surface over the unified engine:
+
+  * :class:`FederationSpec` — the versioned, validating spec tree
+    (``to_dict``/``from_dict``, JSON file round trip);
+  * :class:`Federation` — the run facade (``from_spec`` / ``run`` /
+    ``step`` / ``on_round_end`` / ``state_dict``-resume / ``evaluate``);
+  * the named scenario registry (``scenario_spec("paper")``, ...).
+"""
+from repro.api.federation import (  # noqa: F401
+    Federation, build_clients, build_corpus, heldout_elbo_per_token,
+    heldout_perplexity, max_param_dev)
+from repro.api.registry import (  # noqa: F401
+    BENCH_SCENARIOS, SCENARIOS, register_scenario, scenario_names,
+    scenario_spec)
+from repro.api.spec import (  # noqa: F401
+    SPEC_VERSION, DataSpec, ExecutionSpec, FederationSpec, ModelSpec,
+    PartitionSpec, ScheduleSpec, ServerOptSpec, TransformsSpec,
+    parse_int_tuple, spec_replace)

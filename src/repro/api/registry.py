@@ -1,0 +1,118 @@
+"""Named scenario registry: one name -> one `FederationSpec`.
+
+Every scenario the repo talks about — in benchmarks, CI gates, docs,
+tests — is a NAMED entry here, expressed as a dotted-path override set
+(:func:`repro.api.spec.spec_replace`) applied to a base spec.  That
+makes the registry the single point the scenario suite, the bench
+cells (``benchmarks/bench_scenarios.py``), the CI gate
+(``benchmarks/ci_gate.py --spec-validate``) and the CLI
+(``simulate.py --scenario <name>``) all compile from: a scenario
+renamed or re-knobbed here changes everywhere at once, and the gate
+hard-fails if a bench payload ever carries a name this registry does
+not know.
+
+Entries are override dicts; an entry may instead be a callable
+``(base: FederationSpec) -> overrides`` for scenarios whose knobs
+depend on the base's size (e.g. ``dropout-join``'s per-client
+join/leave tuples).  ``scenario_spec(name)`` builds the spec over the
+all-defaults (paper-sized) base; ``scenario_spec(name, base)`` rebases
+it onto a caller-sized federation (what the benchmarks do).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional, Union
+
+from repro.api.spec import FederationSpec, spec_replace
+
+Overrides = Union[Mapping[str, Any],
+                  Callable[[FederationSpec], Mapping[str, Any]]]
+
+# dp clip/noise sized for DELTA messages (magnitude ~ lr * |G|), not raw
+# gradients — the same sizing the scenario bench has always used
+_DP_KNOBS = {"transforms.dp_noise_multiplier": 0.3,
+             "transforms.dp_clip_norm": 0.05}
+_STRAGGLER_KNOBS = {"schedule.straggler_prob": 0.3,
+                    "schedule.max_staleness": 3,
+                    "schedule.staleness_decay": 0.5}
+_DIRICHLET = {"data.partition": "dirichlet(0.3)"}
+
+
+def _dropout_join(base: FederationSpec) -> Dict[str, Any]:
+    """One late joiner + one early leaver, sized to the base federation
+    (byte-identical to the pre-redesign ``scenario_grid`` tuples)."""
+    k, r = base.data.num_clients, base.schedule.rounds
+    return {"schedule.client_join_round": (0,) * (k - 1) + (2,),
+            "schedule.client_leave_round": (0,) * (k - 1)
+            + (max(r - 1, 1),)}
+
+
+SCENARIOS: Dict[str, Overrides] = {
+    # the paper regime: all defaults (topic partition, K = L, E = 1,
+    # synchronous, FedAvg(server_lr=1) == Eq. (3) server SGD)
+    "paper": {},
+    # ---- the scenario-bench grid (benchmarks/bench_scenarios.py) ------
+    "sync": {},
+    "straggler": dict(_STRAGGLER_KNOBS),
+    "straggler-heavy": {"schedule.straggler_prob": 0.6,
+                        "schedule.max_staleness": 3,
+                        "schedule.staleness_decay": 0.25},
+    "dirichlet-noniid": dict(_DIRICHLET),
+    "quantity-skew": {"data.partition": "quantity_skew(0.5)"},
+    "hetero-epochs": {"schedule.local_epochs_by_client": (1, 2, 4)},
+    "dropout-join": _dropout_join,
+    "dp-transform": {"transforms.names": ("dp",), **_DP_KNOBS},
+    "topk-transform": {"transforms.names": ("topk",),
+                       "transforms.compression_topk": 0.25},
+    "secure-transform": {"transforms.names": ("secure",)},
+    "dp-straggler": {"transforms.names": ("dp",), **_DP_KNOBS,
+                     **_STRAGGLER_KNOBS},
+    # ---- fused-path presets -------------------------------------------
+    # the in-graph straggler ring buffer (DESIGN.md §4)
+    "straggler_ring": {**_STRAGGLER_KNOBS,
+                       "execution.exec_mode": "vmap"},
+    # label-skewed + local-DP messages on the fused vmap path: the
+    # private path and the fast path composing (PR 4)
+    "private_vmap": {**_DIRICHLET, "transforms.names": ("dp",),
+                     **_DP_KNOBS, "execution.exec_mode": "vmap"},
+    # alias of dirichlet-noniid under the related-work spelling
+    "dirichlet_niid": dict(_DIRICHLET),
+}
+
+# the scenario-bench sweep, in sweep order — bench_scenarios.py and the
+# CI gate both derive their cell lists from this tuple
+BENCH_SCENARIOS = ("sync", "straggler", "straggler-heavy",
+                   "dirichlet-noniid", "quantity-skew", "hetero-epochs",
+                   "dropout-join", "dp-transform", "topk-transform",
+                   "secure-transform", "dp-straggler")
+assert set(BENCH_SCENARIOS) <= set(SCENARIOS)
+
+
+def scenario_names() -> list:
+    return sorted(SCENARIOS)
+
+
+def scenario_spec(name: str,
+                  base: Optional[FederationSpec] = None) -> FederationSpec:
+    """Build the named scenario's spec (over ``base``, default = the
+    paper-sized all-defaults spec).  The result's ``name`` is the
+    scenario name; unknown names raise ``ValueError`` listing the
+    registry — a typo must never silently run a different scenario."""
+    if name not in SCENARIOS:
+        raise ValueError(f"unknown scenario {name!r}; known: "
+                         f"{scenario_names()}")
+    base = base if base is not None else FederationSpec()
+    ov = SCENARIOS[name]
+    if callable(ov):
+        ov = ov(base)
+    spec = spec_replace(base, ov)
+    return dataclasses.replace(spec, name=name)
+
+
+def register_scenario(name: str, overrides: Overrides, *,
+                      overwrite: bool = False) -> None:
+    """Add a scenario at runtime (sweep drivers, notebooks, tests)."""
+    if name in SCENARIOS and not overwrite:
+        raise ValueError(f"scenario {name!r} already registered; pass "
+                         "overwrite=True to replace it")
+    SCENARIOS[name] = overrides

@@ -1,0 +1,695 @@
+"""`FederationSpec` — the declarative, serializable scenario tree.
+
+Every federated scenario this repo can express (the paper's Algorithm-1
+regime and every beyond-paper composition of partitioner x participation
+x staleness x heterogeneity x transforms x server optimizer x execution
+mode) is describable as ONE versioned dataclass tree:
+
+    FederationSpec
+      ├── model        what topic model the federation trains (ProdLDA)
+      ├── data         synthetic federation + partition sub-spec
+      │     └── partition   registry partitioner (kind + alpha)
+      ├── schedule     rounds, participation, staleness, heterogeneity
+      ├── transforms   message privacy/compression stage (dp/topk/secure)
+      ├── server_opt   server-side update rule on the combined delta
+      └── execution    exec mode, batch, client lr, seeds, stopping
+
+The tree is the single source of truth three consumers compile from:
+
+  * :class:`repro.api.federation.Federation` — the run facade
+    (``Federation.from_spec(spec).run()``);
+  * ``launch/simulate.py`` — legacy CLI flags compile into a spec
+    (``spec_from_args``), ``--spec file.json`` loads one verbatim;
+  * ``benchmarks/bench_scenarios.py`` / ``bench_clients.py`` — cells are
+    named registry scenarios (``repro.api.registry``) over a sized base
+    spec.
+
+Specs VALIDATE at construction (``__post_init__``): every field is
+range-checked and cross-section incoherences (a declared ``dp``
+transform without noise, ``secure`` under stragglers, privacy knobs
+without a declared transform stage) raise ``ValueError`` with an
+actionable message — the same refusals ``core/engine.py`` enforces,
+surfaced before any corpus is built.
+
+Serialization contract (pinned by tests/test_api_spec.py and the CI
+``spec-validate`` step):
+
+    FederationSpec.from_dict(spec.to_dict()) == spec
+    FederationSpec.from_json(spec.to_json()) == spec
+
+``to_dict`` emits plain JSON types (tuples become lists); ``from_dict``
+is STRICT — unknown sections or keys and unsupported ``version`` values
+raise instead of being silently dropped, so a typo in a spec file can
+never quietly run the wrong scenario.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+from repro.configs.base import NTM, FederatedConfig, ModelConfig, RoundConfig
+from repro.core.aggregation import SERVER_OPTIMIZERS
+from repro.core.engine import EXEC_MODES, RoundScheduler
+from repro.core.transforms import TRANSFORMS
+from repro.data.federated_split import parse_partition_spec
+
+SPEC_VERSION = 1
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(f"invalid FederationSpec: {msg}")
+
+
+# the process umask, probed ONCE at import (single-threaded): toggling
+# it per write would briefly zero the process-wide umask under threads
+_UMASK = os.umask(0)
+os.umask(_UMASK)
+
+
+def atomic_write(path: str, writer, *, binary: bool = False) -> str:
+    """Atomic file write (tmp + rename): ``writer(f)`` fills the file.
+
+    The single home for the spec/snapshot write discipline —
+    ``FederationSpec.save`` and ``Federation.save_state`` both go
+    through here, so a durability fix lands in one place.
+    """
+    dirname = os.path.dirname(path) or "."
+    os.makedirs(dirname, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".tmp")
+    try:
+        # mkstemp files are 0600; match what a plain open() would have
+        # created so dumped specs/snapshots stay shareable
+        os.chmod(tmp, 0o666 & ~_UMASK)
+        with os.fdopen(fd, "wb" if binary else "w") as f:
+            writer(f)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def parse_int_tuple(s, *, what: str = "int list",
+                    minimum: int = 0) -> Tuple[int, ...]:
+    """Parse a comma-separated int list STRICTLY (the CLI front-door).
+
+    Unlike the pre-redesign ``_int_tuple`` — which silently dropped
+    empty elements, so ``--hetero-epochs 1,,4`` trained a different
+    schedule than the user wrote — every malformed or out-of-range
+    element raises ``ValueError`` naming the offending position:
+
+    >>> parse_int_tuple("1,2,4")
+    (1, 2, 4)
+    >>> parse_int_tuple("")
+    ()
+
+    ``what`` names the flag/field in the error message; ``minimum``
+    rejects values below it (epochs schedules pass ``minimum=1``).
+    """
+    if s is None:
+        return ()
+    if isinstance(s, (tuple, list)):
+        out = []
+        for i, x in enumerate(s):
+            if isinstance(x, bool) or not isinstance(x, int):
+                raise ValueError(f"{what}: {x!r} at position {i} is not "
+                                 "an integer")
+            if x < minimum:
+                raise ValueError(
+                    f"{what}: {x} at position {i} is out of range "
+                    f"(must be >= {minimum})")
+            out.append(x)
+        return tuple(out)
+    toks = str(s).split(",")
+    if len(toks) == 1 and not toks[0].strip():
+        return ()
+    out = []
+    for pos, tok in enumerate(toks):
+        t = tok.strip()
+        if not t:
+            raise ValueError(
+                f"{what}: empty element at position {pos} in {s!r} — "
+                "write an explicit integer for every comma-separated "
+                "slot (e.g. '1,2,4'); elements are never silently "
+                "dropped")
+        try:
+            v = int(t)
+        except ValueError:
+            raise ValueError(
+                f"{what}: {t!r} at position {pos} in {s!r} is not an "
+                "integer") from None
+        if v < minimum:
+            raise ValueError(
+                f"{what}: {v} at position {pos} in {s!r} is out of "
+                f"range (must be >= {minimum})")
+        out.append(v)
+    return tuple(out)
+
+
+def _check_int(v, where: str, minimum: int, *,
+               allow_none: bool = False) -> None:
+    """Scalar int field check: TYPE first (floats/bools would validate
+    on the range check alone, then crash or misbehave far from the
+    spec — 'rounds': 5.5 runs range() wrong, 'vocab': 64.5 dies inside
+    jax init), then range."""
+    if v is None and allow_none:
+        return
+    _require(isinstance(v, int) and not isinstance(v, bool),
+             f"{where} must be an int, got {v!r}")
+    _require(v >= minimum, f"{where} must be >= {minimum}, got {v}")
+
+
+def _check_float(v, where: str, minimum: Optional[float] = None,
+                 maximum: Optional[float] = None, *,
+                 exclusive_min: bool = False) -> None:
+    """Float field check: TYPE first — a JSON string like '0.5' would
+    otherwise escape the range comparison as a raw TypeError with no
+    spec context.  Ints are acceptable float values; bools are not."""
+    _require(isinstance(v, (int, float)) and not isinstance(v, bool),
+             f"{where} must be a number, got {v!r}")
+    if minimum is not None:
+        if exclusive_min:
+            _require(v > minimum, f"{where} must be > {minimum}, got {v}")
+        else:
+            _require(v >= minimum,
+                     f"{where} must be >= {minimum}, got {v}")
+    if maximum is not None:
+        _require(v <= maximum, f"{where} must be <= {maximum}, got {v}")
+
+
+def _check_bool(v, where: str) -> None:
+    """Bool field check: the JSON string "false" is truthy — accepting
+    it would silently run the wrong scenario."""
+    _require(isinstance(v, bool), f"{where} must be true/false, got "
+                                  f"{v!r}")
+
+
+def _check_int_tuple(v, where: str, minimum: int = 0) -> None:
+    _require(isinstance(v, tuple),
+             f"{where} must be a tuple/list of ints, got "
+             f"{type(v).__name__}")
+    for i, x in enumerate(v):
+        _require(isinstance(x, int) and not isinstance(x, bool),
+                 f"{where}[{i}] must be an int, got {x!r}")
+        _require(x >= minimum,
+                 f"{where}[{i}] must be >= {minimum}, got {x}")
+
+
+# ---------------------------------------------------------------------------
+# sections
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ModelSpec:
+    """``model`` section: the ProdLDA topic model the federation trains."""
+    vocab: int = 400
+    topics: int = 10
+    hidden: int = 64            # both encoder MLP widths
+
+    def _validate(self) -> None:
+        _check_int(self.vocab, "model.vocab", 2)
+        _check_int(self.topics, "model.topics", 1)
+        _check_int(self.hidden, "model.hidden", 1)
+
+
+@dataclass(frozen=True)
+class PartitionSpec:
+    """``data.partition`` sub-section: registry partitioner + alpha.
+
+    Serializes as ``{"kind": ..., "alpha": ...}`` but also accepts the
+    CLI's string form (``"dirichlet(0.3)"``) anywhere a partition value
+    appears; ``alpha=None`` means the partitioner's default.
+    """
+    kind: str = "topic"
+    alpha: Optional[float] = None
+
+    @classmethod
+    def from_value(cls, v, where: str = "data.partition") -> "PartitionSpec":
+        if isinstance(v, cls):
+            return v
+        if isinstance(v, str):
+            name, kw = parse_partition_spec(v)
+            return cls(kind=name, alpha=kw.get("alpha"))
+        if isinstance(v, Mapping):
+            unknown = sorted(set(v) - {"kind", "alpha"})
+            if unknown:
+                raise ValueError(f"unknown key(s) {unknown} in {where}; "
+                                 "known: ['alpha', 'kind']")
+            return cls(kind=v.get("kind", "topic"), alpha=v.get("alpha"))
+        raise ValueError(
+            f"{where} must be a partition spec string (e.g. "
+            f"'dirichlet(0.3)') or a {{kind, alpha}} mapping, got "
+            f"{type(v).__name__}")
+
+    def to_string(self) -> str:
+        """The canonical CLI/`RoundConfig.partition` string form."""
+        if self.alpha is None:
+            return self.kind
+        return f"{self.kind}({self.alpha!r})"
+
+    def _validate(self) -> None:
+        # round-trip through the canonical parser: validates the kind
+        # against the registry, parametric-vs-not, and alpha > 0 —
+        # one set of error messages for the CLI and the spec
+        parse_partition_spec(self.to_string())
+
+
+@dataclass(frozen=True)
+class DataSpec:
+    """``data`` section: the synthetic LDA federation + its partition."""
+    num_clients: int = 5
+    docs_per_node: int = 400
+    val_docs_per_node: int = 80
+    # None -> max(model.topics // 5, 1), the historical simulate default
+    shared_topics: Optional[int] = None
+    # None -> execution.seed (the CLI's one-seed-everywhere convention)
+    seed: Optional[int] = None
+    partition: PartitionSpec = field(default_factory=PartitionSpec)
+
+    def _validate(self) -> None:
+        _check_int(self.num_clients, "data.num_clients", 1)
+        _check_int(self.docs_per_node, "data.docs_per_node", 1)
+        _check_int(self.val_docs_per_node, "data.val_docs_per_node", 0)
+        _check_int(self.shared_topics, "data.shared_topics", 0,
+                   allow_none=True)
+        # numpy's default_rng (corpus build, partitioners) rejects
+        # negative seeds — catch it here, not deep in corpus build
+        _check_int(self.seed, "data.seed", 0, allow_none=True)
+        _require(isinstance(self.partition, PartitionSpec),
+                 "data.partition must be a PartitionSpec (or the string/"
+                 "mapping forms accepted by from_dict)")
+        self.partition._validate()
+
+
+@dataclass(frozen=True)
+class ScheduleSpec:
+    """``schedule`` section: rounds, participation, staleness,
+    heterogeneity, availability — the `RoundConfig` regime surface."""
+    rounds: int = 100
+    clients_per_round: int = 0          # 0 = all clients (paper Alg. 1)
+    sampling: str = "uniform"
+    # None -> execution.seed
+    sampling_seed: Optional[int] = None
+    local_epochs: int = 1
+    local_epochs_by_client: Tuple[int, ...] = ()
+    client_join_round: Tuple[int, ...] = ()
+    client_leave_round: Tuple[int, ...] = ()
+    straggler_prob: float = 0.0
+    max_staleness: int = 0
+    staleness_decay: float = 0.5
+
+    def _validate(self) -> None:
+        _check_int(self.rounds, "schedule.rounds", 1)
+        _check_int(self.clients_per_round, "schedule.clients_per_round",
+                   0)
+        # the scheduler seeds numpy RNGs: non-negative only
+        _check_int(self.sampling_seed, "schedule.sampling_seed", 0,
+                   allow_none=True)
+        _require(self.sampling in RoundScheduler.MODES,
+                 f"schedule.sampling {self.sampling!r} is not one of "
+                 f"{RoundScheduler.MODES}")
+        _check_int(self.local_epochs, "schedule.local_epochs", 1)
+        _check_int_tuple(self.local_epochs_by_client,
+                         "schedule.local_epochs_by_client", minimum=1)
+        _check_int_tuple(self.client_join_round,
+                         "schedule.client_join_round")
+        _check_int_tuple(self.client_leave_round,
+                         "schedule.client_leave_round")
+        _check_float(self.straggler_prob, "schedule.straggler_prob",
+                     0.0, 1.0)
+        _check_int(self.max_staleness, "schedule.max_staleness", 0)
+        # outside [0, 1] stale deltas are amplified or sign-flipped
+        _check_float(self.staleness_decay, "schedule.staleness_decay",
+                     0.0, 1.0)
+
+
+@dataclass(frozen=True)
+class TransformsSpec:
+    """``transforms`` section: the ordered message-transform stage."""
+    names: Tuple[str, ...] = ()
+    dp_noise_multiplier: float = 0.0
+    dp_clip_norm: float = 1.0
+    compression_topk: float = 0.0
+
+    def _validate(self) -> None:
+        _require(isinstance(self.names, tuple),
+                 "transforms.names must be a tuple/list of transform "
+                 "names")
+        for n in self.names:
+            _require(n in TRANSFORMS,
+                     f"transforms.names entry {n!r} is not a registered "
+                     f"transform; known: {sorted(TRANSFORMS)}")
+        _check_float(self.dp_noise_multiplier,
+                     "transforms.dp_noise_multiplier", 0.0)
+        _check_float(self.dp_clip_norm, "transforms.dp_clip_norm", 0.0,
+                     exclusive_min=True)
+        _check_float(self.compression_topk, "transforms.compression_topk",
+                     0.0, 1.0)
+        # the never-silently-dropped contract, both directions (mirrors
+        # the engine's construction-time refusals with spec-level words)
+        if "dp" in self.names:
+            _require(self.dp_noise_multiplier > 0,
+                     "the 'dp' transform needs "
+                     "transforms.dp_noise_multiplier > 0 — with zero "
+                     "noise it would silently degrade to clip-only "
+                     "while claiming local DP")
+        elif self.dp_noise_multiplier > 0:
+            _require(False,
+                     "transforms.dp_noise_multiplier > 0 but 'dp' is "
+                     "not in transforms.names — declare the stage "
+                     "explicitly (names=('dp', ...)); privacy knobs are "
+                     "never silently dropped")
+        if "topk" in self.names:
+            _require(self.compression_topk > 0,
+                     "the 'topk' transform needs "
+                     "transforms.compression_topk > 0")
+        elif self.compression_topk > 0:
+            _require(False,
+                     "transforms.compression_topk > 0 but 'topk' is "
+                     "not in transforms.names — declare the stage "
+                     "explicitly (names=('topk', ...)); compression "
+                     "knobs are never silently dropped")
+
+
+@dataclass(frozen=True)
+class ServerOptSpec:
+    """``server_opt`` section: the rule applied to the combined delta."""
+    name: str = "fedavg"
+    lr: float = 1.0
+    momentum: float = 0.9       # FedAvgM beta / FedAdam b1
+    beta2: float = 0.999        # FedAdam b2
+    eps: float = 1e-3           # FedAdam tau
+
+    def _validate(self) -> None:
+        _require(self.name in SERVER_OPTIMIZERS,
+                 f"server_opt.name {self.name!r} is not a registered "
+                 f"server optimizer; known: {sorted(SERVER_OPTIMIZERS)}")
+        _check_float(self.lr, "server_opt.lr", 0.0, exclusive_min=True)
+        _check_float(self.momentum, "server_opt.momentum", 0.0)
+        _require(self.momentum < 1.0,
+                 f"server_opt.momentum must be in [0, 1), got "
+                 f"{self.momentum}")
+        _check_float(self.beta2, "server_opt.beta2", 0.0,
+                     exclusive_min=True)
+        _require(self.beta2 < 1.0,
+                 f"server_opt.beta2 must be in (0, 1), got {self.beta2}")
+        _check_float(self.eps, "server_opt.eps", 0.0, exclusive_min=True)
+
+
+@dataclass(frozen=True)
+class ExecutionSpec:
+    """``execution`` section: how (and how long) the spec runs."""
+    exec_mode: str = "loop"
+    batch_size: int = 64
+    pad_cohorts: bool = True
+    learning_rate: float = 2e-3     # client-side lambda of Eq. (3)
+    rel_tol: float = 0.0            # 0 = run exactly schedule.rounds
+    stochastic_loss: bool = False   # train-mode ELBO (dropout + reparam)
+    seed: int = 0
+
+    def _validate(self) -> None:
+        _require(self.exec_mode in EXEC_MODES,
+                 f"execution.exec_mode {self.exec_mode!r} is not one of "
+                 f"{EXEC_MODES}")
+        _check_int(self.batch_size, "execution.batch_size", 1)
+        _check_bool(self.pad_cohorts, "execution.pad_cohorts")
+        _check_bool(self.stochastic_loss, "execution.stochastic_loss")
+        _check_float(self.learning_rate, "execution.learning_rate", 0.0,
+                     exclusive_min=True)
+        _check_float(self.rel_tol, "execution.rel_tol", 0.0)
+        # feeds numpy RNGs (scheduler, straggler draws): non-negative
+        _check_int(self.seed, "execution.seed", 0)
+
+
+_SECTIONS = {
+    "model": ModelSpec,
+    "data": DataSpec,
+    "schedule": ScheduleSpec,
+    "transforms": TransformsSpec,
+    "server_opt": ServerOptSpec,
+    "execution": ExecutionSpec,
+}
+
+
+# ---------------------------------------------------------------------------
+# the spec tree
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FederationSpec:
+    """One serializable federated scenario (module docstring).
+
+    The all-defaults spec IS the paper regime: topic partition, full
+    participation, E = 1, synchronous, FedAvg(server_lr=1) — i.e.
+    Algorithm 1 (the ``"paper"`` registry scenario).  Validation runs at
+    construction; every instance that exists is a runnable scenario.
+    """
+    version: int = SPEC_VERSION
+    name: str = ""
+    model: ModelSpec = field(default_factory=ModelSpec)
+    data: DataSpec = field(default_factory=DataSpec)
+    schedule: ScheduleSpec = field(default_factory=ScheduleSpec)
+    transforms: TransformsSpec = field(default_factory=TransformsSpec)
+    server_opt: ServerOptSpec = field(default_factory=ServerOptSpec)
+    execution: ExecutionSpec = field(default_factory=ExecutionSpec)
+
+    def __post_init__(self):
+        self.validate()
+
+    # -- validation -------------------------------------------------------
+    def validate(self) -> None:
+        """Range-check every section + refuse cross-section incoherence."""
+        _require(isinstance(self.version, int)
+                 and not isinstance(self.version, bool)
+                 and self.version == SPEC_VERSION,
+                 f"version {self.version!r} is not supported by this "
+                 f"build (expected {SPEC_VERSION}); migrate the spec or "
+                 "update the repo")
+        _require(isinstance(self.name, str), "name must be a string")
+        for sect, cls in _SECTIONS.items():
+            v = getattr(self, sect)
+            _require(isinstance(v, cls),
+                     f"section {sect!r} must be a {cls.__name__}, got "
+                     f"{type(v).__name__}")
+            v._validate()
+        # cross-section coherence (mirrors core/engine.py refusals so a
+        # bad spec fails at validation time, not engine-construction time)
+        if "secure" in self.transforms.names:
+            sch, L = self.schedule, self.data.num_clients
+            _require(not (sch.straggler_prob > 0 and sch.max_staleness > 0),
+                     "the 'secure' transform is incompatible with the "
+                     "straggler buffer (schedule.straggler_prob/"
+                     "max_staleness): a stale masked message arrives in "
+                     "a later combine than its pair partners, so the "
+                     "pairwise masks no longer cancel")
+            k = sch.clients_per_round or L
+            _require(min(k, L) >= L
+                     and not any(j > 0 for j in sch.client_join_round)
+                     and not any(x > 0 for x in sch.client_leave_round),
+                     "the 'secure' transform needs synchronous full "
+                     "participation (clients_per_round = 0 or "
+                     "num_clients, no client join/leave): pairwise "
+                     "masks only cancel when every client's message "
+                     "joins the same combine")
+
+    # -- resolved (cross-section) defaults --------------------------------
+    @property
+    def resolved_data_seed(self) -> int:
+        return self.data.seed if self.data.seed is not None \
+            else self.execution.seed
+
+    @property
+    def resolved_sampling_seed(self) -> int:
+        return self.schedule.sampling_seed \
+            if self.schedule.sampling_seed is not None \
+            else self.execution.seed
+
+    @property
+    def resolved_shared_topics(self) -> int:
+        return self.data.shared_topics if self.data.shared_topics is not None \
+            else max(self.model.topics // 5, 1)
+
+    # -- compilation to the engine's config objects -----------------------
+    def to_model_config(self) -> ModelConfig:
+        return ModelConfig(name=self.name or "federation-spec", kind=NTM,
+                           vocab_size=self.model.vocab,
+                           num_topics=self.model.topics,
+                           ntm_hidden=(self.model.hidden, self.model.hidden))
+
+    def to_federated_config(self) -> FederatedConfig:
+        t = self.transforms
+        return FederatedConfig(
+            num_clients=self.data.num_clients,
+            learning_rate=self.execution.learning_rate,
+            max_rounds=self.schedule.rounds,
+            rel_tol=self.execution.rel_tol,
+            dp_noise_multiplier=t.dp_noise_multiplier,
+            dp_clip_norm=t.dp_clip_norm,
+            compression_topk=t.compression_topk)
+
+    def to_round_config(self) -> RoundConfig:
+        s = self.schedule
+        return RoundConfig(
+            exec_mode=self.execution.exec_mode,
+            clients_per_round=s.clients_per_round,
+            sampling=s.sampling,
+            sampling_seed=self.resolved_sampling_seed,
+            local_epochs=s.local_epochs,
+            server_optimizer=self.server_opt.name,
+            server_lr=self.server_opt.lr,
+            server_momentum=self.server_opt.momentum,
+            server_beta2=self.server_opt.beta2,
+            server_eps=self.server_opt.eps,
+            straggler_prob=s.straggler_prob,
+            max_staleness=s.max_staleness,
+            staleness_decay=s.staleness_decay,
+            transforms=self.transforms.names,
+            pad_cohorts=self.execution.pad_cohorts,
+            local_epochs_by_client=s.local_epochs_by_client,
+            client_join_round=s.client_join_round,
+            client_leave_round=s.client_leave_round,
+            partition=self.data.partition.to_string())
+
+    # -- dict / JSON round trip -------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-JSON-types dict (tuples become lists, sections become
+        mappings); the inverse of :meth:`from_dict`."""
+        return _jsonify(dataclasses.asdict(self))
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "FederationSpec":
+        """STRICT inverse of :meth:`to_dict` — unknown sections/keys and
+        unsupported versions raise ``ValueError`` (a typo must never
+        silently run a different scenario).  Omitted sections/keys take
+        their defaults, so partial specs are valid."""
+        if not isinstance(d, Mapping):
+            raise ValueError("FederationSpec.from_dict needs a mapping, "
+                             f"got {type(d).__name__}")
+        known = set(_SECTIONS) | {"version", "name"}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"unknown top-level spec key(s) {unknown}; "
+                             f"known: {sorted(known)}")
+        version = d.get("version", SPEC_VERSION)
+        if version != SPEC_VERSION:
+            raise ValueError(
+                f"FederationSpec version {version!r} is not supported by "
+                f"this build (expected {SPEC_VERSION}); migrate the spec "
+                "or update the repo")
+        kw: Dict[str, Any] = {"version": version,
+                              "name": d.get("name", "")}
+        for sect, sect_cls in _SECTIONS.items():
+            if sect in d:
+                kw[sect] = _section_from_dict(sect_cls, d[sect], sect)
+        return cls(**kw)
+
+    def to_json(self, *, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "FederationSpec":
+        try:
+            d = json.loads(s)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"FederationSpec JSON does not parse: {e}") \
+                from None
+        return cls.from_dict(d)
+
+    def save(self, path: str) -> str:
+        """Atomic JSON write (tmp + rename, trailing newline)."""
+        return atomic_write(path, lambda f: f.write(self.to_json() + "\n"))
+
+    @classmethod
+    def load(cls, path: str) -> "FederationSpec":
+        try:
+            with open(path) as f:
+                text = f.read()
+        except OSError as e:
+            raise ValueError(f"cannot read spec file {path!r}: {e}") \
+                from None
+        try:
+            return cls.from_json(text)
+        except ValueError as e:
+            raise ValueError(f"spec file {path!r}: {e}") from None
+
+
+def _jsonify(v):
+    if isinstance(v, dict):
+        return {k: _jsonify(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonify(x) for x in v]
+    return v
+
+
+def _section_from_dict(cls, d, where: str):
+    if isinstance(d, cls):
+        return d
+    if not isinstance(d, Mapping):
+        raise ValueError(f"spec section {where!r} must be a mapping, got "
+                         f"{type(d).__name__}")
+    fields = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - fields)
+    if unknown:
+        raise ValueError(f"unknown key(s) {unknown} in spec section "
+                         f"{where!r}; known: {sorted(fields)}")
+    kw = {}
+    for fname, v in d.items():
+        if cls is DataSpec and fname == "partition":
+            v = PartitionSpec.from_value(v)
+        elif isinstance(v, list):
+            v = tuple(v)
+        kw[fname] = v
+    return cls(**kw)
+
+
+# ---------------------------------------------------------------------------
+# functional updates
+# ---------------------------------------------------------------------------
+def spec_replace(spec: FederationSpec,
+                 overrides: Mapping[str, Any]) -> FederationSpec:
+    """Dotted-path functional update over the spec tree.
+
+    >>> spec_replace(spec, {"schedule.straggler_prob": 0.3,
+    ...                     "data.partition": "dirichlet(0.3)",
+    ...                     "name": "my-scenario"})
+
+    Keys are either top-level (``name``, ``version``, or a whole section
+    object) or ``section.field``; unknown paths raise ``ValueError``.
+    The result re-validates (``__post_init__``), so an override can
+    never produce an unchecked spec.
+    """
+    top: Dict[str, Any] = {}
+    by_section: Dict[str, Dict[str, Any]] = {}
+    for key, v in overrides.items():
+        if "." in key:
+            sect, _, fname = key.partition(".")
+            if sect not in _SECTIONS:
+                raise ValueError(f"unknown spec section {sect!r} in "
+                                 f"override {key!r}; known: "
+                                 f"{sorted(_SECTIONS)}")
+            by_section.setdefault(sect, {})[fname] = v
+        elif key in _SECTIONS or key in ("name", "version"):
+            top[key] = v
+        else:
+            raise ValueError(f"unknown spec override {key!r}; use "
+                             "'section.field' dotted paths or one of "
+                             f"{sorted(set(_SECTIONS) | {'name', 'version'})}")
+    kw = dict(top)
+    for sect, updates in by_section.items():
+        cls = _SECTIONS[sect]
+        fields = {f.name for f in dataclasses.fields(cls)}
+        clean = {}
+        for fname, v in updates.items():
+            if fname not in fields:
+                raise ValueError(f"unknown key {fname!r} in spec section "
+                                 f"{sect!r}; known: {sorted(fields)}")
+            if cls is DataSpec and fname == "partition":
+                v = PartitionSpec.from_value(v)
+            elif isinstance(v, list):
+                v = tuple(v)
+            clean[fname] = v
+        kw[sect] = dataclasses.replace(getattr(spec, sect), **clean)
+    return dataclasses.replace(spec, **kw)

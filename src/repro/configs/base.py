@@ -8,6 +8,12 @@ The federated-protocol knobs live in :class:`FederatedConfig` and the mesh /
 launch knobs in :class:`RunConfig`.  ``reduced()`` derives the CPU smoke-test
 variant of any architecture (2 layers, d_model<=512, <=4 experts) required by
 the per-arch smoke tests.
+
+These dataclasses are the ENGINE-LEVEL configuration.  The serializable,
+validating front-door over them is :class:`repro.api.FederationSpec`
+(docs/api.md): a spec's ``to_federated_config()`` / ``to_round_config()``
+compile into the classes below, and new scenario-level code should build
+specs rather than hand-wiring these.
 """
 from __future__ import annotations
 
@@ -284,6 +290,11 @@ class RoundConfig:
     other setting is a beyond-paper regime; ``docs/rounds.md`` and
     ``docs/scenarios.md`` map each knob to the paper / related-work
     setting it reproduces.
+
+    Scenario-level code should not build this directly: the declarative
+    ``repro.api.FederationSpec`` (``schedule``/``server_opt``/
+    ``execution`` sections) validates and serializes the same surface
+    and compiles here via ``to_round_config()`` (docs/api.md).
     """
 
     # execution path: "loop" steps the cohort client-by-client on the

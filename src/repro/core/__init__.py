@@ -2,9 +2,9 @@
 from repro.core import aggregation, engine, protocol, rounds, vocab  # noqa: F401,E501
 from repro.core.aggregation import (  # noqa: F401
     SERVER_OPTIMIZERS, ServerOptimizer, get_server_optimizer)
-from repro.core.engine import (  # noqa: F401
-    TRANSFORMS, FederationEngine, TransformCtx, build_transforms,
-    combine_arrivals)
+from repro.core.engine import FederationEngine, combine_arrivals  # noqa: F401,E501
+from repro.core.transforms import (  # noqa: F401
+    TRANSFORMS, TransformCtx, build_transforms)
 from repro.core.protocol import (  # noqa: F401
     ClientState, FedAvgTrainer, FederatedTrainer, client_round_update,
     make_federated_train_step, param_delta, train_centralized,

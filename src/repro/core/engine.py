@@ -54,12 +54,18 @@ transform state.
 
 Scenario diversity (per-client heterogeneous local epochs, mid-training
 client dropout/join) threads through ``RoundConfig`` — see
-docs/scenarios.md for the knob -> regime map.
+docs/scenarios.md for the knob -> regime map.  The declarative,
+serializable front-door over this engine is ``repro.api``
+(``FederationSpec`` + the ``Federation`` facade, docs/api.md);
+``state_dict()`` / ``load_state_dict()`` snapshot the FULL engine state
+(params, server-opt state, transform state, straggler ring/pending) for
+bit-identical resume.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,12 +73,12 @@ import numpy as np
 
 from repro.configs.base import FederatedConfig, RoundConfig
 from repro.core import aggregation as agg
-# the transform registry lives in core/transforms.py since PR 4; the
-# names are re-exported here because this module is the historical
-# import surface (launch/simulate.py, tests)
-from repro.core.transforms import (  # noqa: F401
-    TRANSFORMS, MessageTransform, StackedTransformCtx, TransformCtx,
-    build_transforms, pairwise_mask_stack)
+# the transform registry's canonical home is core/transforms.py (PR 4);
+# the engine consumes it under private aliases so the public re-export
+# surface below can be an explicitly deprecated shim
+from repro.core.transforms import StackedTransformCtx as _StackedCtx
+from repro.core.transforms import TransformCtx as _TransformCtx
+from repro.core.transforms import build_transforms as _build_transforms
 from repro.data.federated_split import (round_minibatches, sample_minibatch,
                                         stacked_round_batches)
 from repro.optim.optimizers import global_norm
@@ -81,6 +87,25 @@ Pytree = Any
 
 EXEC_MODES = ("loop", "vmap")
 MESSAGE_KINDS = ("delta", "grad")
+
+# DEPRECATED re-export shim: until PR 5 this module re-exported the
+# transform registry names; the canonical import surface is
+# repro.core.transforms.  Attribute access still works but warns —
+# tests/test_api_spec.py pins the warning.
+_DEPRECATED_TRANSFORM_REEXPORTS = (
+    "TRANSFORMS", "MessageTransform", "StackedTransformCtx",
+    "TransformCtx", "build_transforms", "pairwise_mask_stack")
+
+
+def __getattr__(name):
+    if name in _DEPRECATED_TRANSFORM_REEXPORTS:
+        warnings.warn(
+            f"importing {name!r} from repro.core.engine is deprecated; "
+            "its canonical home is repro.core.transforms",
+            DeprecationWarning, stacklevel=2)
+        from repro.core import transforms as _transforms
+        return getattr(_transforms, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -419,7 +444,7 @@ class FederationEngine:
         if self.exec_mode == "vmap":
             _check_vmap_preconditions(fed, self.clients, batch_size,
                                       loss_sum_fn, what=type(self).__name__)
-        self._transforms = build_transforms(names, fed)
+        self._transforms = _build_transforms(names, fed)
         # stacked transform state (e.g. the topk error memory, one row
         # per GLOBAL client) — threaded through every fused call
         self._tstate: Dict[str, Any] = {}
@@ -570,7 +595,7 @@ class FederationEngine:
                 local_epochs=int(self._epochs[l]),
                 batch_size=self.batch_size)
         if self._transforms:
-            ctx = TransformCtx(round_key, rng, l, self._nmask, n, c)
+            ctx = _TransformCtx(round_key, rng, l, self._nmask, n, c)
             for _, fn in self._transforms:
                 msg = fn(msg, ctx)
         return msg, n, loss
@@ -654,7 +679,7 @@ class FederationEngine:
             into the combine or the ring (a NaN delta times a zero
             weight is still NaN)."""
             if transforms:
-                ctx = StackedTransformCtx(
+                ctx = _StackedCtx(
                     round_key=round_key, client_ids=ids, valid=w > 0.0,
                     weights=w, num_clients=nmask)
                 tstate = dict(tstate)
@@ -924,6 +949,99 @@ class FederationEngine:
                 "arrived": arrived,
                 "in_flight": in_flight}
 
+    # -- stopping ---------------------------------------------------------
+    @staticmethod
+    def stop_criterion(rec: Mapping[str, Any], rel_tol: float) -> bool:
+        """The Alg.-1 stopping rule — only applied to rounds where an
+        update landed.  The ONE implementation shared by :meth:`fit`
+        and the ``repro.api.Federation`` facade, so the facade's
+        step-for-step-``fit`` trajectory contract cannot drift."""
+        return bool(rec["arrived"]) and rec["rel_change"] < rel_tol
+
+    # -- snapshot / resume -------------------------------------------------
+    STATE_FORMAT = 1
+
+    def state_dict(self) -> Dict[str, Any]:
+        """Host-numpy snapshot of EVERYTHING the next round depends on.
+
+        Covers params, server-optimizer state, transform state (the
+        top-k error memories, both the vmap-mode ``(L, ...)`` device
+        tree and the loop-mode per-``ClientState`` memories), the
+        straggler state (fused ring buffer / host pending list), the
+        round counter and the history.  The cohort schedule, straggler
+        delays and transform keys are pure functions of
+        ``(config, round_idx)``, so restoring this dict into an
+        identically-constructed engine (``load_state_dict``) resumes
+        the trajectory BIT-IDENTICALLY to an uninterrupted run —
+        pinned in tests/test_api_federation.py and
+        examples/resume_demo.py.
+        """
+        host = lambda t: jax.tree_util.tree_map(  # noqa: E731
+            lambda x: np.asarray(jax.device_get(x)), t)
+        return {
+            "format": self.STATE_FORMAT,
+            "exec_mode": self.exec_mode,
+            "message": self.message,
+            "round": self._round,
+            "params": host(self.params),
+            "server_state": host(self.server_state),
+            "transform_state": {k: host(v)
+                                for k, v in self._tstate.items()},
+            "ring": host(self._ring) if self._ring is not None else None,
+            "pending": [{"client": p.client,
+                         "issued_round": p.issued_round,
+                         "due_round": p.due_round,
+                         "weight": p.weight,
+                         "delta": host(p.delta)} for p in self.pending],
+            "client_error_memory": [
+                host(c.error_memory) if c.error_memory is not None
+                else None for c in self.clients],
+            "history": [dict(h) for h in self.history],
+        }
+
+    def load_state_dict(self, state: Mapping[str, Any]) -> None:
+        """Restore a :meth:`state_dict` snapshot into this engine.
+
+        The engine must be constructed with the same configuration the
+        snapshot was taken under (same exec_mode/message at minimum —
+        checked; the rest is the caller's resume contract, enforced
+        spec-level by ``repro.api.Federation.load_state_dict``).
+        """
+        fmt = state.get("format")
+        if fmt != self.STATE_FORMAT:
+            raise ValueError(f"unsupported engine state format {fmt!r} "
+                             f"(this build writes {self.STATE_FORMAT})")
+        for key in ("exec_mode", "message"):
+            if state.get(key) != getattr(self, key):
+                raise ValueError(
+                    f"snapshot was taken under {key}={state.get(key)!r} "
+                    f"but this engine runs {key}={getattr(self, key)!r}; "
+                    "rebuild the engine with the snapshot's "
+                    "configuration")
+        mems = state["client_error_memory"]
+        if len(mems) != len(self.clients):
+            raise ValueError(
+                f"snapshot carries error memory for {len(mems)} clients "
+                f"but this engine has {len(self.clients)}")
+        dev = lambda t: jax.tree_util.tree_map(jnp.asarray, t)  # noqa: E731
+        self._round = int(state["round"])
+        self.params = dev(state["params"])
+        self.server_state = dev(state["server_state"])
+        self._tstate = {k: dev(v)
+                        for k, v in state["transform_state"].items()}
+        self._ring = dev(state["ring"]) if state["ring"] is not None \
+            else None
+        self.pending = [
+            PendingUpdate(client=int(p["client"]),
+                          issued_round=int(p["issued_round"]),
+                          due_round=int(p["due_round"]),
+                          delta=dev(p["delta"]),
+                          weight=float(p["weight"]))
+            for p in state["pending"]]
+        for c, m in zip(self.clients, mems):
+            c.error_memory = dev(m) if m is not None else None
+        self.history = [dict(h) for h in state["history"]]
+
     # -- one round --------------------------------------------------------
     def round(self, seed: Optional[int] = None) -> Dict[str, float]:
         """Sample cohort -> local updates -> transforms -> staleness
@@ -951,6 +1069,6 @@ class FederationEngine:
                       f"rel={rec['rel_change']:.2e} "
                       f"K={rec['participants']} "
                       f"arrived={rec['arrived']}")
-            if rec["arrived"] and rec["rel_change"] < self.fed.rel_tol:
+            if self.stop_criterion(rec, self.fed.rel_tol):
                 break
         return self.params

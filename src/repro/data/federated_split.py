@@ -112,15 +112,22 @@ PARTITIONERS: Dict[str, Callable[..., List[np.ndarray]]] = {
     "quantity_skew": _partition_quantity_skew,
 }
 
-_SPEC_RE = re.compile(r"^\s*([a-z_]+)\s*(?:\(\s*([0-9.eE+-]+)?\s*\))?\s*$")
+_SPEC_RE = re.compile(r"^\s*([a-z_]+)\s*(?:\(\s*(.*?)\s*\))?\s*$")
+
+# partitioners that accept an '(alpha)' argument; every other name must
+# appear bare — 'iid(0.3)' is a user error, not a silently-ignored knob
+_PARAMETRIC = frozenset({"dirichlet", "quantity_skew"})
 
 
 def parse_partition_spec(spec: str) -> Tuple[str, Dict[str, float]]:
     """``"dirichlet(0.3)"`` -> ``("dirichlet", {"alpha": 0.3})``.
 
-    A bare name parses to no kwargs (partitioner defaults apply); an
-    unknown name or malformed spec raises ``ValueError`` listing the
-    registry.
+    A bare parametric name parses to no kwargs (partitioner defaults
+    apply).  Everything malformed raises ``ValueError`` with an
+    actionable message instead of silently dropping intent: unknown
+    names, arguments on non-parametric partitioners (``iid(0.3)``),
+    empty parentheses (``dirichlet()``), non-numeric or non-positive
+    alphas.
     """
     m = _SPEC_RE.match(spec or "")
     if not m or m.group(1) not in PARTITIONERS:
@@ -128,7 +135,25 @@ def parse_partition_spec(spec: str) -> Tuple[str, Dict[str, float]]:
                          f"{sorted(set(PARTITIONERS))} "
                          "(optionally with '(alpha)')")
     name, arg = m.group(1), m.group(2)
-    return name, ({"alpha": float(arg)} if arg is not None else {})
+    if arg is None:
+        return name, {}
+    if name not in _PARAMETRIC:
+        raise ValueError(f"partition spec {spec!r}: {name!r} takes no "
+                         "argument — drop the parentheses")
+    if arg == "":
+        raise ValueError(f"partition spec {spec!r} has empty parentheses "
+                         f"— give an explicit alpha, e.g. '{name}(0.3)', "
+                         "or drop the parentheses for the default")
+    try:
+        alpha = float(arg)
+    except ValueError:
+        raise ValueError(f"partition spec {spec!r}: malformed alpha "
+                         f"{arg!r} (expected a number, e.g. "
+                         f"'{name}(0.3)')") from None
+    if not alpha > 0:
+        raise ValueError(f"partition spec {spec!r}: alpha must be > 0, "
+                         f"got {alpha!r}")
+    return name, {"alpha": alpha}
 
 
 def partition_corpus(n_docs: int, num_clients: int, spec: str = "iid", *,

@@ -1,28 +1,37 @@
-"""Multi-round federated simulation driver (the unified engine's CLI).
+"""Multi-round federated simulation driver (the declarative API's CLI).
 
-Runs the unified :class:`repro.core.engine.FederationEngine` (via its
-``RoundEngine`` preset) over a synthetic LDA federation and reports
-training history plus held-out quality (ELBO perplexity, NPMI coherence,
-TSS against the generative ground truth).  This is the
-scenario-diversity entry point: the flags map 1:1 onto
-:class:`repro.configs.base.RoundConfig` (see docs/rounds.md and
-docs/scenarios.md for the knob -> literature-regime tables), and the
-all-defaults invocation is exactly the paper's Algorithm 1.
+Since PR 5 every invocation — legacy flags included — runs through ONE
+path: the flags (or a JSON file, or a registry scenario name) compile
+into a :class:`repro.api.FederationSpec`, and
+:class:`repro.api.Federation` runs it over the unified
+:class:`repro.core.engine.FederationEngine`.  The flag surface maps 1:1
+onto the spec tree (see docs/api.md for the schema and docs/rounds.md /
+docs/scenarios.md for the knob -> literature-regime tables); the
+all-defaults invocation is exactly the paper's Algorithm 1, and the
+flag-compiled trajectories are bit-identical to the pre-redesign
+``RoundEngine`` wiring (tests/test_api_federation.py).
 
 Usage:
 
     # the paper regime: full participation, synchronous, server SGD
     PYTHONPATH=src python -m repro.launch.simulate --rounds 100
 
+    # the same thing, declaratively: a named registry scenario ...
+    PYTHONPATH=src python -m repro.launch.simulate --scenario paper
+
+    # ... or a serialized spec file (examples/specs/*.json)
+    PYTHONPATH=src python -m repro.launch.simulate \\
+        --spec examples/specs/private_vmap.json
+
+    # compile any flag combination into a reusable spec file
+    PYTHONPATH=src python -m repro.launch.simulate \\
+        --partition 'dirichlet(0.3)' --transforms dp --dp-noise 0.1 \\
+        --dp-clip 0.05 --exec-mode vmap --dump-spec my_scenario.json
+
     # 2-of-5 uniform participation with FedAdam on the server
     PYTHONPATH=src python -m repro.launch.simulate \\
         --num-clients 5 --clients-per-round 2 \\
         --server-opt fedadam --server-lr 0.05 --rounds 200
-
-    # batched execution: all K local updates in one jitted graph
-    # (same trajectory as --exec-mode loop, K-independent dispatch cost)
-    PYTHONPATH=src python -m repro.launch.simulate \\
-        --num-clients 64 --clients-per-round 16 --exec-mode vmap
 
     # straggler federation: 30% of selected clients deliver 1-3 rounds
     # late, stale updates discounted by 0.5 per round of age (under
@@ -31,192 +40,191 @@ Usage:
         --straggler-prob 0.3 --max-staleness 3 --staleness-decay 0.5 \\
         --local-epochs 2 --out experiments/simulate.json
 
-    # non-IID scenario: pooled corpus re-partitioned with a Dirichlet
-    # label skew, heterogeneous per-client epoch counts, one client
-    # joining mid-training, local-DP message transform — and since PR 4
-    # the transforms run IN-GRAPH under --exec-mode vmap (the private
-    # path and the fast path compose; cohorts shrunken by the late
-    # joiner are zero-weight-padded to a fixed K, so the graph compiles
-    # exactly once)
-    PYTHONPATH=src python -m repro.launch.simulate \\
-        --partition 'dirichlet(0.3)' --hetero-epochs 1,2,4 \\
-        --join-rounds 0,0,0,0,20 --transforms dp --dp-noise 0.3 \\
-        --exec-mode vmap
-
 Programmatic equivalent of the CLI:
 
-    >>> from repro.core.rounds import RoundEngine
-    >>> from repro.configs.base import FederatedConfig, RoundConfig
-    >>> eng = RoundEngine(loss_fn, init_params, clients,
-    ...                   FederatedConfig(max_rounds=100),
-    ...                   RoundConfig(clients_per_round=2,
-    ...                               server_optimizer="fedavgm"))
-    >>> params = eng.fit(seed=0)
+    >>> from repro.api import Federation, scenario_spec, spec_replace
+    >>> spec = spec_replace(scenario_spec("paper"),
+    ...                     {"schedule.rounds": 100})
+    >>> fed = Federation.from_spec(spec)
+    >>> params = fed.run(verbose=True)
+    >>> fed.evaluate()
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import NTM, FederatedConfig, ModelConfig, RoundConfig
+from repro.api import Federation, FederationSpec, scenario_names, \
+    scenario_spec
+# re-exported for the historical import surface — benchmarks/
+# bench_rounds.py and the tests import these names from this module
+from repro.api.federation import (  # noqa: F401
+    build_clients, build_corpus, heldout_elbo_per_token, heldout_perplexity)
+from repro.api.spec import (DataSpec, ExecutionSpec, ModelSpec,
+                            PartitionSpec, ScheduleSpec, ServerOptSpec,
+                            TransformsSpec, parse_int_tuple)
 from repro.core.aggregation import SERVER_OPTIMIZERS
-from repro.core.engine import TRANSFORMS
-from repro.core.ntm import prodlda
-from repro.core.protocol import ClientState
-from repro.core.rounds import RoundEngine, RoundScheduler
-from repro.data.federated_split import parse_partition_spec, partition_corpus
-from repro.data.synthetic_lda import generate_lda_corpus
-from repro.metrics import npmi_coherence, tss
-
-
-def _int_tuple(s: str):
-    return tuple(int(x) for x in s.split(",") if x.strip())
+from repro.core.engine import RoundScheduler
+# canonical transform-registry home (the repro.core.engine re-export is
+# a deprecated shim since PR 5)
+from repro.core.transforms import TRANSFORMS
 
 
 def _str_tuple(s: str):
     return tuple(x.strip() for x in s.split(",") if x.strip())
 
 
-def build_clients(syn, num_clients: int, partition: str,
-                  seed: int = 0):
-    """Turn the synthetic federation into ClientStates per the partition
-    spec: ``topic`` keeps the paper's natural per-node topic split; any
-    other registry spec pools the nodes' corpora and re-partitions the
-    documents (labels = each document's dominant ground-truth topic)."""
-    name, _ = parse_partition_spec(partition)
-    if name in ("topic", "by_label"):
-        return [ClientState(data={"bow": b}, num_docs=len(b))
-                for b in syn.node_bows]
-    bows = syn.concat_bows()
-    labels = np.concatenate(syn.node_thetas).argmax(axis=1)
-    parts = partition_corpus(len(bows), num_clients, partition,
-                             labels=labels, seed=seed)
-    if any(len(p) == 0 for p in parts):
-        raise ValueError(f"partition {partition!r} left a client with no "
-                         "documents; raise alpha or shrink num_clients")
-    return [ClientState(data={"bow": bows[p]}, num_docs=len(p))
-            for p in parts]
+def spec_from_args(args) -> FederationSpec:
+    """Compile the legacy flag surface into a FederationSpec.
+
+    This is the ONLY semantics the flags have — the spec is what runs —
+    so flag-driven and spec-driven invocations can never drift.  Int
+    lists parse strictly (:func:`repro.api.spec.parse_int_tuple`):
+    ``--hetero-epochs 1,,4`` is an error, never a silent drop.
+    """
+    return FederationSpec(
+        name="simulate",
+        model=ModelSpec(vocab=args.vocab, topics=args.topics,
+                        hidden=args.hidden),
+        data=DataSpec(num_clients=args.num_clients,
+                      docs_per_node=args.docs_per_node,
+                      val_docs_per_node=args.val_docs,
+                      partition=PartitionSpec.from_value(args.partition)),
+        schedule=ScheduleSpec(
+            rounds=args.rounds,
+            clients_per_round=args.clients_per_round,
+            sampling=args.sampling,
+            local_epochs=args.local_epochs,
+            local_epochs_by_client=parse_int_tuple(
+                args.hetero_epochs, what="--hetero-epochs", minimum=1),
+            client_join_round=parse_int_tuple(
+                args.join_rounds, what="--join-rounds"),
+            client_leave_round=parse_int_tuple(
+                args.leave_rounds, what="--leave-rounds"),
+            straggler_prob=args.straggler_prob,
+            max_staleness=args.max_staleness,
+            staleness_decay=args.staleness_decay),
+        transforms=TransformsSpec(names=_str_tuple(args.transforms),
+                                  dp_noise_multiplier=args.dp_noise,
+                                  dp_clip_norm=args.dp_clip,
+                                  compression_topk=args.topk),
+        server_opt=ServerOptSpec(name=args.server_opt, lr=args.server_lr,
+                                 momentum=args.server_momentum),
+        execution=ExecutionSpec(exec_mode=args.exec_mode,
+                                batch_size=args.batch,
+                                pad_cohorts=not args.no_pad_cohorts,
+                                learning_rate=args.lr,
+                                rel_tol=args.rel_tol,
+                                stochastic_loss=args.stochastic_loss,
+                                seed=args.seed))
 
 
-def heldout_elbo_per_token(params, cfg: ModelConfig, val_bows: np.ndarray,
-                           batch: int = 256) -> float:
-    """Negative ELBO per held-out token (log perplexity bound)."""
-    tot_elbo, tot_tokens = 0.0, 0.0
-    for i in range(0, len(val_bows), batch):
-        b = {"bow": jnp.asarray(val_bows[i:i + batch])}
-        s, _ = prodlda.elbo_loss_sum(params, cfg, b, train=False)
-        tot_elbo += float(s)
-        tot_tokens += float(val_bows[i:i + batch].sum())
-    return tot_elbo / max(tot_tokens, 1.0)
+# flags that control I/O or select the spec source, not the scenario —
+# the only ones combinable with --spec / --scenario
+_NON_SCENARIO_DESTS = frozenset({"spec", "scenario", "dump_spec", "out",
+                                 "help"})
 
 
-def heldout_perplexity(params, cfg: ModelConfig, val_bows: np.ndarray,
-                       batch: int = 256) -> float:
-    """exp(negative ELBO per held-out token) — the NTM perplexity bound.
+def _present_scenario_flags(parser, argv):
+    """Scenario-defining legacy flags PRESENT on the command line.
 
-    May legitimately overflow to ``inf`` for badly-fit models; the
-    log-space :func:`heldout_elbo_per_token` is always finite."""
-    with np.errstate(over="ignore"):
-        return float(np.exp(heldout_elbo_per_token(params, cfg, val_bows,
-                                                   batch)))
+    Presence-based, not value-vs-default: ``--exec-mode loop`` next to
+    a vmap scenario is still an explicit request that would be silently
+    dropped, even though ``loop`` is the argparse default."""
+    out = []
+    for action in parser._actions:
+        if action.dest in _NON_SCENARIO_DESTS:
+            continue
+        for opt in action.option_strings:
+            if any(a == opt or a.startswith(opt + "=") for a in argv):
+                out.append(opt)
+                break
+    return out
 
 
-def run_simulation(args) -> dict:
-    cfg = ModelConfig(name="simulate", kind=NTM, vocab_size=args.vocab,
-                      num_topics=args.topics,
-                      ntm_hidden=(args.hidden, args.hidden))
-    syn = generate_lda_corpus(
-        vocab_size=cfg.vocab_size, num_topics=cfg.num_topics,
-        num_nodes=args.num_clients,
-        shared_topics=max(cfg.num_topics // 5, 1),
-        docs_per_node=args.docs_per_node, val_docs_per_node=args.val_docs,
-        seed=args.seed)
+def resolve_spec(args, parser=None, argv=None) -> FederationSpec:
+    """--spec file > --scenario name > legacy flags, mutually checked.
 
-    # deterministic ELBO by default (no dropout / reparam noise): stable
-    # under plain-SGD clients at simulation scale; --stochastic-loss
-    # restores the reference training objective (wants Adam-ish settings)
-    loss_fn = lambda p, b: prodlda.elbo_loss(  # noqa: E731
-        p, cfg, b, train=args.stochastic_loss)
-    # the (sum, count) form is mask-aware — it lets the vmap path keep
-    # zero-padded rows out of the objective for ragged federations
-    loss_sum_fn = lambda p, b: prodlda.elbo_loss_sum(  # noqa: E731
-        p, cfg, b, train=args.stochastic_loss)
-    init = prodlda.init_params(jax.random.PRNGKey(args.seed), cfg)
-    fed = FederatedConfig(num_clients=args.num_clients, learning_rate=args.lr,
-                          max_rounds=args.rounds, rel_tol=args.rel_tol,
-                          dp_noise_multiplier=args.dp_noise,
-                          dp_clip_norm=args.dp_clip,
-                          compression_topk=args.topk)
-    rc = RoundConfig(exec_mode=args.exec_mode,
-                     clients_per_round=args.clients_per_round,
-                     sampling=args.sampling, sampling_seed=args.seed,
-                     local_epochs=args.local_epochs,
-                     server_optimizer=args.server_opt,
-                     server_lr=args.server_lr,
-                     server_momentum=args.server_momentum,
-                     straggler_prob=args.straggler_prob,
-                     max_staleness=args.max_staleness,
-                     staleness_decay=args.staleness_decay,
-                     transforms=_str_tuple(args.transforms),
-                     local_epochs_by_client=_int_tuple(args.hetero_epochs),
-                     client_join_round=_int_tuple(args.join_rounds),
-                     client_leave_round=_int_tuple(args.leave_rounds),
-                     partition=args.partition,
-                     pad_cohorts=not args.no_pad_cohorts)
-    clients = build_clients(syn, args.num_clients, args.partition,
-                            seed=args.seed)
-    eng = RoundEngine(loss_fn, init, clients, fed, rc,
-                      batch_size=args.batch, loss_sum_fn=loss_sum_fn)
+    A spec file / registry scenario IS the complete scenario, so
+    combining it with scenario-defining legacy flags is refused — the
+    flags would otherwise be silently ignored, and this module's own
+    contract is that intent is never silently dropped.
+    """
+    if args.spec and args.scenario:
+        raise ValueError("--spec and --scenario are mutually exclusive: "
+                         "a file IS a complete scenario")
+    if args.spec or args.scenario:
+        bad = _present_scenario_flags(parser, argv) \
+            if parser is not None and argv is not None else []
+        if bad:
+            src = "--spec" if args.spec else "--scenario"
+            raise ValueError(
+                f"{src} defines the complete scenario, but scenario "
+                f"flag(s) {', '.join(sorted(bad))} were also set and "
+                "would be silently ignored — drop them, or customize "
+                "via a spec file (--dump-spec, then edit / "
+                "repro.api.spec_replace)")
+        return FederationSpec.load(args.spec) if args.spec \
+            else scenario_spec(args.scenario)
+    return spec_from_args(args)
 
-    sched: RoundScheduler = eng.scheduler
-    print(f"simulating {fed.max_rounds} rounds [{eng.exec_mode}]: "
-          f"K={sched.clients_per_round}/{len(clients)} ({rc.sampling}), "
-          f"E={rc.local_epochs}"
-          + (f" hetero={rc.local_epochs_by_client}"
-             if rc.local_epochs_by_client else "")
-          + f", partition={rc.partition}, server={rc.server_optimizer}"
-          f"(lr={rc.server_lr}), "
-          f"stragglers p={rc.straggler_prob} "
-          f"max_stale={rc.max_staleness}"
-          + (f", transforms={rc.transforms}" if rc.transforms else ""))
+
+def run_simulation(args, parser=None, argv=None) -> dict:
+    spec = resolve_spec(args, parser, argv)
+    if args.dump_spec:
+        spec.save(args.dump_spec)
+        print(f"wrote spec {args.dump_spec}")
+        if not args.out:
+            # compile-only invocation (the README workflow): the spec
+            # file is the product — don't train 100 rounds for a JSON.
+            # Pass --out as well to dump AND run.
+            return {"spec": spec.to_dict(),
+                    "dumped_spec": args.dump_spec}
+
+    fed = Federation.from_spec(spec)
+    eng, sched = fed.engine, fed.engine.scheduler
+    sc, tr = spec.schedule, spec.transforms
+    print(f"simulating {sc.rounds} rounds [{eng.exec_mode}]: "
+          f"K={sched.clients_per_round}/{spec.data.num_clients} "
+          f"({sc.sampling}), E={sc.local_epochs}"
+          + (f" hetero={sc.local_epochs_by_client}"
+             if sc.local_epochs_by_client else "")
+          + f", partition={spec.data.partition.to_string()}, "
+          f"server={spec.server_opt.name}(lr={spec.server_opt.lr}), "
+          f"stragglers p={sc.straggler_prob} "
+          f"max_stale={sc.max_staleness}"
+          + (f", transforms={tr.names}" if tr.names else ""))
     t0 = time.time()
-    params = eng.fit(seed=args.seed, verbose=True)
+    fed.run(verbose=True)
     wall = time.time() - t0
 
-    val = syn.concat_val_bows()
-    beta = np.asarray(prodlda.get_topics(params))
     result = {
-        "config": {"vocab": args.vocab, "topics": args.topics,
-                   "num_clients": args.num_clients,
+        "config": {"vocab": spec.model.vocab, "topics": spec.model.topics,
+                   "num_clients": spec.data.num_clients,
                    "exec_mode": eng.exec_mode,
                    "clients_per_round": sched.clients_per_round,
-                   "sampling": rc.sampling,
-                   "local_epochs": rc.local_epochs,
-                   "local_epochs_by_client": list(rc.local_epochs_by_client),
-                   "partition": rc.partition,
-                   "transforms": list(rc.transforms),
-                   "client_join_round": list(rc.client_join_round),
-                   "client_leave_round": list(rc.client_leave_round),
-                   "server_optimizer": rc.server_optimizer,
-                   "server_lr": rc.server_lr,
-                   "straggler_prob": rc.straggler_prob,
-                   "max_staleness": rc.max_staleness,
-                   "staleness_decay": rc.staleness_decay,
-                   "seed": args.seed},
-        "rounds_run": len(eng.history),
+                   "sampling": sc.sampling,
+                   "local_epochs": sc.local_epochs,
+                   "local_epochs_by_client": list(sc.local_epochs_by_client),
+                   "partition": spec.data.partition.to_string(),
+                   "transforms": list(tr.names),
+                   "client_join_round": list(sc.client_join_round),
+                   "client_leave_round": list(sc.client_leave_round),
+                   "server_optimizer": spec.server_opt.name,
+                   "server_lr": spec.server_opt.lr,
+                   "straggler_prob": sc.straggler_prob,
+                   "max_staleness": sc.max_staleness,
+                   "staleness_decay": sc.staleness_decay,
+                   "seed": spec.execution.seed},
+        "spec": spec.to_dict(),
+        "rounds_run": len(fed.history),
         "wall_seconds": wall,
-        "final_loss": eng.history[-1]["loss"],
-        "heldout_elbo_per_token": heldout_elbo_per_token(params, cfg, val),
-        "heldout_perplexity": heldout_perplexity(params, cfg, val),
-        "npmi_coherence": float(npmi_coherence(beta, val)),
-        "tss": float(tss(syn.beta, beta)),
-        "history": eng.history,
+        "final_loss": fed.history[-1]["loss"],
+        **fed.evaluate(),
+        "history": list(fed.history),
     }
     print(f"done in {wall:.1f}s: ppl={result['heldout_perplexity']:.1f} "
           f"npmi={result['npmi_coherence']:.3f} tss={result['tss']:.2f}")
@@ -229,8 +237,27 @@ def run_simulation(args) -> dict:
 
 
 def main(argv=None):
+    # allow_abbrev=False: prefix forms ('--round 5') would bypass the
+    # presence-based --spec/--scenario conflict guard below — every flag
+    # must be spelled out, so every flag can be accounted for
     ap = argparse.ArgumentParser(
-        description="round-based federated simulation (see module docstring)")
+        description="round-based federated simulation (see module "
+                    "docstring)",
+        allow_abbrev=False)
+    ap.add_argument("--spec", default="",
+                    help="run a serialized FederationSpec JSON file "
+                         "verbatim (combining it with scenario flags is "
+                         "an error, never a silent drop; see docs/api.md "
+                         "and examples/specs/)")
+    ap.add_argument("--scenario", default="",
+                    help="run a named registry scenario "
+                         f"({', '.join(scenario_names())}); scenario "
+                         "flags cannot be combined with it")
+    ap.add_argument("--dump-spec", default="",
+                    help="write the resolved spec as JSON (compile a "
+                         "flag combo into a reusable scenario file) and "
+                         "exit without training; add --out to dump AND "
+                         "run")
     ap.add_argument("--vocab", type=int, default=400)
     ap.add_argument("--topics", type=int, default=10)
     ap.add_argument("--hidden", type=int, default=64)
@@ -295,7 +322,9 @@ def main(argv=None):
                     help="train-mode ELBO (dropout + reparam noise)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
-    return run_simulation(ap.parse_args(argv))
+    if argv is None:
+        argv = sys.argv[1:]
+    return run_simulation(ap.parse_args(argv), parser=ap, argv=argv)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,295 @@
+"""Federation facade: spec-compiled trajectories == legacy wiring
+(bitwise), incremental stepping, metric hooks, and the snapshot/resume
+contract (PR 5 acceptance pins).
+
+"Legacy wiring" below reproduces the pre-redesign ``simulate.py`` /
+``bench_scenarios.py`` construction EXPLICITLY (corpus -> build_clients
+-> RoundEngine(fed, rc) -> fit(seed)) so the facade is checked against
+an independent composition, not against its own compile helpers.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (DataSpec, ExecutionSpec, Federation, FederationSpec,
+                       ModelSpec, ScheduleSpec, build_corpus, scenario_spec,
+                       spec_replace)
+from repro.api.federation import build_clients
+from repro.configs.base import NTM, FederatedConfig, ModelConfig, RoundConfig
+from repro.core.ntm import prodlda
+from repro.core.rounds import RoundEngine
+from conftest import max_param_dev
+
+_max_dev = max_param_dev
+
+
+def _tiny_spec(**overrides):
+    base = FederationSpec(
+        model=ModelSpec(vocab=64, topics=4, hidden=16),
+        data=DataSpec(num_clients=3, docs_per_node=40, val_docs_per_node=8),
+        schedule=ScheduleSpec(rounds=3),
+        execution=ExecutionSpec(batch_size=16))
+    return spec_replace(base, overrides) if overrides else base
+
+
+@pytest.fixture(scope="module")
+def tiny_corpus():
+    return build_corpus(_tiny_spec())
+
+
+def _legacy_engine(spec, syn):
+    """The pre-redesign wiring, composed by hand from the spec's knobs."""
+    cfg = ModelConfig(name="legacy", kind=NTM, vocab_size=spec.model.vocab,
+                      num_topics=spec.model.topics,
+                      ntm_hidden=(spec.model.hidden, spec.model.hidden))
+    train = spec.execution.stochastic_loss
+    loss = lambda p, b: prodlda.elbo_loss(p, cfg, b, train=train)  # noqa: E731,E501
+    loss_sum = lambda p, b: prodlda.elbo_loss_sum(p, cfg, b, train=train)  # noqa: E731,E501
+    init = prodlda.init_params(
+        jax.random.PRNGKey(spec.execution.seed), cfg)
+    t, s = spec.transforms, spec.schedule
+    fed = FederatedConfig(num_clients=spec.data.num_clients,
+                          learning_rate=spec.execution.learning_rate,
+                          max_rounds=s.rounds,
+                          rel_tol=spec.execution.rel_tol,
+                          dp_noise_multiplier=t.dp_noise_multiplier,
+                          dp_clip_norm=t.dp_clip_norm,
+                          compression_topk=t.compression_topk)
+    rc = RoundConfig(exec_mode=spec.execution.exec_mode,
+                     clients_per_round=s.clients_per_round,
+                     sampling=s.sampling,
+                     sampling_seed=spec.execution.seed,
+                     local_epochs=s.local_epochs,
+                     server_optimizer=spec.server_opt.name,
+                     server_lr=spec.server_opt.lr,
+                     server_momentum=spec.server_opt.momentum,
+                     straggler_prob=s.straggler_prob,
+                     max_staleness=s.max_staleness,
+                     staleness_decay=s.staleness_decay,
+                     transforms=t.names,
+                     local_epochs_by_client=s.local_epochs_by_client,
+                     client_join_round=s.client_join_round,
+                     client_leave_round=s.client_leave_round,
+                     partition=spec.data.partition.to_string())
+    clients = build_clients(syn, spec.data.num_clients,
+                            spec.data.partition.to_string(),
+                            seed=spec.execution.seed)
+    return RoundEngine(loss, init, clients, fed, rc,
+                       batch_size=spec.execution.batch_size,
+                       loss_sum_fn=loss_sum)
+
+
+# ---------------------------------------------------------------------------
+# acceptance pin 1: paper regime, facade == legacy wiring, bitwise
+# ---------------------------------------------------------------------------
+def test_paper_regime_bitwise_matches_legacy(tiny_corpus):
+    spec = _tiny_spec()
+    fed = Federation.from_spec(spec, corpus=tiny_corpus)
+    fed.run()
+    legacy = _legacy_engine(spec, tiny_corpus)
+    legacy.fit(seed=spec.execution.seed)
+    assert _max_dev(fed.params, legacy.params) == 0.0
+    assert fed.history == legacy.history
+
+
+# ---------------------------------------------------------------------------
+# acceptance pin 2: dirichlet + straggler + dp on the fused vmap path
+# ---------------------------------------------------------------------------
+def test_dirichlet_straggler_dp_vmap_bitwise_matches_legacy(tiny_corpus):
+    spec = _tiny_spec(**{"data.partition": "dirichlet(5.0)",
+                         "schedule.rounds": 5,
+                         "schedule.straggler_prob": 0.4,
+                         "schedule.max_staleness": 2,
+                         "transforms.names": ("dp",),
+                         "transforms.dp_noise_multiplier": 0.1,
+                         "transforms.dp_clip_norm": 0.05,
+                         "execution.exec_mode": "vmap"})
+    fed = Federation.from_spec(spec, corpus=tiny_corpus)
+    fed.run()
+    legacy = _legacy_engine(spec, tiny_corpus)
+    legacy.fit(seed=spec.execution.seed)
+    assert _max_dev(fed.params, legacy.params) == 0.0
+    assert fed.history == legacy.history
+    # the spec path kept the fixed-K single-compile contract
+    assert sum(fed.engine.trace_counts.values()) == 1
+
+
+# ---------------------------------------------------------------------------
+# registry scenarios == the pre-redesign scenario_grid wiring
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,overrides", [
+    ("straggler", dict(straggler_prob=0.3, max_staleness=3,
+                       staleness_decay=0.5)),
+    ("hetero-epochs", dict(local_epochs_by_client=(1, 2, 4))),
+])
+def test_registry_scenarios_match_pre_redesign_grid(tiny_corpus, name,
+                                                    overrides):
+    # lr below the divergence point of the E=4 hetero cell: a NaN-vs-NaN
+    # comparison would pass on nothing
+    base = _tiny_spec(**{"execution.learning_rate": 5e-4})
+    fed = Federation.from_spec(scenario_spec(name, base),
+                               corpus=tiny_corpus)
+    fed.run()
+    legacy = _legacy_engine(spec_replace(
+        base, {f"schedule.{k}": v for k, v in overrides.items()}),
+        tiny_corpus)
+    legacy.fit(seed=0)
+    assert np.isfinite(fed.history[-1]["loss"])
+    assert _max_dev(fed.params, legacy.params) == 0.0
+
+
+def test_every_registry_scenario_compiles_to_an_engine(tiny_corpus):
+    """Every named scenario must be constructible over a small base —
+    the registry can never hold a spec the engine refuses."""
+    from repro.api import scenario_names
+    base = _tiny_spec()
+    for name in scenario_names():
+        spec = scenario_spec(name, base)
+        Federation.from_spec(spec, corpus=tiny_corpus)
+
+
+# ---------------------------------------------------------------------------
+# facade lifecycle: step / run / hooks
+# ---------------------------------------------------------------------------
+def test_step_and_hooks_stream_history(tiny_corpus):
+    spec = _tiny_spec()
+    fed = Federation.from_spec(spec, corpus=tiny_corpus)
+    seen = []
+    hook = seen.append
+    assert fed.on_round_end(hook) is hook
+    rec = fed.step()
+    assert rec["round"] == 0 and fed.round_index == 1
+    fed.run()
+    assert fed.round_index == 3 and len(fed.history) == 3
+    assert seen == fed.history
+    # run() past schedule.rounds is a no-op; run(rounds=N) extends
+    fed.run()
+    assert fed.round_index == 3
+    fed.run(rounds=2)
+    assert fed.round_index == 5
+
+
+def test_run_honors_rel_tol_like_fit(tiny_corpus):
+    spec = _tiny_spec(**{"execution.rel_tol": 1e6, "schedule.rounds": 5})
+    fed = Federation.from_spec(spec, corpus=tiny_corpus)
+    fed.run()
+    assert fed.round_index == 1          # first arriving round stops it
+    legacy = _legacy_engine(spec, tiny_corpus)
+    legacy.fit(seed=0)
+    assert len(legacy.history) == 1
+    assert fed.history == legacy.history
+
+
+def test_from_spec_accepts_dict_and_scenario_name():
+    fed = Federation.from_spec(_tiny_spec().to_dict())
+    assert fed.spec == _tiny_spec()
+    fed2 = Federation.from_spec(
+        "paper")             # registry name; paper-sized — build only
+    assert fed2.spec.name == "paper"
+
+
+def test_from_spec_rejects_mismatched_corpus(tiny_corpus):
+    spec = _tiny_spec(**{"data.num_clients": 4})
+    with pytest.raises(ValueError, match="num_clients"):
+        Federation.from_spec(spec, corpus=tiny_corpus)
+    # vocab/topic drift is caught at the API boundary too, not as an
+    # opaque shape error inside the first jitted round
+    with pytest.raises(ValueError, match=r"\(topics, vocab\)"):
+        Federation.from_spec(_tiny_spec(**{"model.vocab": 128}),
+                             corpus=tiny_corpus)
+
+
+def test_evaluate_reports_quality_block(tiny_corpus):
+    fed = Federation.from_spec(_tiny_spec(), corpus=tiny_corpus)
+    fed.run(rounds=1)
+    m = fed.evaluate()
+    assert set(m) == {"heldout_elbo_per_token", "heldout_perplexity",
+                      "npmi_coherence", "tss"}
+    assert np.isfinite(m["heldout_elbo_per_token"])
+
+
+# ---------------------------------------------------------------------------
+# acceptance pin 3: snapshot / resume is bit-identical
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("exec_mode", ["loop", "vmap"])
+def test_resume_bitwise_identical_straggler_topk(tiny_corpus, exec_mode):
+    """Snapshot mid-run under the stateful-est regime (straggler buffer
+    + top-k error feedback), resume into a fresh Federation, and both
+    the resumed and an uninterrupted run must match bitwise."""
+    spec = _tiny_spec(**{"schedule.rounds": 6,
+                         "schedule.straggler_prob": 0.4,
+                         "schedule.max_staleness": 2,
+                         "transforms.names": ("topk",),
+                         "transforms.compression_topk": 0.5,
+                         "execution.exec_mode": exec_mode})
+    a = Federation.from_spec(spec, corpus=tiny_corpus)
+    for _ in range(3):
+        a.step()
+    snap = a.state_dict()
+    a.run()                                          # rounds 3..5
+    b = Federation.from_spec(spec, corpus=tiny_corpus)
+    b.load_state_dict(snap)
+    assert b.round_index == 3
+    b.run()
+    c = Federation.from_spec(spec, corpus=tiny_corpus)
+    c.run()
+    assert _max_dev(a.params, b.params) == 0.0
+    assert _max_dev(a.params, c.params) == 0.0
+    assert a.history == b.history == c.history
+
+
+def test_resume_roundtrips_through_file(tmp_path, tiny_corpus):
+    spec = _tiny_spec(**{"schedule.rounds": 4})
+    a = Federation.from_spec(spec, corpus=tiny_corpus)
+    a.run(rounds=2)
+    p = tmp_path / "snap.pkl"
+    a.save_state(str(p))
+    a.run()
+    b = Federation.from_spec(spec, corpus=tiny_corpus)
+    b.load_state(str(p))
+    b.run()
+    assert _max_dev(a.params, b.params) == 0.0
+
+
+def test_resume_contract_refuses_drift(tiny_corpus):
+    spec = _tiny_spec(**{"schedule.rounds": 4})
+    a = Federation.from_spec(spec, corpus=tiny_corpus)
+    a.run(rounds=1)
+    snap = a.state_dict()
+    other = Federation.from_spec(
+        _tiny_spec(**{"schedule.rounds": 5}), corpus=tiny_corpus)
+    with pytest.raises(ValueError, match="snapshot spec does not match"):
+        other.load_state_dict(snap)
+    # engine-level guard: exec-mode mismatch is refused too
+    vm = Federation.from_spec(
+        _tiny_spec(**{"schedule.rounds": 4,
+                      "execution.exec_mode": "vmap"}), corpus=tiny_corpus)
+    with pytest.raises(ValueError, match="exec_mode"):
+        vm.engine.load_state_dict(snap["engine"])
+    with pytest.raises(ValueError, match="state format"):
+        a.engine.load_state_dict({"format": 99})
+
+
+# ---------------------------------------------------------------------------
+# CLI flag combos compile to the same trajectories as the legacy wiring
+# ---------------------------------------------------------------------------
+def test_cli_flag_combo_bitwise_matches_legacy(tmp_path):
+    from repro.launch.simulate import main
+    argv = ["--vocab", "64", "--topics", "4", "--hidden", "16",
+            "--num-clients", "3", "--docs-per-node", "40",
+            "--val-docs", "8", "--rounds", "3", "--batch", "16",
+            "--partition", "dirichlet(5.0)", "--transforms", "dp",
+            "--dp-noise", "0.1", "--dp-clip", "0.05",
+            "--hetero-epochs", "1,2", "--exec-mode", "vmap"]
+    res = main(argv)
+    spec = _tiny_spec(**{"data.partition": "dirichlet(5.0)",
+                         "transforms.names": ("dp",),
+                         "transforms.dp_noise_multiplier": 0.1,
+                         "transforms.dp_clip_norm": 0.05,
+                         "schedule.local_epochs_by_client": (1, 2),
+                         "execution.exec_mode": "vmap"})
+    legacy = _legacy_engine(spec, build_corpus(spec))
+    legacy.fit(seed=0)
+    assert res["history"] == legacy.history
+    assert res["spec"]["data"]["partition"] == {"kind": "dirichlet",
+                                                "alpha": 5.0}

@@ -1,0 +1,372 @@
+"""FederationSpec: validation, serialization round trip, registry,
+parse hardening, and the deprecated engine re-export shim (PR 5).
+
+The serialization contract — ``from_dict(to_dict()) == spec`` and the
+JSON file round trip — is pinned both on hand-built specs and (when
+hypothesis is installed) on randomized valid specs; the CI
+``spec-validate`` step enforces the same property over every registry
+scenario and every ``examples/specs/*.json``.
+"""
+import dataclasses
+import os
+import warnings
+
+import pytest
+
+from repro.api import (BENCH_SCENARIOS, SCENARIOS, DataSpec, ExecutionSpec,
+                       FederationSpec, ModelSpec, PartitionSpec,
+                       ScheduleSpec, ServerOptSpec, TransformsSpec,
+                       parse_int_tuple, register_scenario, scenario_names,
+                       scenario_spec, spec_replace)
+from repro.data.federated_split import parse_partition_spec
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tiny_spec(**overrides):
+    base = FederationSpec(
+        model=ModelSpec(vocab=64, topics=4, hidden=16),
+        data=DataSpec(num_clients=3, docs_per_node=40, val_docs_per_node=8),
+        schedule=ScheduleSpec(rounds=3),
+        execution=ExecutionSpec(batch_size=16))
+    return spec_replace(base, overrides) if overrides else base
+
+
+# ---------------------------------------------------------------------------
+# dict / JSON round trip
+# ---------------------------------------------------------------------------
+def test_roundtrip_defaults_and_assorted():
+    for spec in (
+        FederationSpec(),
+        _tiny_spec(),
+        _tiny_spec(**{"name": "x",
+                      "data.partition": "dirichlet(0.3)",
+                      "schedule.clients_per_round": 2,
+                      "schedule.local_epochs_by_client": (1, 2),
+                      "schedule.client_join_round": (0, 0, 1),
+                      "schedule.straggler_prob": 0.3,
+                      "schedule.max_staleness": 2,
+                      "transforms.names": ("dp", "topk"),
+                      "transforms.dp_noise_multiplier": 0.1,
+                      "transforms.dp_clip_norm": 0.05,
+                      "transforms.compression_topk": 0.25,
+                      "server_opt.name": "fedadam",
+                      "server_opt.lr": 0.05,
+                      "execution.exec_mode": "vmap"}),
+    ):
+        assert FederationSpec.from_dict(spec.to_dict()) == spec
+        assert FederationSpec.from_json(spec.to_json()) == spec
+
+
+def test_to_dict_is_plain_json_types():
+    d = _tiny_spec(**{"schedule.local_epochs_by_client": (1, 2)}).to_dict()
+    assert isinstance(d["schedule"]["local_epochs_by_client"], list)
+    assert isinstance(d["data"]["partition"], dict)
+    import json
+    json.dumps(d)            # strictly JSON-serializable
+
+
+def test_json_file_roundtrip(tmp_path):
+    spec = _tiny_spec(**{"data.partition": "quantity_skew(0.5)"})
+    p = tmp_path / "spec.json"
+    spec.save(str(p))
+    assert FederationSpec.load(str(p)) == spec
+    with pytest.raises(ValueError, match="cannot read spec file"):
+        FederationSpec.load(str(tmp_path / "missing.json"))
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    with pytest.raises(ValueError, match="does not parse"):
+        FederationSpec.load(str(bad))
+
+
+def test_partial_dict_takes_defaults():
+    spec = FederationSpec.from_dict({"schedule": {"rounds": 7}})
+    assert spec.schedule.rounds == 7
+    assert spec.model == ModelSpec()
+    # partition accepts the CLI string form inside dicts
+    spec = FederationSpec.from_dict(
+        {"data": {"partition": "dirichlet(0.3)"}})
+    assert spec.data.partition == PartitionSpec("dirichlet", 0.3)
+    assert spec.data.partition.to_string() == "dirichlet(0.3)"
+
+
+def test_from_dict_rejects_unknown_and_versions():
+    with pytest.raises(ValueError, match="unknown top-level"):
+        FederationSpec.from_dict({"modle": {}})
+    with pytest.raises(ValueError, match="spec section 'schedule'"):
+        FederationSpec.from_dict({"schedule": {"roundz": 3}})
+    with pytest.raises(ValueError, match="version"):
+        FederationSpec.from_dict({"version": 99})
+
+
+def test_spec_replace_paths_checked():
+    spec = _tiny_spec()
+    out = spec_replace(spec, {"schedule.rounds": 9, "name": "n"})
+    assert out.schedule.rounds == 9 and out.name == "n"
+    with pytest.raises(ValueError, match="unknown spec section"):
+        spec_replace(spec, {"sched.rounds": 9})
+    with pytest.raises(ValueError, match="unknown key"):
+        spec_replace(spec, {"schedule.roundz": 9})
+    with pytest.raises(ValueError, match="unknown spec override"):
+        spec_replace(spec, {"rounds": 9})
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("overrides,match", [
+    ({"schedule.sampling": "nope"}, "sampling"),
+    ({"execution.exec_mode": "jit"}, "exec_mode"),
+    ({"server_opt.name": "sgd"}, "server optimizer"),
+    ({"transforms.names": ("zip",)}, "registered transform"),
+    ({"schedule.rounds": 0}, "rounds"),
+    ({"schedule.staleness_decay": 1.5}, "staleness_decay"),
+    ({"schedule.local_epochs_by_client": (1, 0)}, "local_epochs_by_client"),
+    ({"schedule.client_join_round": (-1,)}, "client_join_round"),
+    ({"execution.batch_size": 0}, "batch_size"),
+    # int-typed scalars reject floats/bools at the spec boundary —
+    # 'rounds': 5.5 or 'vocab': 64.5 must not surface as an opaque
+    # crash deep inside jax init / range()
+    ({"schedule.rounds": 5.5}, "rounds must be an int"),
+    ({"model.vocab": 64.5}, "vocab must be an int"),
+    ({"schedule.rounds": True}, "rounds must be an int"),
+    ({"data.num_clients": 3.0}, "num_clients must be an int"),
+    # numpy RNG seeds must be non-negative — caught at the spec, not
+    # as an opaque crash inside corpus build / the scheduler
+    ({"execution.seed": -3}, "seed must be >= 0"),
+    ({"data.seed": -1}, "data.seed must be >= 0"),
+    ({"schedule.sampling_seed": -1}, "sampling_seed must be >= 0"),
+    # floats/bools given JSON strings must raise a CONTEXTED ValueError,
+    # not a raw TypeError from a range comparison — and the truthy
+    # string "false" must never silently flip a bool knob on
+    ({"schedule.straggler_prob": "0.5"}, "straggler_prob must be a number"),
+    ({"server_opt.lr": "1.0"}, "lr must be a number"),
+    ({"execution.pad_cohorts": "false"}, "pad_cohorts must be true/false"),
+    ({"execution.stochastic_loss": 1}, "stochastic_loss must be"),
+])
+def test_validation_rejects(overrides, match):
+    with pytest.raises(ValueError, match=match):
+        _tiny_spec(**overrides)
+
+
+def test_from_dict_rejects_float_ints():
+    with pytest.raises(ValueError, match="rounds must be an int"):
+        FederationSpec.from_dict({"schedule": {"rounds": 5.5}})
+    with pytest.raises(ValueError, match="version"):
+        FederationSpec.from_dict({"version": 1.0})
+
+
+def test_privacy_knobs_never_silently_dropped():
+    # declared transform without its knob
+    with pytest.raises(ValueError, match="dp_noise_multiplier > 0"):
+        _tiny_spec(**{"transforms.names": ("dp",)})
+    with pytest.raises(ValueError, match="compression_topk > 0"):
+        _tiny_spec(**{"transforms.names": ("topk",)})
+    # knob without its declared transform
+    with pytest.raises(ValueError, match="never silently dropped"):
+        _tiny_spec(**{"transforms.dp_noise_multiplier": 0.1})
+    with pytest.raises(ValueError, match="never silently dropped"):
+        _tiny_spec(**{"transforms.compression_topk": 0.1})
+
+
+def test_secure_cross_section_refusals():
+    with pytest.raises(ValueError, match="straggler"):
+        _tiny_spec(**{"transforms.names": ("secure",),
+                      "schedule.straggler_prob": 0.3,
+                      "schedule.max_staleness": 2})
+    with pytest.raises(ValueError, match="full participation"):
+        _tiny_spec(**{"transforms.names": ("secure",),
+                      "schedule.clients_per_round": 2})
+    # K = L and no availability churn is fine
+    _tiny_spec(**{"transforms.names": ("secure",),
+                  "schedule.clients_per_round": 3})
+
+
+# ---------------------------------------------------------------------------
+# randomized round trip (property)
+# ---------------------------------------------------------------------------
+def test_roundtrip_property_randomized():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    pos_float = st.floats(0.01, 100.0, allow_nan=False,
+                          allow_infinity=False)
+
+    @st.composite
+    def specs(draw):
+        partition = draw(st.one_of(
+            st.sampled_from(["topic", "iid"]),
+            st.builds(lambda k, a: f"{k}({a!r})",
+                      st.sampled_from(["dirichlet", "quantity_skew"]),
+                      pos_float)))
+        transforms = draw(st.sampled_from(
+            [{}, {"transforms.names": ("dp",),
+                  "transforms.dp_noise_multiplier": 0.1,
+                  "transforms.dp_clip_norm": 0.05},
+             {"transforms.names": ("topk",),
+              "transforms.compression_topk": 0.25}]))
+        ov = {
+            "name": draw(st.text(max_size=8)),
+            "model.vocab": draw(st.integers(2, 500)),
+            "model.topics": draw(st.integers(1, 20)),
+            "data.num_clients": draw(st.integers(1, 8)),
+            "data.partition": partition,
+            "data.seed": draw(st.one_of(st.none(), st.integers(0, 9))),
+            "schedule.rounds": draw(st.integers(1, 50)),
+            "schedule.clients_per_round": draw(st.integers(0, 8)),
+            "schedule.sampling": draw(st.sampled_from(
+                ["uniform", "weighted", "deterministic"])),
+            "schedule.local_epochs": draw(st.integers(1, 4)),
+            "schedule.local_epochs_by_client": tuple(draw(st.lists(
+                st.integers(1, 4), max_size=3))),
+            "schedule.client_join_round": tuple(draw(st.lists(
+                st.integers(0, 10), max_size=3))),
+            "schedule.straggler_prob": draw(st.sampled_from([0.0, 0.3])),
+            "schedule.max_staleness": draw(st.integers(0, 3)),
+            "schedule.staleness_decay": draw(st.floats(
+                0.0, 1.0, allow_nan=False)),
+            "server_opt.name": draw(st.sampled_from(
+                ["fedavg", "fedavgm", "fedadam"])),
+            "server_opt.lr": draw(pos_float),
+            "execution.exec_mode": draw(st.sampled_from(["loop", "vmap"])),
+            "execution.batch_size": draw(st.integers(1, 64)),
+            "execution.stochastic_loss": draw(st.booleans()),
+            "execution.seed": draw(st.integers(0, 99)),
+        }
+        ov.update(transforms)
+        return spec_replace(FederationSpec(), ov)
+
+    @settings(max_examples=30, deadline=None)
+    @given(specs())
+    def check(spec):
+        assert FederationSpec.from_dict(spec.to_dict()) == spec
+        assert FederationSpec.from_json(spec.to_json()) == spec
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# scenario registry
+# ---------------------------------------------------------------------------
+def test_registry_contains_required_names():
+    assert {"paper", "dirichlet_niid", "straggler_ring",
+            "private_vmap"} <= set(SCENARIOS)
+    assert set(BENCH_SCENARIOS) <= set(SCENARIOS)
+    assert scenario_names() == sorted(SCENARIOS)
+
+
+def test_registry_specs_validate_and_roundtrip():
+    for name in SCENARIOS:
+        spec = scenario_spec(name)          # validates at construction
+        assert spec.name == name
+        assert FederationSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_registry_rebases_and_rejects_unknown():
+    base = _tiny_spec()
+    spec = scenario_spec("straggler", base)
+    assert spec.model.vocab == 64 and spec.schedule.straggler_prob == 0.3
+    # size-dependent overrides follow the base federation
+    dj = scenario_spec("dropout-join", base)
+    assert len(dj.schedule.client_join_round) == base.data.num_clients
+    assert dj.schedule.client_leave_round[-1] == base.schedule.rounds - 1
+    with pytest.raises(ValueError, match="unknown scenario"):
+        scenario_spec("sync-typo")
+
+
+def test_register_scenario_guard():
+    with pytest.raises(ValueError, match="already registered"):
+        register_scenario("paper", {})
+    register_scenario("paper", {}, overwrite=True)   # no-op replace
+
+
+def test_paper_scenario_is_all_defaults():
+    spec = scenario_spec("paper")
+    assert spec == dataclasses.replace(FederationSpec(), name="paper")
+
+
+def test_spec_validate_gate_passes():
+    from benchmarks.ci_gate import spec_validate
+    assert spec_validate(os.path.join(_REPO, "examples", "specs")) == 0
+    assert spec_validate(os.path.join(_REPO, "no-such-dir")) == 1
+
+
+# ---------------------------------------------------------------------------
+# parse hardening (satellite: reject malformed values, never drop)
+# ---------------------------------------------------------------------------
+def test_parse_int_tuple_accepts_well_formed():
+    assert parse_int_tuple("1,2,4") == (1, 2, 4)
+    assert parse_int_tuple(" 1 , 2 ") == (1, 2)
+    assert parse_int_tuple("") == ()
+    assert parse_int_tuple(None) == ()
+    assert parse_int_tuple([1, 2]) == (1, 2)
+
+
+def test_parse_int_tuple_rejects_with_positions():
+    with pytest.raises(ValueError, match=r"empty element at position 1"):
+        parse_int_tuple("1,,4", what="--hetero-epochs")
+    with pytest.raises(ValueError, match=r"'x' at position 1"):
+        parse_int_tuple("1,x", what="--join-rounds")
+    with pytest.raises(ValueError, match=r"-2 at position 0 .* >= 0"):
+        parse_int_tuple("-2,1", what="--join-rounds")
+    with pytest.raises(ValueError, match=r">= 1"):
+        parse_int_tuple("0,2", what="--hetero-epochs", minimum=1)
+    with pytest.raises(ValueError, match="--hetero-epochs"):
+        parse_int_tuple("1,,4", what="--hetero-epochs")
+    # the list path is as strict as the string path: no float
+    # truncation, labeled errors
+    with pytest.raises(ValueError, match=r"2\.7 at position 0"):
+        parse_int_tuple([2.7, 1], what="--hetero-epochs")
+    with pytest.raises(ValueError, match=r"'x' at position 0"):
+        parse_int_tuple(["x"], what="--hetero-epochs")
+    with pytest.raises(ValueError, match=r"-1 at position 1"):
+        parse_int_tuple([0, -1], what="--join-rounds")
+
+
+def test_cli_int_tuple_flags_reject(tmp_path):
+    from repro.launch.simulate import main
+    with pytest.raises(ValueError, match="--hetero-epochs.*position 1"):
+        main(["--hetero-epochs", "1,,4"])
+    with pytest.raises(ValueError, match="--join-rounds.*not an integer"):
+        main(["--join-rounds", "2,x"])
+
+
+def test_parse_partition_spec_hardened():
+    assert parse_partition_spec("dirichlet(0.3)") == ("dirichlet",
+                                                      {"alpha": 0.3})
+    assert parse_partition_spec("dirichlet") == ("dirichlet", {})
+    with pytest.raises(ValueError, match="empty parentheses"):
+        parse_partition_spec("dirichlet()")
+    with pytest.raises(ValueError, match="takes no argument"):
+        parse_partition_spec("iid(0.3)")
+    with pytest.raises(ValueError, match="malformed alpha"):
+        parse_partition_spec("dirichlet(x)")
+    with pytest.raises(ValueError, match="alpha must be > 0"):
+        parse_partition_spec("dirichlet(-1)")
+    with pytest.raises(ValueError, match="unknown partition spec"):
+        parse_partition_spec("nope(0.3)")
+
+
+# ---------------------------------------------------------------------------
+# deprecated engine re-export shim (satellite: canonical transforms home)
+# ---------------------------------------------------------------------------
+def test_engine_transform_reexport_warns_and_resolves():
+    import repro.core.engine as engine_mod
+    import repro.core.transforms as transforms_mod
+    for name in ("TRANSFORMS", "build_transforms", "TransformCtx",
+                 "StackedTransformCtx", "MessageTransform",
+                 "pairwise_mask_stack"):
+        with pytest.warns(DeprecationWarning,
+                          match="repro.core.transforms"):
+            obj = getattr(engine_mod, name)
+        assert obj is getattr(transforms_mod, name)
+    with pytest.raises(AttributeError):
+        engine_mod.no_such_attr
+
+
+def test_canonical_transform_import_does_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        from repro.core.transforms import TRANSFORMS  # noqa: F401
+        from repro.core import TRANSFORMS as t2  # noqa: F401

@@ -23,8 +23,8 @@ import numpy as np
 import pytest
 
 from repro.configs.base import FederatedConfig, RoundConfig
-from repro.core.engine import (FederationEngine, TRANSFORMS,
-                               build_transforms, combine_arrivals)
+from repro.core.engine import FederationEngine, combine_arrivals
+from repro.core.transforms import TRANSFORMS, build_transforms
 from repro.core.protocol import (FedAvgTrainer, FederatedTrainer,
                                  _wrap_client_optimizer)
 from repro.core.rounds import RoundEngine
