@@ -1,66 +1,84 @@
-"""End-to-end driver: federated training of a ~100M-parameter LM.
+"""End-to-end driver: federated LM fine-tuning through the Federation
+facade (docs/lm_federation.md).
 
-Trains a reduced-but-real llama-family model (phi3 family, ~25-110M params
-depending on --width) for a few hundred steps on CPU under the gFedNTM
-protocol semantics: 4 federated clients with non-IID token distributions,
-Eq. (2) sample-weighted gradient aggregation (via the global-mean loss,
-exactly equivalent — tests/test_protocol.py), Eq. (3) SGD server update.
+Trains a reduced-but-real registry architecture (phi3 family by
+default) under the full federated machinery: a synthetic non-IID token
+corpus pooled and re-partitioned with a ``dirichlet`` label-skew
+partitioner, delta messages with ``topk`` sparsification + error
+feedback, the fused single-graph vmap execution path, and Eq. (2)/(3)
+aggregation — the exact scenario the ``lm_dirichlet_topk`` registry
+entry names, so benchmarks/tests/CI and this driver stay one spec.
 
 Run:  PYTHONPATH=src python examples/federated_lm_training.py \
-          --steps 300 --width 512
+          --rounds 40 --arch phi3-mini-3.8b --width 256
 """
 import argparse
-import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.data.lm_data import SyntheticLMStream
-from repro.launch.steps import make_train_step
-from repro.models import transformer as tfm
-from repro.optim import sgd, warmup_cosine
+from repro.api.federation import Federation
+from repro.api.registry import scenario_spec
+from repro.api.spec import spec_replace
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--width", type=int, default=384)
-    ap.add_argument("--layers", type=int, default=4)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
     ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--docs", type=int, default=96)
+    ap.add_argument("--layers", type=int, default=0,
+                    help="0 = the arch's reduced() depth")
+    ap.add_argument("--width", type=int, default=0,
+                    help="d_model override (multiple of 64); 0 = reduced")
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--alpha", type=float, default=0.3,
+                    help="dirichlet label-skew concentration")
+    ap.add_argument("--topk", type=float, default=0.25,
+                    help="fraction of delta coordinates kept per message")
+    ap.add_argument("--exec-mode", default="vmap",
+                    choices=("loop", "vmap"))
     args = ap.parse_args(argv)
 
-    cfg = get_config("phi3-mini-3.8b").reduced()
-    cfg = dataclasses.replace(
-        cfg, num_layers=args.layers, d_model=args.width,
-        num_heads=args.width // 64, num_kv_heads=args.width // 64,
-        head_dim=64, d_ff=args.width * 4, vocab_size=8192)
-    n_params = cfg.num_params()
-    print(f"model: {cfg.num_layers}L d={cfg.d_model} "
-          f"(~{n_params/1e6:.1f}M params), {args.clients} federated clients")
+    spec = spec_replace(scenario_spec("lm_dirichlet_topk"), {
+        "model.arch": args.arch, "model.vocab": args.vocab,
+        "model.seq_len": args.seq, "model.layers": args.layers,
+        "model.width": args.width,
+        "data.num_clients": args.clients, "data.docs_per_node": args.docs,
+        "data.val_docs_per_node": max(args.docs // 4, 8),
+        "data.partition": f"dirichlet({args.alpha})",
+        "schedule.rounds": args.rounds,
+        "transforms.compression_topk": args.topk,
+        "execution.batch_size": args.batch,
+        "execution.learning_rate": args.lr,
+        "execution.exec_mode": args.exec_mode,
+    })
 
-    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
-    opt = sgd(warmup_cosine(0.5, 20, args.steps), momentum=0.9)
-    opt_state = opt.init(params)
-    step_fn = jax.jit(make_train_step(cfg, opt, dtype=jnp.float32))
-    stream = SyntheticLMStream(cfg, args.batch, args.seq,
-                               num_clients=args.clients)
+    fed = Federation.from_spec(spec)
+    cfg = fed.model_cfg
+    print(f"model: {args.arch} {cfg.num_layers}L d={cfg.d_model} "
+          f"(~{cfg.num_params()/1e6:.1f}M params), {args.clients} clients, "
+          f"dirichlet({args.alpha}) partition, "
+          f"topk({args.topk}) deltas, exec={args.exec_mode}")
 
     t0 = time.time()
-    losses = []
-    for step, batch in zip(range(args.steps), stream):
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        params, opt_state, loss = step_fn(params, opt_state, batch, step)
-        losses.append(float(loss))
-        if step % 25 == 0:
-            tps = args.batch * args.seq * (step + 1) / (time.time() - t0)
-            print(f"[{step:4d}] loss={float(loss):.4f} tok/s={tps:,.0f}")
-    print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} "
-          f"in {time.time()-t0:.1f}s")
-    assert losses[-1] < losses[0], "training should reduce loss"
+
+    @fed.on_round_end
+    def _log(rec):
+        if rec["round"] % 5 == 0:
+            print(f"[round {rec['round']:3d}] loss={rec['loss']:.4f} "
+                  f"K={rec['participants']}")
+
+    fed.run()
+    losses = [h["loss"] for h in fed.history]
+    metrics = fed.evaluate()
+    print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} in "
+          f"{time.time()-t0:.1f}s; held-out xent/token="
+          f"{metrics['heldout_xent_per_token']:.3f} "
+          f"ppl={metrics['heldout_perplexity']:.1f}")
+    assert min(losses[-5:]) < losses[0], "training should reduce loss"
 
 
 if __name__ == "__main__":

@@ -3,7 +3,9 @@
 ``Federation.from_spec(spec)`` compiles a declarative
 :class:`~repro.api.spec.FederationSpec` into a fully-wired
 :class:`~repro.core.engine.FederationEngine` (synthetic corpus,
-partitioned clients, ProdLDA loss/init, configs) and drives it with the
+partitioned clients, loss/init — ProdLDA for ``model.family="ntm"``,
+any registry LM architecture for ``model.family="lm"``
+(docs/lm_federation.md), configs) and drives it with the
 EXACT per-round seed schedule ``FederationEngine.fit`` has always used
 (``seed * 100003 + round_idx``) — so a spec-built run retraces the
 legacy ``RoundEngine``/CLI-flag wiring bit for bit (pinned in
@@ -48,6 +50,7 @@ from repro.configs.base import ModelConfig
 from repro.core.engine import ClientState, FederationEngine
 from repro.core.ntm import prodlda
 from repro.data.federated_split import parse_partition_spec, partition_corpus
+from repro.data.lm_data import LMCorpus, generate_lm_corpus, lm_client_data
 from repro.data.synthetic_lda import generate_lda_corpus
 from repro.metrics import npmi_coherence, tss
 
@@ -102,6 +105,39 @@ def build_clients(syn, num_clients: int, partition: str,
             for p in parts]
 
 
+def build_lm_corpus(spec: FederationSpec) -> LMCorpus:
+    """The synthetic federated token corpus a ``model.family='lm'``
+    spec's ``data`` section describes (docs = fixed-length sequences)."""
+    return generate_lm_corpus(
+        vocab_size=spec.model.vocab, num_nodes=spec.data.num_clients,
+        docs_per_node=spec.data.docs_per_node,
+        seq_len=spec.resolved_seq_len,
+        val_docs_per_node=spec.data.val_docs_per_node,
+        seed=spec.resolved_data_seed)
+
+
+def build_lm_clients(corpus: LMCorpus, num_clients: int, partition: str,
+                     seed: int = 0) -> List[ClientState]:
+    """:func:`build_clients` for token corpora: ``topic`` keeps the
+    natural per-node vocabulary-window split; any other registry spec
+    pools the documents and re-partitions them with origin-node labels
+    (the token analogue of dominant-topic labels)."""
+    name, _ = parse_partition_spec(partition)
+    if name in ("topic", "by_label"):
+        return [ClientState(data=lm_client_data(t), num_docs=len(t))
+                for t in corpus.node_tokens]
+    toks = corpus.concat_tokens()
+    labels = np.concatenate([np.full(len(t), node)
+                             for node, t in enumerate(corpus.node_tokens)])
+    parts = partition_corpus(len(toks), num_clients, partition,
+                             labels=labels, seed=seed)
+    if any(len(p) == 0 for p in parts):
+        raise ValueError(f"partition {partition!r} left a client with no "
+                         "documents; raise alpha or shrink num_clients")
+    return [ClientState(data=lm_client_data(toks[p]), num_docs=len(p))
+            for p in parts]
+
+
 def heldout_elbo_per_token(params, cfg: ModelConfig, val_bows: np.ndarray,
                            batch: int = 256) -> float:
     """Negative ELBO per held-out token (log perplexity bound)."""
@@ -123,6 +159,23 @@ def heldout_perplexity(params, cfg: ModelConfig, val_bows: np.ndarray,
     with np.errstate(over="ignore"):
         return float(np.exp(heldout_elbo_per_token(params, cfg, val_bows,
                                                    batch)))
+
+
+def heldout_xent_per_token(params, cfg: ModelConfig, val_tokens: np.ndarray,
+                           batch: int = 256) -> float:
+    """Mean next-token cross-entropy (nats) on held-out documents — the
+    LM analogue of :func:`heldout_elbo_per_token` (pure CE even for MoE
+    archs: the router aux is a training regularizer, not model quality).
+    """
+    from repro.models import transformer as tfm
+    tot, n_tot = 0.0, 0.0
+    for i in range(0, len(val_tokens), batch):
+        t = jnp.asarray(val_tokens[i:i + batch])
+        logits, _ = tfm.forward_train(params, cfg, {"tokens": t[:, :-1]})
+        s, n = tfm.xent_loss(logits, t[:, 1:])
+        tot += float(s)
+        n_tot += float(n)
+    return tot / max(n_tot, 1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -163,6 +216,16 @@ class Federation:
             spec = FederationSpec.from_dict(spec)
         spec.validate()
         cfg = spec.to_model_config()
+        if spec.model.family == "lm":
+            corpus, clients, loss_fn, loss_sum_fn, init_params = \
+                cls._wire_lm(spec, cfg, corpus, clients, loss_fn,
+                             loss_sum_fn, init_params)
+            engine = FederationEngine(
+                loss_fn, init_params, clients, spec.to_federated_config(),
+                spec.to_round_config(),
+                batch_size=spec.execution.batch_size,
+                loss_sum_fn=loss_sum_fn, message="delta")
+            return cls(spec, engine, model_cfg=cfg, corpus=corpus)
         if clients is None:
             if corpus is None:
                 corpus = build_corpus(spec)
@@ -201,6 +264,49 @@ class Federation:
             spec.to_round_config(), batch_size=spec.execution.batch_size,
             loss_sum_fn=loss_sum_fn, message="delta")
         return cls(spec, engine, model_cfg=cfg, corpus=corpus)
+
+    @staticmethod
+    def _wire_lm(spec, cfg, corpus, clients, loss_fn, loss_sum_fn,
+                 init_params):
+        """``model.family='lm'`` wiring: registry model bundle + token
+        corpus, same override surface as the NTM path."""
+        from repro.models.registry import build_model
+        bundle = build_model(cfg, dtype=jnp.float32)
+        if clients is None:
+            if corpus is None:
+                corpus = build_lm_corpus(spec)
+            else:
+                if not isinstance(corpus, LMCorpus):
+                    raise ValueError(
+                        "model.family='lm' needs an LMCorpus (use "
+                        "repro.data.lm_data.generate_lm_corpus), got "
+                        f"{type(corpus).__name__}")
+                if corpus.num_nodes != spec.data.num_clients:
+                    raise ValueError(
+                        f"injected corpus has {corpus.num_nodes} nodes "
+                        f"but the spec declares data.num_clients="
+                        f"{spec.data.num_clients}")
+                got = (corpus.vocab_size, corpus.seq_len)
+                want = (spec.model.vocab, spec.resolved_seq_len)
+                if got != want:
+                    raise ValueError(
+                        f"injected corpus was generated for (vocab, "
+                        f"seq_len)={got} but the spec declares {want} — "
+                        "a mismatched corpus would only fail later as "
+                        "an opaque shape error inside the jitted loss")
+            clients = build_lm_clients(corpus, spec.data.num_clients,
+                                       spec.data.partition.to_string(),
+                                       seed=spec.resolved_data_seed)
+        if loss_fn is None:
+            loss_fn = bundle.loss
+            if loss_sum_fn is None:
+                # (sum, count): mask-aware, so zero-padded cohort rows
+                # stay out of the fused vmap objective
+                loss_sum_fn = bundle.loss_sum
+        if init_params is None:
+            init_params = bundle.init(
+                jax.random.PRNGKey(spec.execution.seed))
+        return corpus, clients, loss_fn, loss_sum_fn, init_params
 
     # -- state ------------------------------------------------------------
     @property
@@ -289,12 +395,27 @@ class Federation:
     # -- evaluation --------------------------------------------------------
     def evaluate(self, *, batch: int = 256) -> Dict[str, float]:
         """Held-out quality against the generative ground truth (the
-        metric block ``simulate.py`` has always reported)."""
+        metric block ``simulate.py`` has always reported).  NTM
+        federations get the paper's ELBO/perplexity/NPMI/TSS block; LM
+        federations get held-out next-token cross-entropy + perplexity.
+        """
         if self.corpus is None or self.model_cfg is None:
             raise ValueError(
                 "evaluate() needs the synthetic corpus and model config; "
                 "this Federation was built over injected clients — score "
                 "params with repro.metrics directly instead")
+        if isinstance(self.corpus, LMCorpus):
+            if not len(self.corpus.val_tokens):
+                raise ValueError(
+                    "evaluate() needs held-out documents; set "
+                    "data.val_docs_per_node > 0 in the spec")
+            xent = heldout_xent_per_token(
+                self.engine.params, self.model_cfg,
+                self.corpus.val_tokens, batch)
+            with np.errstate(over="ignore"):
+                ppl = float(np.exp(xent))
+            return {"heldout_xent_per_token": xent,
+                    "heldout_perplexity": ppl}
         val = self.corpus.concat_val_bows()
         params = self.engine.params
         beta = np.asarray(prodlda.get_topics(params))

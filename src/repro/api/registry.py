@@ -36,6 +36,17 @@ _STRAGGLER_KNOBS = {"schedule.straggler_prob": 0.3,
                     "schedule.max_staleness": 3,
                     "schedule.staleness_decay": 0.5}
 _DIRICHLET = {"data.partition": "dirichlet(0.3)"}
+# CPU-scale federated LM fine-tune (phi3 family over its reduced()
+# config); client lr sized for SGD on token cross-entropy
+_LM_BASE = {"model.family": "lm", "model.arch": "phi3-mini-3.8b",
+            # reset the NTM-only shape fields so the scenario rebases
+            # cleanly over any caller-sized NTM base spec
+            "model.topics": 10, "model.hidden": 64,
+            "model.vocab": 256, "model.seq_len": 32,
+            "data.num_clients": 4, "data.docs_per_node": 96,
+            "data.val_docs_per_node": 24,
+            "schedule.rounds": 20, "execution.batch_size": 8,
+            "execution.learning_rate": 0.1}
 
 
 def _dropout_join(base: FederationSpec) -> Dict[str, Any]:
@@ -77,6 +88,17 @@ SCENARIOS: Dict[str, Overrides] = {
                      **_DP_KNOBS, "execution.exec_mode": "vmap"},
     # alias of dirichlet-noniid under the related-work spelling
     "dirichlet_niid": dict(_DIRICHLET),
+    # ---- federated LM presets (docs/lm_federation.md) -----------------
+    # federated representation learning per Federated Word2Vec
+    # (PAPERS.md, arxiv 2105.00831): a registry LM fine-tuned under the
+    # same scenario machinery as the topic models
+    "lm_fedavg": dict(_LM_BASE),
+    # the example scenario: label-skewed token windows + top-k
+    # compressed deltas on the fused vmap path
+    "lm_dirichlet_topk": {**_LM_BASE, **_DIRICHLET,
+                          "transforms.names": ("topk",),
+                          "transforms.compression_topk": 0.25,
+                          "execution.exec_mode": "vmap"},
 }
 
 # the scenario-bench sweep, in sweep order — bench_scenarios.py and the

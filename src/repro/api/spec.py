@@ -6,7 +6,8 @@ x staleness x heterogeneity x transforms x server optimizer x execution
 mode) is describable as ONE versioned dataclass tree:
 
     FederationSpec
-      ├── model        what topic model the federation trains (ProdLDA)
+      ├── model        what the federation trains (ProdLDA, or any
+      │                registry LM family — docs/lm_federation.md)
       ├── data         synthetic federation + partition sub-spec
       │     └── partition   registry partitioner (kind + alpha)
       ├── schedule     rounds, participation, staleness, heterogeneity
@@ -205,15 +206,79 @@ def _check_int_tuple(v, where: str, minimum: int = 0) -> None:
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class ModelSpec:
-    """``model`` section: the ProdLDA topic model the federation trains."""
+    """``model`` section: what the federation trains.
+
+    Two families share the section (docs/lm_federation.md):
+
+    * ``family="ntm"`` (default) — the paper's ProdLDA topic model;
+      ``vocab``/``topics``/``hidden`` size it, the LM-only fields must
+      stay at their zero defaults.
+    * ``family="lm"`` — a language model from the architecture registry
+      (``repro.configs.ARCHS``), resolved through ``models/registry.py``
+      over the arch's ``reduced()`` config.  ``arch`` picks the family
+      (dense/moe/ssm/hybrid — the audio and vision-language archs need
+      modality batch keys the federated token pipeline does not carry);
+      ``layers``/``width``/``seq_len`` override the reduced sizing
+      (``0`` = keep the reduced default), and the NTM-only
+      ``topics``/``hidden`` must stay at their defaults — fields are
+      never silently dropped.
+    """
+    family: str = "ntm"
     vocab: int = 400
     topics: int = 10
     hidden: int = 64            # both encoder MLP widths
+    # -- LM-only fields (family="lm") -----------------------------------
+    arch: str = ""              # repro.configs.ARCHS id
+    layers: int = 0             # 0 = the arch's reduced() layer count
+    width: int = 0              # d_model override; 0 = reduced default
+    seq_len: int = 0            # tokens per document; 0 = 32
 
     def _validate(self) -> None:
+        _require(self.family in ("ntm", "lm"),
+                 f"model.family {self.family!r} is not one of "
+                 "('ntm', 'lm')")
         _check_int(self.vocab, "model.vocab", 2)
         _check_int(self.topics, "model.topics", 1)
         _check_int(self.hidden, "model.hidden", 1)
+        _require(isinstance(self.arch, str),
+                 f"model.arch must be a string, got {self.arch!r}")
+        _check_int(self.layers, "model.layers", 0)
+        _check_int(self.width, "model.width", 0)
+        _check_int(self.seq_len, "model.seq_len", 0)
+        if self.family == "ntm":
+            _require(self.arch == "" and self.layers == 0
+                     and self.width == 0 and self.seq_len == 0,
+                     "model.arch/layers/width/seq_len are LM-only "
+                     "fields — set model.family='lm' to use them; "
+                     "fields are never silently dropped")
+            return
+        # family == "lm"
+        from repro.configs import ARCHS
+        from repro.configs.base import AUDIO, NTM, VLM
+        _require(self.arch in ARCHS,
+                 f"model.arch {self.arch!r} is not a registered "
+                 f"architecture; known: {sorted(ARCHS)}")
+        kind = ARCHS[self.arch].kind
+        _require(kind not in (NTM, AUDIO, VLM),
+                 f"model.arch {self.arch!r} has kind {kind!r} — "
+                 "model.family='lm' federates the token-causal "
+                 "families (dense/moe/ssm/hybrid); audio and "
+                 "vision-language archs need modality batch keys the "
+                 "federated token pipeline does not carry, and NTM "
+                 "archs go through model.family='ntm'")
+        # matching the class defaults: the NTM shape fields have no LM
+        # meaning, so a non-default value would be silently dropped
+        _require(self.topics == 10 and self.hidden == 64,
+                 "model.topics/model.hidden are NTM-only fields — "
+                 "leave them at their defaults under model.family='lm'; "
+                 "fields are never silently dropped")
+        if self.width:
+            _require(self.width % 64 == 0,
+                     f"model.width must be a multiple of 64 (the "
+                     f"federated LM head size), got {self.width}")
+        if self.seq_len:
+            _require(self.seq_len >= 2,
+                     f"model.seq_len must be >= 2, got {self.seq_len}")
 
 
 @dataclass(frozen=True)
@@ -477,6 +542,13 @@ class FederationSpec:
             v._validate()
         # cross-section coherence (mirrors core/engine.py refusals so a
         # bad spec fails at validation time, not engine-construction time)
+        if self.model.family == "lm":
+            _require(not self.execution.stochastic_loss,
+                     "execution.stochastic_loss is the train-mode ELBO "
+                     "(dropout + reparametrization) of the NTM family — "
+                     "the federated LM objective is deterministic; drop "
+                     "the flag under model.family='lm' instead of having "
+                     "it silently ignored")
         if "secure" in self.transforms.names:
             sch, L = self.schedule, self.data.num_clients
             _require(not (sch.straggler_prob > 0 and sch.max_staleness > 0),
@@ -512,12 +584,44 @@ class FederationSpec:
         return self.data.shared_topics if self.data.shared_topics is not None \
             else max(self.model.topics // 5, 1)
 
+    @property
+    def resolved_seq_len(self) -> int:
+        """Tokens per federated LM document (model.seq_len, default 32)."""
+        return self.model.seq_len or 32
+
     # -- compilation to the engine's config objects -----------------------
     def to_model_config(self) -> ModelConfig:
+        if self.model.family == "lm":
+            return self._to_lm_model_config()
         return ModelConfig(name=self.name or "federation-spec", kind=NTM,
                            vocab_size=self.model.vocab,
                            num_topics=self.model.topics,
                            ntm_hidden=(self.model.hidden, self.model.hidden))
+
+    def _to_lm_model_config(self) -> ModelConfig:
+        """The arch's CPU-scale ``reduced()`` config with the spec's
+        size overrides — the federated analogue of the launcher's
+        ``--reduced`` path, so every registry family lowers the same
+        way it does in the arch smoke tests."""
+        from repro.configs import get_config
+        m = self.model
+        cfg = get_config(m.arch).reduced()
+        kw: Dict[str, Any] = {
+            "name": self.name or f"fed-{m.arch}",
+            "vocab_size": m.vocab,
+            # documents are seq_len+1 tokens (inputs + shifted labels)
+            "max_seq_len": max(cfg.max_seq_len, self.resolved_seq_len + 1),
+        }
+        if m.layers:
+            kw["num_layers"] = m.layers
+        if m.width:
+            heads = max(m.width // 64, 1)
+            kw.update(d_model=m.width, d_ff=m.width * 2, num_heads=heads,
+                      head_dim=64,
+                      num_kv_heads=heads
+                      if cfg.num_kv_heads >= cfg.num_heads
+                      else max(1, heads // 2))
+        return dataclasses.replace(cfg, **kw)
 
     def to_federated_config(self) -> FederatedConfig:
         t = self.transforms

@@ -80,6 +80,8 @@ def make_federated_train_step(
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
+    from repro.parallel.sharding import axis_size
+
     fed = fed or FederatedConfig()
     axis = client_axes if len(client_axes) > 1 else client_axes[0]
 
@@ -91,10 +93,10 @@ def make_federated_train_step(
             cid = jax.lax.axis_index(client_axes[0])
             if len(client_axes) > 1:
                 for ax in client_axes[1:]:
-                    cid = cid * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+                    cid = cid * axis_size(ax) + jax.lax.axis_index(ax)
             num_clients = 1
             for ax in client_axes:
-                num_clients *= jax.lax.axis_size(ax)
+                num_clients *= axis_size(ax)
             local_rng = jax.random.fold_in(rng, cid)
             lbatch = dict(batch)
             if "rng" in lbatch:

@@ -8,7 +8,8 @@ Every batch dict matches ``launch.input_specs`` shape-for-shape.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
@@ -62,6 +63,68 @@ def synthetic_lm_batch(cfg: ModelConfig, batch: int, seq: int, *,
                                 (3, batch, seq)).copy()
         out["mrope_positions"] = mrope
     return out
+
+
+# ---------------------------------------------------------------------------
+# federated token corpora (the LM analogue of data/synthetic_lda.py)
+# ---------------------------------------------------------------------------
+@dataclass
+class LMCorpus:
+    """A per-node federated token corpus.
+
+    ``node_tokens[l]`` is node ``l``'s document set, shape
+    ``(docs_per_node, seq_len + 1)`` int32 — a document is seq_len + 1
+    tokens so inputs (``[:-1]``) and next-token labels (``[1:]``) come
+    from one array.  ``val_tokens`` pools every node's held-out
+    documents (the evaluation set, like ``concat_val_bows``).
+    """
+    node_tokens: List[np.ndarray]
+    val_tokens: np.ndarray
+    vocab_size: int
+    seq_len: int
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.node_tokens)
+
+    def concat_tokens(self) -> np.ndarray:
+        return np.concatenate(self.node_tokens)
+
+
+def lm_client_data(tokens: np.ndarray) -> Dict[str, np.ndarray]:
+    """A document array -> the per-client training dict the federation
+    engine samples from (``tokens``/``labels``/``loss_mask`` rows, the
+    same keys ``launch.input_specs`` pins for the zoo)."""
+    return {"tokens": tokens[:, :-1],
+            "labels": tokens[:, 1:],
+            "loss_mask": np.ones(tokens[:, 1:].shape, np.float32)}
+
+
+def generate_lm_corpus(vocab_size: int, num_nodes: int, docs_per_node: int,
+                       seq_len: int, *, val_docs_per_node: int = 0,
+                       seed: int = 0) -> LMCorpus:
+    """Deterministic federated token corpus with non-IID structure.
+
+    Each node draws from the same overlapping-but-shifted Zipf vocabulary
+    window :func:`synthetic_lm_batch` uses (the token analogue of the
+    paper's "topic diversity across nodes"), so label-skew partitioners
+    (``dirichlet``/``by_label`` with origin-node labels) produce real
+    distribution shift between clients.
+    """
+    node_tokens, val = [], []
+    span = vocab_size
+    for node in range(num_nodes):
+        rng = np.random.default_rng([seed, node])
+        lo = (node * span) // max(2 * num_nodes, 1)
+        hi = min(span, lo + max(span // 2, 2))
+        t = _zipf_tokens(rng, vocab_size,
+                         (docs_per_node + val_docs_per_node, seq_len + 1),
+                         lo=lo, hi=hi)
+        node_tokens.append(t[:docs_per_node])
+        val.append(t[docs_per_node:])
+    return LMCorpus(node_tokens=node_tokens,
+                    val_tokens=np.concatenate(val),
+                    vocab_size=vocab_size, seq_len=seq_len)
 
 
 class SyntheticLMStream:

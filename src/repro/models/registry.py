@@ -19,6 +19,9 @@ class ModelBundle:
     init: Callable[..., Any]            # (key) -> params
     loss: Callable[..., Any]            # (params, batch) -> scalar loss
     forward: Callable[..., Any]         # (params, batch) -> model outputs
+    # (params, batch) -> (sum_loss, count): the mask-aware form the
+    # federated stacked path weights by (Eq. (2) sample counts)
+    loss_sum: Optional[Callable[..., Any]] = None
     prefill: Optional[Callable[..., Any]] = None
     decode_step: Optional[Callable[..., Any]] = None
     init_cache: Optional[Callable[..., Any]] = None
@@ -34,10 +37,14 @@ def build_model(cfg: ModelConfig, *, dtype=None) -> ModelBundle:
         def loss(params, batch, **kw):
             return prodlda.elbo_loss(params, cfg, batch, **kw)
 
+        def loss_sum(params, batch, **kw):
+            return prodlda.elbo_loss_sum(params, cfg, batch, **kw)
+
         def forward(params, batch, **kw):
             return prodlda.forward(params, cfg, batch, **kw)
 
-        return ModelBundle(cfg=cfg, init=init, loss=loss, forward=forward)
+        return ModelBundle(cfg=cfg, init=init, loss=loss,
+                           loss_sum=loss_sum, forward=forward)
 
     from repro.models import transformer as t
 
@@ -46,6 +53,9 @@ def build_model(cfg: ModelConfig, *, dtype=None) -> ModelBundle:
 
     def loss(params, batch, **kw):
         return t.train_loss(params, cfg, batch, dtype=dtype, **kw)
+
+    def loss_sum(params, batch, **kw):
+        return t.train_loss_sum(params, cfg, batch, dtype=dtype, **kw)
 
     def forward(params, batch, **kw):
         return t.forward_train(params, cfg, batch, dtype=dtype, **kw)
@@ -59,6 +69,6 @@ def build_model(cfg: ModelConfig, *, dtype=None) -> ModelBundle:
     def init_cache(batch_size, seq_len, **kw):
         return t.init_cache(cfg, batch_size, seq_len, dtype=dtype, **kw)
 
-    return ModelBundle(cfg=cfg, init=init, loss=loss, forward=forward,
-                       prefill=prefill, decode_step=decode,
+    return ModelBundle(cfg=cfg, init=init, loss=loss, loss_sum=loss_sum,
+                       forward=forward, prefill=prefill, decode_step=decode,
                        init_cache=init_cache)

@@ -503,3 +503,33 @@ def train_loss(params, cfg: ModelConfig, batch, *, dtype=None):
     if cfg.kind == MOE:
         loss = loss + cfg.moe.router_aux_weight * aux
     return loss
+
+
+def train_loss_sum(params, cfg: ModelConfig, batch, *, dtype=None):
+    """``(sum_loss, num_tokens)`` form of :func:`train_loss` — the
+    mask-aware objective the federated stacked (vmap) path needs.
+
+    A ``doc_mask`` row mask (zero-padded cohort rows, see
+    ``data/federated_split.stacked_round_batches``) multiplies into the
+    token mask so padded documents stay out of the objective AND its
+    gradient; the MoE router aux folds in as ``aux * n`` so the masked
+    mean ``sum / count`` equals :func:`train_loss` on the unpadded batch
+    (aux is still computed over padded rows — all-zero token rows — so
+    a PADDED MoE client deviates by the aux share of those rows;
+    docs/lm_federation.md lists it as a known limit).
+    """
+    logits, aux = forward_train(params, cfg, batch, dtype=dtype)
+    if cfg.kind == AUDIO:
+        labels, mask = batch["targets"], batch["frame_mask"]
+    else:
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+    mask = jnp.ones(labels.shape, jnp.float32) if mask is None \
+        else mask.astype(jnp.float32)
+    doc_mask = batch.get("doc_mask")
+    if doc_mask is not None:
+        mask = mask * doc_mask[..., None]
+    s, n = xent_loss(logits, labels, mask)
+    if cfg.kind == MOE:
+        s = s + cfg.moe.router_aux_weight * aux * n
+    return s, n

@@ -140,12 +140,16 @@ def test_registry_scenarios_match_pre_redesign_grid(tiny_corpus, name,
 
 def test_every_registry_scenario_compiles_to_an_engine(tiny_corpus):
     """Every named scenario must be constructible over a small base —
-    the registry can never hold a spec the engine refuses."""
+    the registry can never hold a spec the engine refuses.  The NTM
+    corpus is shared across the NTM cells; LM-family scenarios build
+    their own token corpus (an injected BoW corpus would be refused)."""
     from repro.api import scenario_names
     base = _tiny_spec()
     for name in scenario_names():
         spec = scenario_spec(name, base)
-        Federation.from_spec(spec, corpus=tiny_corpus)
+        Federation.from_spec(
+            spec,
+            corpus=tiny_corpus if spec.model.family == "ntm" else None)
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +210,32 @@ def test_evaluate_reports_quality_block(tiny_corpus):
     assert set(m) == {"heldout_elbo_per_token", "heldout_perplexity",
                       "npmi_coherence", "tss"}
     assert np.isfinite(m["heldout_elbo_per_token"])
+
+
+def test_evaluate_metric_hooks_on_registry_scenario(tiny_corpus):
+    """evaluate() composes with the round-hook stream on a NAMED
+    scenario: a hook can score held-out quality every round, and the
+    metric block stays the quality surface (finite, keyed, per-round)."""
+    spec = scenario_spec("dirichlet-noniid", _tiny_spec())
+    fed = Federation.from_spec(spec, corpus=tiny_corpus)
+    stream = []
+
+    @fed.on_round_end
+    def _score(rec):
+        m = fed.evaluate()
+        stream.append({"round": rec["round"], **m})
+
+    fed.run(rounds=2)
+    assert [s["round"] for s in stream] == [0, 1]
+    for s in stream:
+        assert set(s) == {"round", "heldout_elbo_per_token",
+                          "heldout_perplexity", "npmi_coherence", "tss"}
+        assert np.isfinite(s["heldout_elbo_per_token"])
+        assert np.isfinite(s["npmi_coherence"])
+    # training moved the model: successive evaluate() calls are not a
+    # constant block (the hook really re-scored fresh params)
+    assert stream[0]["heldout_elbo_per_token"] != \
+        stream[1]["heldout_elbo_per_token"]
 
 
 # ---------------------------------------------------------------------------
