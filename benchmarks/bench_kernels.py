@@ -1,38 +1,77 @@
-"""Kernel-path microbenchmarks (CPU).
+"""Kernel-path microbenchmarks + oracle-deviation cells (CPU).
 
-Wall-times on CPU do NOT represent TPU performance (the Pallas kernels run
-in interpret mode); what IS meaningful here:
+Wall-times on CPU do NOT represent TPU performance (the Pallas kernels
+run in interpret mode); what IS meaningful here:
   * the pure-jnp production paths (chunked flash attention, SSD chunked
     scan, fused-vs-naive topic decoder) in steady jit state,
+  * the aggregation hot-path cells (``kernels/ops.py`` wrappers) on BOTH
+    kernel backends, each carrying ``max_dev_vs_ref`` — the measured
+    deviation against the pure-jnp oracle (``kernels/ref.py``) that the
+    CI gate hard-fails on,
   * the DERIVED column: analytic FLOPs and bytes per call, i.e. the
     roofline inputs the TPU projection uses.
+
+The JSON payload mirrors ``bench_scenarios.py`` (one ``setup`` block,
+median-timed cells, per-cell backend tag) so ``benchmarks/ci_gate.py``
+gates both suites from the single committed baseline
+(``benchmarks/baselines/BENCH_scenarios_ci.json``, which holds the
+scenario ``results`` AND this suite's ``kernel_results``):
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels --quick \\
+        --out experiments/bench_kernels_ci.json
+
+JSON layout: {"suite": "kernels", "setup": {...}, "kernel_results":
+[{"kernel", "backend", "us_per_call", "max_dev_vs_ref", "derived"}]}.
+``max_dev_vs_ref`` is null for the timing-only LM cells (their parity
+is pinned by tests/test_kernels.py, not re-measured here).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as kops
 from repro.kernels import ref
 from repro.models.layers.attention import chunked_attention
 from repro.models.layers.mamba2 import ssd_chunked
 
 
 def _time(fn, *args, n=10):
+    """Median microseconds/call after a compile-absorbing warmup call —
+    the same median-not-mean policy as ``bench_scenarios._time_rounds``
+    (one GC pause must not dominate a cell)."""
     out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    per_call = []
     for _ in range(n):
+        t0 = time.perf_counter()
         out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / n * 1e6
+        jax.block_until_ready(out)
+        per_call.append(time.perf_counter() - t0)
+    return float(np.median(per_call)) * 1e6
 
 
-def run(quick=False):
-    rows = []
-    rng = np.random.default_rng(0)
+def _dev(a, b) -> float:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(la, lb))
+
+
+def _cell(kernel, backend, us, dev, derived):
+    return {"kernel": kernel, "backend": backend, "us_per_call": us,
+            "max_dev_vs_ref": dev, "derived": derived}
+
+
+def _lm_cells(rng, quick):
+    cells = []
     b, s, h, hkv, d = (1, 512, 4, 2, 64) if quick else (2, 1024, 8, 2, 64)
 
     q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
@@ -43,13 +82,15 @@ def run(quick=False):
 
     f_flash = jax.jit(lambda q, k, v: chunked_attention(
         q, k, v, pos, pos, causal=True, window=0, scale=d ** -0.5))
-    rows.append((f"flash_attention_jnp_b{b}s{s}", _time(f_flash, q, k, v),
-                 f"flops={flops:.3e}"))
+    cells.append(_cell(f"flash_attention_jnp_b{b}s{s}", "xla",
+                       _time(f_flash, q, k, v), None,
+                       f"flops={flops:.3e}"))
 
     f_ref = jax.jit(lambda q, k, v: ref.flash_attention_ref(
         jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2)))
-    rows.append((f"sdpa_naive_b{b}s{s}", _time(f_ref, q, k, v),
-                 f"scores_bytes={b*h*s*s*4:.3e}"))
+    cells.append(_cell(f"sdpa_naive_b{b}s{s}", "xla",
+                       _time(f_ref, q, k, v), None,
+                       f"scores_bytes={b*h*s*s*4:.3e}"))
 
     # SSD
     hs, p, n_state = 4, 32, 32
@@ -59,12 +100,13 @@ def run(quick=False):
     bb = jnp.asarray(rng.standard_normal((b, s, n_state)), jnp.float32)
     cc = jnp.asarray(rng.standard_normal((b, s, n_state)), jnp.float32)
     f_ssd = jax.jit(lambda *t: ssd_chunked(*t, chunk=128))
-    rows.append((f"ssd_chunked_b{b}s{s}", _time(f_ssd, x, dt, a, bb, cc),
-                 f"state_bytes={b*hs*p*n_state*4}"))
+    cells.append(_cell(f"ssd_chunked_b{b}s{s}", "xla",
+                       _time(f_ssd, x, dt, a, bb, cc), None,
+                       f"state_bytes={b*hs*p*n_state*4}"))
     f_naive = jax.jit(ref.ssd_scan_ref)
-    rows.append((f"ssd_naive_scan_b{b}s{s}",
-                 _time(f_naive, x, dt, a, bb, cc),
-                 "sequential reference"))
+    cells.append(_cell(f"ssd_naive_scan_b{b}s{s}", "xla",
+                       _time(f_naive, x, dt, a, bb, cc), None,
+                       "sequential reference"))
 
     # topic decoder: fused (never materializes B x V logits) vs naive
     bt, kt, vt = (64, 20, 2000) if quick else (256, 50, 5000)
@@ -73,12 +115,96 @@ def run(quick=False):
     beta = jnp.asarray(rng.standard_normal((kt, vt)), jnp.float32)
     bow = jnp.asarray(rng.poisson(0.1, (bt, vt)).astype(np.float32))
     f_naive_td = jax.jit(lambda *t: ref.topic_decoder_ref(*t))
-    rows.append((f"topic_decoder_naive_B{bt}V{vt}",
-                 _time(f_naive_td, theta, beta, bow),
-                 f"logits_bytes={bt*vt*4}"))
-    return rows
+    cells.append(_cell(f"topic_decoder_naive_B{bt}V{vt}", "xla",
+                       _time(f_naive_td, theta, beta, bow), None,
+                       f"logits_bytes={bt*vt*4}"))
+    return cells
+
+
+def _aggregation_cells(rng, quick):
+    """The fed_aggregate hot path on both backends, oracle-deviated.
+
+    One mixed-shape stacked cohort sized like a quick-bench federation;
+    the Pallas timings are interpret-mode on CPU (NOT TPU-representative
+    — the meaningful column is ``max_dev_vs_ref``)."""
+    cells = []
+    k, l, d = (4, 6, 2000) if quick else (16, 24, 20000)
+    x = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    # the combine gets a zero-weight (padded) row; dp_secure gets the
+    # strictly positive weights — its mask term divides by the weights,
+    # and a floored 1e-9 divisor would blow the masks up to 1e9 scale
+    # where an absolute oracle deviation is meaningless
+    w_pos = jnp.asarray(rng.uniform(0.5, 4.0, k), jnp.float32)
+    w = w_pos.at[0].set(0.0)
+    err = jnp.asarray(rng.standard_normal((l, d)), jnp.float32)
+    ids = jnp.arange(k, dtype=jnp.int32)
+    masks = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    noise = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    coef = jnp.asarray(rng.uniform(0.1, 1.0, k), jnp.float32)
+    bytes_tag = f"cohort_bytes={k*d*4}"
+
+    combine_ref = ref.fed_combine_ref(x, w)
+    k_keep = max(d // 10, 1)
+    topk_ref = ref.fed_topk_ef_ref(x, err[ids], k_keep)
+    dpsec_ref = ref.fed_dp_secure_apply_ref(
+        x, noise=noise, masks=masks, clip_coef=coef, weights=w_pos,
+        noise_scale=0.3)
+
+    for backend in kops.KERNEL_BACKENDS:
+        f_comb = jax.jit(lambda t, wt, b=backend:
+                         kops.fed_weighted_combine(t, wt, backend=b))
+        cells.append(_cell(f"fed_weighted_combine_K{k}D{d}", backend,
+                           _time(f_comb, {"g": x}, w),
+                           _dev(f_comb({"g": x}, w)["g"], combine_ref),
+                           bytes_tag))
+        f_topk = jax.jit(lambda m, e, i, b=backend: kops.fed_topk_ef(
+            {"g": m}, {"g": e}, i, frac=0.1, backend=b))
+        sent, new_err = f_topk(x, err, ids)
+        cells.append(_cell(f"fed_topk_ef_K{k}D{d}", backend,
+                           _time(f_topk, x, err, ids),
+                           max(_dev(sent["g"], topk_ref[0]),
+                               _dev(new_err["g"], topk_ref[1])),
+                           f"k_keep={k_keep}"))
+        f_dpsec = jax.jit(lambda t, b=backend: kops.fed_dp_secure_apply(
+            {"g": t}, noise={"g": noise}, masks={"g": masks},
+            clip_coef=coef, weights=w_pos, noise_scale=0.3, backend=b))
+        cells.append(_cell(f"fed_dp_secure_apply_K{k}D{d}", backend,
+                           _time(f_dpsec, x),
+                           _dev(f_dpsec(x)["g"], dpsec_ref),
+                           bytes_tag))
+    return cells
+
+
+def run(out_path=None, *, quick=False, seed=0):
+    rng = np.random.default_rng(seed)
+    cells = _lm_cells(rng, quick) + _aggregation_cells(rng, quick)
+    for c in cells:
+        dev = ("-" if c["max_dev_vs_ref"] is None
+               else f"{c['max_dev_vs_ref']:.1e}")
+        print(f"{c['kernel']:32s} {c['backend']:6s} "
+              f"{c['us_per_call']:10.1f}us dev={dev:8s} {c['derived']}")
+    payload = {"suite": "kernels",
+               "setup": {"quick": quick, "seed": seed,
+                         "backend": jax.default_backend()},
+               "kernel_results": cells}
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {out_path} ({len(cells)} kernel cells)")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="JSON payload path (omit for stdout only)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized shapes")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args(argv)
+    return run(a.out, quick=a.quick, seed=a.seed)
 
 
 if __name__ == "__main__":
-    for name, us, derived in run():
-        print(f"{name},{us:.1f},{derived}")
+    main()

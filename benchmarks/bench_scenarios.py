@@ -32,10 +32,23 @@ Two headline measurements:
     PYTHONPATH=src python -m benchmarks.bench_scenarios --quick \\
         --transforms dp,topk
 
+Cells whose spec pins ``execution.kernel_backend = "pallas"`` (the
+``pallas-*`` registry scenarios) run the aggregation hot path through
+the Pallas kernels (``kernels/fed_aggregate.py``; interpret mode on
+CPU).  For those the sweep adds a THIRD run — the same vmap spec with
+the XLA reference backend — and records ``backend_param_dev`` /
+``backend_loss_dev``, the direct pallas-vs-xla parity numbers the CI
+gate hard-fails on.  ``secure_mask_sum_abs_pallas`` re-probes the
+mask-cancellation invariant with the client-axis sum computed INSIDE
+the Pallas combine kernel (block-tiled accumulation order) — also
+bitwise 0.0 by the dyadic-grid construction.
+
 JSON layout: {"setup": {...}, "straggler_over_sync_vmap": float,
-"secure_mask_sum_abs": float, "results": [{"scenario", "partition",
+"secure_mask_sum_abs": float, "secure_mask_sum_abs_pallas": float,
+"results": [{"scenario", "partition", "kernel_backend",
 "loop_s_per_round", "vmap_s_per_round", "speedup", "max_param_dev",
-"vmap_traces", "final_loss", ...}]}.
+"vmap_traces", "final_loss", ("backend_param_dev",
+"backend_loss_dev" on pallas cells), ...}]}.
 """
 from __future__ import annotations
 
@@ -70,16 +83,28 @@ def base_spec(*, vocab, topics, hidden, num_clients, docs_per_client,
                                 rel_tol=0.0, seed=seed))
 
 
-def secure_mask_cancellation(num_clients: int, seed: int = 0) -> float:
+def secure_mask_cancellation(num_clients: int, seed: int = 0,
+                             backend: str = "xla") -> float:
     """Max |sum over clients| of the secure transform's stacked pairwise
     masks — bitwise 0.0 by construction (``core/transforms.py``); any
     other value means the privacy invariant broke.  Probed on a small
-    mixed-shape template; the property is shape-independent."""
+    mixed-shape template; the property is shape-independent.
+
+    ``backend="pallas"`` computes the client-axis sum INSIDE the Pallas
+    combine kernel (``fed_weighted_sum``, unit coefficients) — the
+    block-tiled accumulation order must preserve the cancellation too,
+    which the dyadic grid guarantees for ANY summation order."""
     tmpl = {"w": jnp.zeros((13, 7), jnp.float32),
             "b": jnp.zeros((11,), jnp.float32)}
     stack = pairwise_mask_stack(jax.random.PRNGKey(seed), tmpl, num_clients)
-    return max(float(np.abs(np.asarray(jnp.sum(leaf, axis=0))).max())
-               for leaf in jax.tree_util.tree_leaves(stack))
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        total = kops.fed_weighted_sum(
+            stack, jnp.ones((num_clients,), jnp.float32), backend="pallas")
+    else:
+        total = jax.tree_util.tree_map(lambda l: jnp.sum(l, axis=0), stack)
+    return max(float(np.abs(np.asarray(leaf)).max())
+               for leaf in jax.tree_util.tree_leaves(total))
 
 
 def _time_rounds(eng: FederationEngine, *, warmup: int, rounds: int,
@@ -133,6 +158,7 @@ def run(out_path="experiments/bench_scenarios.json", *, vocab=1000,
         clients = loop.clients
         rec = {"scenario": name,
                "partition": spec.data.partition.to_string(),
+               "kernel_backend": spec.execution.kernel_backend,
                "loop_s_per_round": t_loop,
                "vmap_s_per_round": t_vmap,
                "speedup": t_loop / max(t_vmap, 1e-12),
@@ -143,12 +169,26 @@ def run(out_path="experiments/bench_scenarios.json", *, vocab=1000,
                "client_docs_min": min(c.num_docs for c in clients),
                "client_docs_max": max(c.num_docs for c in clients),
                "final_loss": loop.history[-1]["loss"]}
+        if spec.execution.kernel_backend == "pallas":
+            # third run: same vmap spec on the XLA reference backend —
+            # the DIRECT pallas-vs-xla parity numbers (the loop run
+            # above differs by exec path as well as backend)
+            vx = Federation.from_spec(
+                spec_replace(spec, {"execution.exec_mode": "vmap",
+                                    "execution.kernel_backend": "xla"}),
+                corpus=syn).engine
+            _time_rounds(vx, warmup=warmup, rounds=rounds, seed=seed)
+            rec["backend_param_dev"] = _max_dev(vx.params, vm.params)
+            rec["backend_loss_dev"] = abs(vx.history[-1]["loss"]
+                                          - vm.history[-1]["loss"])
         results.append(rec)
+        extra = (f" xla-vs-pallas={rec['backend_param_dev']:.1e}"
+                 if "backend_param_dev" in rec else "")
         print(f"{name:18s} loop={t_loop * 1e3:8.1f}ms/round "
               f"vmap={t_vmap * 1e3:8.1f}ms/round "
               f"speedup={rec['speedup']:5.1f}x "
               f"dev={rec['max_param_dev']:.1e} "
-              f"traces={rec['vmap_traces']}")
+              f"traces={rec['vmap_traces']}{extra}")
 
     by_name = {r["scenario"]: r for r in results}
     ratio = None
@@ -168,6 +208,14 @@ def run(out_path="experiments/bench_scenarios.json", *, vocab=1000,
                    for k in sorted(probe_ks))
     print(f"secure-mask cancellation: max |sum_l mask_l| = {mask_sum!r} "
           f"(must be exactly 0.0)")
+    # ... and the same sum computed INSIDE the Pallas combine kernel:
+    # the block-tiled accumulation order must not break the dyadic-grid
+    # cancellation either
+    mask_sum_pl = max(secure_mask_cancellation(k, seed=seed,
+                                               backend="pallas")
+                      for k in sorted(probe_ks))
+    print(f"secure-mask cancellation (pallas combine): "
+          f"{mask_sum_pl!r} (must be exactly 0.0)")
 
     payload = {"setup": {"vocab": vocab, "topics": topics, "hidden": hidden,
                          "num_clients": num_clients,
@@ -177,6 +225,7 @@ def run(out_path="experiments/bench_scenarios.json", *, vocab=1000,
                          "backend": jax.default_backend()},
                "straggler_over_sync_vmap": ratio,
                "secure_mask_sum_abs": mask_sum,
+               "secure_mask_sum_abs_pallas": mask_sum_pl,
                "results": results}
     if out_path:
         os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)

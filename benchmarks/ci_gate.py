@@ -1,26 +1,37 @@
-"""CI perf/regression gate for the scenario-suite bench payloads.
+"""CI perf/regression gate for the scenario- and kernel-suite payloads.
 
-Compares a freshly-produced ``bench_scenarios`` JSON against the
-committed baseline (``benchmarks/baselines/BENCH_scenarios_ci.json``)
-and enforces a two-tier policy:
+Compares a freshly-produced bench JSON (``bench_scenarios`` or
+``bench_kernels`` — the gate is suite-aware, keyed on which of
+``results`` / ``kernel_results`` the payload carries; the single
+committed baseline ``benchmarks/baselines/BENCH_scenarios_ci.json``
+holds BOTH) and enforces a two-tier policy:
 
   * HARD FAIL (exit 1) — correctness/privacy invariants.  These do not
     drift with runner noise, so any violation is a real regression:
       - ``max_param_dev >= 1e-5`` in any scenario (loop/vmap parity,
         transforms included);
-      - ``secure_mask_sum_abs != 0.0`` (the bitwise secure-mask
-        cancellation invariant);
+      - ``backend_param_dev`` / ``backend_loss_dev >= 1e-5`` in any
+        ``pallas-*`` scenario (the vmap run on the Pallas kernel
+        backend drifted from the SAME vmap run on the XLA reference);
+      - ``secure_mask_sum_abs != 0.0`` or
+        ``secure_mask_sum_abs_pallas != 0.0`` (the bitwise secure-mask
+        cancellation invariant, probed both through plain jnp summation
+        and INSIDE the Pallas combine kernel's block-tiled accumulation);
       - ``vmap_traces > 1`` for any scenario (the fixed-K retrace-free
         contract — a second trace means the fused path silently
         degenerated to per-cohort-size recompiles);
-      - a scenario present in the baseline missing from the current
-        payload (a silently-shrunk grid reads as "all green").
+      - a kernel cell's ``max_dev_vs_ref >= 1e-5`` (a Pallas or XLA
+        aggregation path drifted from its pure-jnp oracle,
+        ``kernels/ref.py``);
+      - a scenario or kernel cell present in the baseline missing from
+        the current payload (a silently-shrunk grid reads as "all
+        green").
   * WARN ONLY (``::warning::`` annotations, exit 0) — timing trends.
     Shared CI runners are noisy, so these inform rather than block:
       - ``straggler_over_sync_vmap`` worsened beyond the allowed ratio
         over baseline;
-      - any scenario's vmap seconds/round or loop/vmap speedup worsened
-        beyond the allowed ratio.
+      - any scenario's vmap seconds/round or loop/vmap speedup, or any
+        kernel cell's us/call, worsened beyond the allowed ratio.
 
 The gate's notion of "a scenario" is the NAMED registry of
 ``repro.api.registry`` — a payload scenario the registry does not know
@@ -34,6 +45,8 @@ land.
 Usage (what .github/workflows/ci.yml runs):
 
     python -m benchmarks.ci_gate experiments/bench_scenarios_ci.json \\
+        benchmarks/baselines/BENCH_scenarios_ci.json
+    python -m benchmarks.ci_gate experiments/bench_kernels_ci.json \\
         benchmarks/baselines/BENCH_scenarios_ci.json
     python -m benchmarks.ci_gate --spec-validate
 """
@@ -54,9 +67,54 @@ def _warn(msg: str) -> None:
     print(f"::warning::{msg}")
 
 
+def _gate_kernels(current: dict, baseline: dict, *, dev_bound: float,
+                  timing_slack: float) -> list:
+    """Hard/warn policy for a ``bench_kernels`` payload: oracle
+    deviation and cell membership are hard, us/call trends warn-only.
+    Cells are keyed (kernel, backend) — the xla and pallas rows of the
+    same kernel are independent gate cells."""
+    failures = []
+    cur = {(r["kernel"], r["backend"]): r
+           for r in current.get("kernel_results", [])}
+    base = {(r["kernel"], r["backend"]): r
+            for r in baseline.get("kernel_results", [])}
+    for key in base:
+        if key not in cur:
+            failures.append(f"kernel cell {key!r} present in baseline "
+                            "but missing from the current payload")
+    for key, r in cur.items():
+        dev = r.get("max_dev_vs_ref")
+        if dev is not None and not dev < dev_bound:
+            failures.append(f"{key}: max_dev_vs_ref={dev!r} (bound "
+                            f"{dev_bound:g}) — the kernel drifted from "
+                            "its pure-jnp oracle (kernels/ref.py)")
+        b = base.get(key)
+        if b and r.get("us_per_call") and b.get("us_per_call"):
+            if r["us_per_call"] > timing_slack * b["us_per_call"]:
+                _warn(f"{key}: us_per_call {r['us_per_call']:.4g} vs "
+                      f"baseline {b['us_per_call']:.4g} (beyond "
+                      f"{timing_slack:g}x slack)")
+    return failures
+
+
 def gate(current: dict, baseline: dict, *,
          dev_bound: float = DEV_BOUND,
          timing_slack: float = TIMING_SLACK) -> int:
+    # suite dispatch: a bench_kernels payload carries kernel_results
+    # (and no scenario results) — gate it against the SAME baseline
+    # file's kernel_results block
+    if "kernel_results" in current and "results" not in current:
+        failures = _gate_kernels(current, baseline, dev_bound=dev_bound,
+                                 timing_slack=timing_slack)
+        if failures:
+            for f in failures:
+                print(f"FAIL: {f}", file=sys.stderr)
+            return 1
+        n = len(current.get("kernel_results", []))
+        print(f"ci_gate: {n} kernel cells pass (dev_vs_ref<{dev_bound:g} "
+              "per backend); timing deltas warn-only")
+        return 0
+
     failures = []
     cur = {r["scenario"]: r for r in current.get("results", [])}
     base = {r["scenario"]: r for r in baseline.get("results", [])}
@@ -89,6 +147,17 @@ def gate(current: dict, baseline: dict, *,
         if dev is None or not dev < dev_bound:
             failures.append(f"{name}: max_param_dev={dev!r} (bound "
                             f"{dev_bound:g}) — loop/vmap parity broke")
+        # pallas-backend cells carry the DIRECT xla-vs-pallas vmap
+        # deviations; a pallas cell missing them means the bench
+        # silently stopped measuring the kernel backend
+        if r.get("kernel_backend") == "pallas":
+            for key in ("backend_param_dev", "backend_loss_dev"):
+                bdev = r.get(key)
+                if bdev is None or not bdev < dev_bound:
+                    failures.append(
+                        f"{name}: {key}={bdev!r} (bound {dev_bound:g}) "
+                        "— the Pallas aggregation backend drifted from "
+                        "the XLA reference on the same vmap path")
         traces = r.get("vmap_traces")
         if traces is not None and traces > 1:
             failures.append(f"{name}: vmap_traces={traces} — the fixed-K "
@@ -98,6 +167,15 @@ def gate(current: dict, baseline: dict, *,
     if mask_sum != 0.0:
         failures.append(f"secure_mask_sum_abs={mask_sum!r} — secure-mask "
                         "cancellation must be bitwise exact (0.0)")
+    # the same invariant probed through the Pallas combine kernel's
+    # block-tiled accumulation (key absent from pre-PR-7 payloads)
+    if "secure_mask_sum_abs_pallas" in current:
+        mask_sum_pl = current["secure_mask_sum_abs_pallas"]
+        if mask_sum_pl != 0.0:
+            failures.append(
+                f"secure_mask_sum_abs_pallas={mask_sum_pl!r} — the "
+                "in-kernel client-axis sum broke the bitwise secure-mask "
+                "cancellation (dyadic-grid invariant)")
 
     # ---- warn-only trend gates: timings -------------------------------
     ratio, base_ratio = (current.get("straggler_over_sync_vmap"),

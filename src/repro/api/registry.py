@@ -78,6 +78,24 @@ SCENARIOS: Dict[str, Overrides] = {
     "secure-transform": {"transforms.names": ("secure",)},
     "dp-straggler": {"transforms.names": ("dp",), **_DP_KNOBS,
                      **_STRAGGLER_KNOBS},
+    # bf16 wire format: messages cast to bfloat16 before aggregation,
+    # combined in fp32 (never composes with 'secure' — the spec refuses)
+    "precision-transform": {"transforms.names": ("precision",),
+                            "transforms.precision": "bf16"},
+    # ---- Pallas kernel-backend cells (kernels/fed_aggregate.py) -------
+    # same scenarios, aggregation hot path routed through the Pallas
+    # kernels; the loop run the bench pairs each cell with is the XLA
+    # host reference, so the cell's max_param_dev IS the cross-backend
+    # parity gate (interpret mode on CPU, compiled on TPU)
+    "pallas-aggregate": {"execution.exec_mode": "vmap",
+                         "execution.kernel_backend": "pallas"},
+    "pallas-topk": {"transforms.names": ("topk",),
+                    "transforms.compression_topk": 0.25,
+                    "execution.exec_mode": "vmap",
+                    "execution.kernel_backend": "pallas"},
+    "pallas-secure": {"transforms.names": ("secure",),
+                      "execution.exec_mode": "vmap",
+                      "execution.kernel_backend": "pallas"},
     # ---- fused-path presets -------------------------------------------
     # the in-graph straggler ring buffer (DESIGN.md §4)
     "straggler_ring": {**_STRAGGLER_KNOBS,
@@ -106,7 +124,9 @@ SCENARIOS: Dict[str, Overrides] = {
 BENCH_SCENARIOS = ("sync", "straggler", "straggler-heavy",
                    "dirichlet-noniid", "quantity-skew", "hetero-epochs",
                    "dropout-join", "dp-transform", "topk-transform",
-                   "secure-transform", "dp-straggler")
+                   "secure-transform", "dp-straggler",
+                   "precision-transform", "pallas-aggregate",
+                   "pallas-topk", "pallas-secure")
 assert set(BENCH_SCENARIOS) <= set(SCENARIOS)
 
 

@@ -54,7 +54,7 @@ from typing import Any, Dict, Mapping, Optional, Tuple
 
 from repro.configs.base import NTM, FederatedConfig, ModelConfig, RoundConfig
 from repro.core.aggregation import SERVER_OPTIMIZERS
-from repro.core.engine import EXEC_MODES, RoundScheduler
+from repro.core.engine import EXEC_MODES, KERNEL_BACKENDS, RoundScheduler
 from repro.core.transforms import TRANSFORMS
 from repro.data.federated_split import parse_partition_spec
 
@@ -399,6 +399,7 @@ class TransformsSpec:
     dp_noise_multiplier: float = 0.0
     dp_clip_norm: float = 1.0
     compression_topk: float = 0.0
+    precision: str = ""             # "" = fp32 wire; "bf16" with 'precision'
 
     def _validate(self) -> None:
         _require(isinstance(self.names, tuple),
@@ -438,6 +439,21 @@ class TransformsSpec:
                      "not in transforms.names — declare the stage "
                      "explicitly (names=('topk', ...)); compression "
                      "knobs are never silently dropped")
+        _require(self.precision in ("", "bf16"),
+                 f"transforms.precision {self.precision!r} is not a "
+                 "supported wire format; one of ('', 'bf16')")
+        if "precision" in self.names:
+            _require(self.precision == "bf16",
+                     "the 'precision' transform needs "
+                     "transforms.precision = 'bf16' (the only wire "
+                     "format implemented) — an empty precision with the "
+                     "stage enabled would silently be a no-op cast")
+        elif self.precision:
+            _require(False,
+                     "transforms.precision is set but 'precision' is "
+                     "not in transforms.names — declare the stage "
+                     "explicitly (names=('precision', ...)); wire-format "
+                     "knobs are never silently dropped")
 
 
 @dataclass(frozen=True)
@@ -475,11 +491,19 @@ class ExecutionSpec:
     rel_tol: float = 0.0            # 0 = run exactly schedule.rounds
     stochastic_loss: bool = False   # train-mode ELBO (dropout + reparam)
     seed: int = 0
+    # aggregation kernel backend for the fused vmap graphs: "xla" (the
+    # parity reference) | "pallas" (kernels/fed_aggregate.py).  Like
+    # pad_cohorts, accepted-but-inert under exec_mode="loop" — the host
+    # loop is itself the reference both vmap backends are held to.
+    kernel_backend: str = "xla"
 
     def _validate(self) -> None:
         _require(self.exec_mode in EXEC_MODES,
                  f"execution.exec_mode {self.exec_mode!r} is not one of "
                  f"{EXEC_MODES}")
+        _require(self.kernel_backend in KERNEL_BACKENDS,
+                 f"execution.kernel_backend {self.kernel_backend!r} is "
+                 f"not one of {KERNEL_BACKENDS}")
         _check_int(self.batch_size, "execution.batch_size", 1)
         _check_bool(self.pad_cohorts, "execution.pad_cohorts")
         _check_bool(self.stochastic_loss, "execution.stochastic_loss")
@@ -550,6 +574,13 @@ class FederationSpec:
                      "the flag under model.family='lm' instead of having "
                      "it silently ignored")
         if "secure" in self.transforms.names:
+            _require("precision" not in self.transforms.names,
+                     "the 'secure' transform is incompatible with "
+                     "'precision' (bf16 messages): pairwise masks cancel "
+                     "BITWISE only on the fp32 dyadic grid — rounding "
+                     "masked messages to bfloat16 destroys the "
+                     "cancellation, a silent privacy downgrade, never a "
+                     "tolerable approximation")
             sch, L = self.schedule, self.data.num_clients
             _require(not (sch.straggler_prob > 0 and sch.max_staleness > 0),
                      "the 'secure' transform is incompatible with the "
@@ -632,6 +663,7 @@ class FederationSpec:
             rel_tol=self.execution.rel_tol,
             dp_noise_multiplier=t.dp_noise_multiplier,
             dp_clip_norm=t.dp_clip_norm,
+            message_precision=t.precision,
             compression_topk=t.compression_topk)
 
     def to_round_config(self) -> RoundConfig:
@@ -655,7 +687,8 @@ class FederationSpec:
             local_epochs_by_client=s.local_epochs_by_client,
             client_join_round=s.client_join_round,
             client_leave_round=s.client_leave_round,
-            partition=self.data.partition.to_string())
+            partition=self.data.partition.to_string(),
+            kernel_backend=self.execution.kernel_backend)
 
     # -- dict / JSON round trip -------------------------------------------
     def to_dict(self) -> Dict[str, Any]:

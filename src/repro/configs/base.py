@@ -277,6 +277,11 @@ class FederatedConfig:
     compression_topk: float = 0.0       # 0 = dense; else fraction of grads kept
     dp_noise_multiplier: float = 0.0    # local DP Gaussian noise
     dp_clip_norm: float = 1.0
+    # wire format for client round messages, consumed by the "precision"
+    # transform: "" = fp32 (dense, exact), "bf16" = messages rounded to
+    # bfloat16 before transmission, accumulated in fp32 server-side.
+    # Incompatible with secure aggregation (bitwise mask cancellation).
+    message_precision: str = ""
     rel_tol: float = 1e-5               # stopping criterion on weight change
 
 
@@ -364,6 +369,13 @@ class RoundConfig:
     # registry in data/federated_split.py.  The engine itself never reads
     # this; it describes how the driver builds the client corpora.
     partition: str = "topic"
+    # aggregation kernel backend for the fused vmap graphs: "xla" (the
+    # parity reference — the plain-XLA combine/transform expressions the
+    # engine always ran) or "pallas" (the fused kernels in
+    # kernels/fed_aggregate.py via kernels/ops.py).  Like pad_cohorts,
+    # this is a vmap-path knob: loop mode always runs host XLA and IS
+    # the reference both vmap backends are held to (<=1e-5, tested).
+    kernel_backend: str = "xla"
 
 
 @dataclass(frozen=True)

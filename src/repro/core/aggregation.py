@@ -139,13 +139,51 @@ def secure_mask_grads(grads: Pytree, round_key, client: int,
 # ---------------------------------------------------------------------------
 # top-k sparsification + error feedback
 # ---------------------------------------------------------------------------
+def topk_keep_mask(mag, k: int):
+    """Boolean mask keeping EXACTLY the ``k`` largest entries of the last
+    axis, ranked on bf16-QUANTIZED magnitude with ties broken
+    deterministically toward the LOWER index.
+
+    The naive ``mag >= top_k(mag, k)[-1]`` selection is a knife edge: it
+    keeps every entry tied with the threshold (count > k at ties), and a
+    ~1e-7 reduction-order difference between execution paths flips the
+    threshold-sitting coordinate itself in and out of the kept set.  Two
+    ingredients remove both failure modes:
+
+    * lexicographic (magnitude desc, index asc) ranking keeps exactly
+      ``k`` entries and resolves EXACT ties identically on every path;
+    * ranking on the bf16 rounding of ``mag`` (compare in fp32 after a
+      round-trip cast) collapses NEAR-ties — coordinates whose fp32
+      magnitudes differ by less than the ~2^-8 relative bf16 grid — into
+      exact ties, so sub-grid perturbations from cross-path reduction
+      order cannot reorder the ranking.  A flip now requires the
+      perturbation to push a magnitude across a bf16 grid boundary.
+
+    The quantization affects only WHICH coordinates are kept among
+    near-equals (immaterial under error feedback — the residual of a
+    skipped coordinate transmits next round); kept values are sent at
+    full precision.  Shared by :func:`topk_sparsify` and the fused
+    Pallas kernel (``kernels/fed_aggregate.py``) — one selection rule,
+    every backend.
+    """
+    magq = mag.astype(jnp.bfloat16).astype(jnp.float32)
+    thresh = jax.lax.top_k(magq, k)[0][..., -1:]
+    greater = magq > thresh
+    n_greater = jnp.sum(greater, axis=-1, keepdims=True)
+    tie = magq == thresh
+    tie_rank = jnp.cumsum(tie.astype(jnp.int32), axis=-1) - 1
+    return greater | (tie & (tie_rank < k - n_greater))
+
+
 def topk_sparsify(tree: Pytree, frac: float) -> Pytree:
-    """Keep the top ``frac`` fraction (by magnitude) of each leaf."""
+    """Keep the top ``frac`` fraction (by magnitude) of each leaf,
+    exactly ``max(int(frac * size), 1)`` entries per leaf (deterministic
+    index tie-breaking, :func:`topk_keep_mask`)."""
     def spars(leaf):
         flat = leaf.reshape(-1)
         k = max(int(frac * flat.size), 1)
-        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
-        return jnp.where(jnp.abs(leaf) >= thresh, leaf, 0.0)
+        mask = topk_keep_mask(jnp.abs(flat), k).reshape(leaf.shape)
+        return jnp.where(mask, leaf, 0.0)
     return _tmap(spars, tree)
 
 

@@ -81,11 +81,13 @@ from repro.core.transforms import TransformCtx as _TransformCtx
 from repro.core.transforms import build_transforms as _build_transforms
 from repro.data.federated_split import (round_minibatches, sample_minibatch,
                                         stacked_round_batches)
+from repro.kernels import ops as kops
 from repro.optim.optimizers import global_norm
 
 Pytree = Any
 
 EXEC_MODES = ("loop", "vmap")
+KERNEL_BACKENDS = kops.KERNEL_BACKENDS
 MESSAGE_KINDS = ("delta", "grad")
 
 # DEPRECATED re-export shim: until PR 5 this module re-exported the
@@ -418,6 +420,15 @@ class FederationEngine:
         if self.exec_mode not in EXEC_MODES:
             raise ValueError(f"unknown exec_mode {self.exec_mode!r}; "
                              f"one of {EXEC_MODES}")
+        # aggregation kernel backend for the fused vmap graphs.  Like
+        # pad_cohorts this is accepted-but-inert under loop mode: the
+        # host loop is always plain XLA and IS the reference every vmap
+        # backend is held to (docs/scenarios.md)
+        self.kernel_backend = self.rc.kernel_backend
+        if self.kernel_backend not in KERNEL_BACKENDS:
+            raise ValueError(
+                f"unknown kernel_backend {self.kernel_backend!r}; "
+                f"one of {KERNEL_BACKENDS}")
         self._nmask = num_clients_for_masks or len(self.clients)
 
         if not 0.0 <= self.rc.staleness_decay <= 1.0:
@@ -432,12 +443,14 @@ class FederationEngine:
                       else self.rc.transforms)
         if not names and (fed.dp_noise_multiplier > 0
                           or fed.compression_topk > 0
-                          or fed.secure_aggregation):
+                          or fed.secure_aggregation
+                          or bool(fed.message_precision)):
             raise NotImplementedError(
                 "FederatedConfig requests message-level "
-                "privacy/compression but no transform stage is configured "
-                "for this engine; declare the intent explicitly via "
-                "RoundConfig.transforms=('dp'|'topk'|'secure', ...) "
+                "privacy/compression/precision but no transform stage is "
+                "configured for this engine; declare the intent explicitly "
+                "via RoundConfig.transforms="
+                "('dp'|'topk'|'secure'|'precision', ...) "
                 "(or use the FederatedTrainer preset, which derives its "
                 "grad transforms from FederatedConfig automatically) — "
                 "the knobs are never silently dropped")
@@ -523,6 +536,13 @@ class FederationEngine:
         that would silently break the cancellation."""
         if not any(n == "secure" for n, _ in self._transforms):
             return
+        if any(n == "precision" for n, _ in self._transforms):
+            raise ValueError(
+                "the 'secure' transform is incompatible with 'precision' "
+                "(bf16 messages): the pairwise masks cancel BITWISE only "
+                "on the fp32 dyadic grid — rounding the masked messages "
+                "to bfloat16 destroys the cancellation, which would be a "
+                "silent privacy downgrade, not an approximation")
         if self.rc.straggler_prob > 0 and self.rc.max_staleness > 0:
             raise ValueError(
                 "the 'secure' transform is incompatible with the straggler "
@@ -670,6 +690,9 @@ class FederationEngine:
         transforms = self._transforms
         nmask = self._nmask
         counts = self.trace_counts
+        # static at trace time: selects the aggregation kernel backend
+        # ("xla" keeps every expression below byte-identical to pre-PR-7)
+        kb = self.kernel_backend
 
         def transform_stage(msgs, tstate, round_key, ids, w):
             """Stage 3 INSIDE the fused graph: every registry transform
@@ -681,7 +704,7 @@ class FederationEngine:
             if transforms:
                 ctx = _StackedCtx(
                     round_key=round_key, client_ids=ids, valid=w > 0.0,
-                    weights=w, num_clients=nmask)
+                    weights=w, num_clients=nmask, kernel_backend=kb)
                 tstate = dict(tstate)
                 for name, t in transforms:
                     msgs, st = t.stacked(msgs, ctx, tstate.get(name))
@@ -710,7 +733,7 @@ class FederationEngine:
             msgs, losses = stacked_messages(params, stacked, e_counts)
             w = weights.astype(jnp.float32)
             msgs, tstate = transform_stage(msgs, tstate, round_key, ids, w)
-            bar = agg.aggregate_stacked(msgs, w)
+            bar = kops.fed_weighted_combine(msgs, w, backend=kb)
             upd_p, upd_s = server_opt.apply(params, bar, server_state,
                                             round_idx)
             has = w.sum() > 0.0
@@ -744,6 +767,16 @@ class FederationEngine:
             ring_coef = due_w * discount                         # (C,)
 
             def combine(ring_leaf, fresh_leaf=None):
+                if kb == "pallas":
+                    # the ring and fresh numerators through the fused
+                    # weighted-sum kernel (fp32 accumulate, zero-coef
+                    # slots masked in-kernel)
+                    acc = kops.fed_weighted_sum(ring_leaf, ring_coef,
+                                                backend="pallas")
+                    if fresh_leaf is not None:
+                        acc = acc + kops.fed_weighted_sum(
+                            fresh_leaf, fresh_w, backend="pallas")
+                    return acc / denom
                 # coefficient-vector matvec over flattened slots: one
                 # BLAS pass over the ring instead of a masked
                 # multiply+sum materializing a ring-sized temporary

@@ -188,6 +188,8 @@ class FederatedTrainer(FederationEngine):
         # grad transforms exactly as the pre-unification trainer wired
         # them: dp -> top-k error feedback -> secure masks
         names = []
+        if fed.message_precision:
+            names.append("precision")
         if fed.dp_noise_multiplier > 0:
             names.append("dp")
         if fed.compression_topk > 0:

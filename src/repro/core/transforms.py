@@ -93,6 +93,7 @@ class StackedTransformCtx:
     valid: Any              # (K,) bool — real (non-padded) rows
     weights: Any            # (K,) float32 Eq. (2) weights
     num_clients: int        # static: mask population / state row count
+    kernel_backend: str = "xla"   # static: "xla" (reference) | "pallas"
 
 
 @dataclass(frozen=True)
@@ -146,6 +147,9 @@ def _dp_transform(fed: FederatedConfig) -> MessageTransform:
         # the SAME key composition the loop path runs eagerly:
         # fold_in(fold_in(round_key, client_id), 7) — threefry is a pure
         # function of (key, shape), so the noise bits are identical
+        if ctx.kernel_backend == "pallas":
+            return _dp_stacked_pallas(msgs, ctx, clip, mult), state
+
         def one(row, cid):
             key = jax.random.fold_in(
                 jax.random.fold_in(ctx.round_key, cid), 7)
@@ -154,6 +158,37 @@ def _dp_transform(fed: FederatedConfig) -> MessageTransform:
         return jax.vmap(one)(msgs, ctx.client_ids), state
 
     return MessageTransform("dp", client, stacked)
+
+
+def _dp_stacked_pallas(msgs, ctx: StackedTransformCtx, clip: float,
+                       mult: float):
+    """The dp stage with the apply routed through the fused Pallas kernel.
+
+    Keys, per-row clip coefficients, and noise draws are EXACTLY the XLA
+    path's (vmapped ``fold_in(fold_in(round_key, cid), 7)`` →
+    ``split(key, n_leaves)`` → per-leaf ``normal``; coef =
+    ``min(1, clip/max(global_norm(row), 1e-12))`` — the
+    ``clip_by_global_norm`` scale verbatim); only the final
+    ``x * coef + (mult * clip) * noise`` evaluation moves in-kernel, so
+    parity with the XLA backend is ulp-level (the kernel docstring's fma
+    caveat), far inside the 1e-5 budget.
+    """
+    from repro.kernels import ops as kops
+    from repro.optim.optimizers import global_norm
+
+    keys = jax.vmap(lambda cid: jax.random.fold_in(
+        jax.random.fold_in(ctx.round_key, cid), 7))(ctx.client_ids)
+    coef = jax.vmap(lambda row: jnp.minimum(
+        1.0, clip / jnp.maximum(global_norm(row), 1e-12)))(msgs)
+    leaves, treedef = jax.tree_util.tree_flatten(msgs)
+    leaf_keys = jax.vmap(lambda k: jax.random.split(k, len(leaves)))(keys)
+    noise = jax.tree_util.tree_unflatten(treedef, [
+        jax.vmap(lambda k, l=l: jax.random.normal(
+            k, l.shape[1:], jnp.float32))(leaf_keys[:, i])
+        for i, l in enumerate(leaves)])
+    return kops.fed_dp_secure_apply(msgs, noise=noise, clip_coef=coef,
+                                    noise_scale=mult * clip,
+                                    backend="pallas")
 
 
 # ---------------------------------------------------------------------------
@@ -181,13 +216,21 @@ def _topk_transform(fed: FederatedConfig) -> MessageTransform:
         # and may differ from the federation size
         n = jax.tree_util.tree_leaves(state)[0].shape[0]
         ids = jnp.clip(ctx.client_ids, 0, n - 1)
-        err = _tmap(lambda e: e[ids], state)
-        # the SAME correct -> sparsify -> residual code the loop path
-        # runs, vmapped over the stacked axis — one implementation,
-        # two batching regimes
-        sent, new_err = jax.vmap(
-            lambda g, e: agg.compress_with_error_feedback(g, e, frac))(
-            msgs, err)
+        if ctx.kernel_backend == "pallas":
+            # fused gather -> correct -> top-k -> residual kernel; the
+            # selection rule (topk_keep_mask) is shared with the XLA
+            # branch below, so both backends keep identical coordinates
+            from repro.kernels import ops as kops
+            sent, new_err = kops.fed_topk_ef(msgs, state, ids, frac=frac,
+                                             backend="pallas")
+        else:
+            err = _tmap(lambda e: e[ids], state)
+            # the SAME correct -> sparsify -> residual code the loop
+            # path runs, vmapped over the stacked axis — one
+            # implementation, two batching regimes
+            sent, new_err = jax.vmap(
+                lambda g, e: agg.compress_with_error_feedback(g, e, frac))(
+                msgs, err)
         tgt = jnp.where(ctx.valid, ctx.client_ids, n)
         state = _tmap(lambda e, r: e.at[tgt].set(r, mode="drop"),
                       state, new_err)
@@ -305,6 +348,14 @@ def _secure_transform(fed: FederatedConfig) -> MessageTransform:
         stack = pairwise_mask_stack(ctx.round_key, template,
                                     ctx.num_clients)
         rows = _tmap(lambda m: m[ctx.client_ids], stack)
+        if ctx.kernel_backend == "pallas":
+            # mask term comes out of the kernel BIT-identical to the XLA
+            # expression below (add + divide, no fma candidates), so the
+            # dyadic-grid cancellation survives backend switching
+            from repro.kernels import ops as kops
+            return kops.fed_dp_secure_apply(
+                msgs, masks=rows, weights=ctx.weights,
+                backend="pallas"), state
         w = jnp.maximum(ctx.weights, 1e-9)
         return _tmap(
             lambda g, m: g.astype(jnp.float32) + m / _row_bcast(w, m),
@@ -314,12 +365,55 @@ def _secure_transform(fed: FederatedConfig) -> MessageTransform:
 
 
 # ---------------------------------------------------------------------------
+# precision: mixed-precision client messages (bf16 deltas, fp32 accumulate)
+# ---------------------------------------------------------------------------
+def _precision_transform(fed: FederatedConfig) -> MessageTransform:
+    """Simulate bf16-on-the-wire client messages.
+
+    Each message is rounded to bfloat16 (what a client would actually
+    transmit — half the bytes of fp32) and immediately widened back so
+    every downstream consumer — transforms later in the chain, the
+    Eq. (2) combine, the error memory — accumulates in fp32 exactly as
+    the kernels do.  The round-to-bf16 is a POINTWISE pure function, so
+    the loop and vmap applications are bitwise identical by
+    construction, and the combine error vs an fp32-everywhere run is
+    bounded by bf16's 8-bit mantissa: a convex combination of rounded
+    rows is off by at most ``2^-9 * max|x|`` (property-tested in
+    tests/test_vmap_property.py).
+
+    ``secure`` × ``precision`` is REFUSED at spec construction
+    (api/spec.py) and at engine build: rounding ``msg + mask/n`` to bf16
+    would destroy the dyadic-grid bitwise mask cancellation — a silent
+    privacy downgrade, never a tolerable approximation.
+    """
+    if fed.message_precision != "bf16":
+        raise ValueError(
+            "the 'precision' transform needs "
+            "FederatedConfig.message_precision == 'bf16' (the only wire "
+            f"format implemented); got {fed.message_precision!r} — set "
+            "TransformsSpec.precision, don't enable the transform bare")
+
+    def cast(msg):
+        return _tmap(
+            lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), msg)
+
+    def client(msg, ctx: TransformCtx):
+        return cast(msg)
+
+    def stacked(msgs, ctx: StackedTransformCtx, state):
+        return cast(msgs), state
+
+    return MessageTransform("precision", client, stacked)
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 TRANSFORMS: Dict[str, Callable[[FederatedConfig], MessageTransform]] = {
     "dp": _dp_transform,
     "topk": _topk_transform,
     "secure": _secure_transform,
+    "precision": _precision_transform,
 }
 
 

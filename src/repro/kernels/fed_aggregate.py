@@ -1,0 +1,259 @@
+"""Pallas TPU kernels for the federation transform→combine hot path.
+
+After PRs 2–6 the per-round cost of the fused vmap path is dominated by
+three stages that were still plain XLA: the Eq. (2) weighted combine
+over the stacked ``(K, ...)`` cohort, the top-k + error-feedback pass
+against the ``(L, ...)`` memory tree, and the dp-noise / secure-mask
+message application.  This module fuses each into one kernel
+(house idiom: ``topic_decoder.py`` / ``ssd_scan.py``; oracles in
+``ref.py``; jit'd public wrappers in ``ops.py`` — model/engine code
+never imports this module directly):
+
+  * :func:`fed_weighted_sum_pallas` — the Eq. (2) NUMERATOR
+    ``sum_k w_k * x_k`` with zero-weight padded rows ``where``-masked
+    IN-KERNEL (their values may be non-finite local-update garbage) and
+    fp32 accumulation regardless of message dtype (the bf16-deltas /
+    fp32-accumulate mixed-precision contract).  Grid
+    ``(d_blocks, k_blocks)``, K innermost/sequential, running partial
+    sums in VMEM scratch.  The division by ``max(sum w, 1e-12)`` stays
+    in the wrapper so the kernel also serves the ring buffer's
+    coefficient combine (numerator with staleness-discounted weights).
+  * :func:`fed_topk_ef_pallas` — fused correct → top-k select →
+    residual per cohort row, with the error-memory row GATHERED from the
+    ``(L, D)`` state inside the kernel via scalar-prefetched client ids
+    (the index map reads ``ids[k]``, so the gather is a block DMA, no
+    host-side ``state[ids]`` materialization).  Selection is EXACTLY
+    ``aggregation.topk_keep_mask`` — the same deterministic
+    index-tie-broken rule the loop and vmap XLA paths run.  The scatter
+    back into the state stays one ``.at[tgt].set(mode="drop")`` in the
+    wrapper: padded rows must be DROPPED, which an aliased out-spec
+    cannot express without clobbering client 0 (padded ids are 0).
+  * :func:`fed_dp_secure_apply_pallas` — one elementwise pass computing
+    ``x * clip_coef + noise_scale * noise + mask / max(w, 1e-9)`` with
+    each term statically gated, replacing the 3-kernel XLA chain.  The
+    expressions are literally the XLA transforms': the clip and
+    secure-mask terms come out BIT-identical to the XLA path; only the
+    ``noise_scale * noise`` add may drift ≤ 2 ulp when the compiler
+    contracts it into an fma (immaterial for random dp noise, far
+    inside the 1e-5 parity budget).  The dyadic-grid secure-mask
+    cancellation guarantee is untouched: the masks themselves are
+    generated outside, and ``sum_l mask_l == 0.0`` stays bitwise under
+    ANY in-kernel summation order (DESIGN.md) because every partial sum
+    of grid-integers stays exact in fp32.
+
+All three run under ``interpret=True`` on CPU (the CI parity grid in
+tests/test_kernels.py); on TPU the fp32 tile is (8, 128), hence the
+default block sizes.  The top-k kernel holds one flattened leaf row per
+grid step in VMEM — federation message leaves are delta-sized (≤ a few
+MB), far under the 16 MB VMEM budget; the exact top-k threshold needs
+the whole row anyway (a global rank, not a tileable reduction).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.aggregation import topk_keep_mask
+
+
+def _pad_axis(x, mult: int, axis: int):
+    size = x.shape[axis]
+    pad = -(-size // mult) * mult - size
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# (a) Eq. (2) weighted sum / combine
+# ---------------------------------------------------------------------------
+def _weighted_sum_kernel(x_ref, w_ref, o_ref, acc_scr):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    w = w_ref[...].astype(jnp.float32)              # (bk,)
+    x = x_ref[...].astype(jnp.float32)              # (bk, bd)
+    wb = w[:, None]
+    # zero-weight rows are ABSENT, not down-weighted: padded cohort rows
+    # may hold non-finite garbage and 0 * nan is nan; where is not
+    contrib = jnp.where(wb > 0.0, x, 0.0)
+    acc_scr[...] = acc_scr[...] + jnp.sum(wb * contrib, axis=0)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...]
+
+
+def fed_weighted_sum_pallas(x, w, *, block_k: int = 8, block_d: int = 128,
+                            interpret: bool = True):
+    """``sum_k w_k * x_k`` over a stacked ``(K, D)`` leaf -> ``(D,)`` fp32.
+
+    Zero-weight rows masked in-kernel; fp32 accumulation (bf16 inputs
+    upcast per block).  Matches the numerator of ``ref.fed_combine_ref``.
+    """
+    k, d = x.shape
+    if k == 0:
+        return jnp.zeros((d,), jnp.float32)
+    bk = min(block_k, k)
+    bd = min(block_d, d)
+    x = _pad_axis(_pad_axis(x, bk, 0), bd, 1)
+    w = _pad_axis(jnp.asarray(w, jnp.float32), bk, 0)
+    k_pad, d_pad = x.shape
+    out = pl.pallas_call(
+        _weighted_sum_kernel,
+        grid=(d_pad // bd, k_pad // bk),            # K innermost/sequential
+        in_specs=[
+            pl.BlockSpec((bk, bd), lambda di, ki: (ki, di)),
+            pl.BlockSpec((bk,), lambda di, ki: (ki,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda di, ki: (di,)),
+        out_shape=jax.ShapeDtypeStruct((d_pad,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return out[:d]
+
+
+# ---------------------------------------------------------------------------
+# (b) fused top-k select + error feedback with in-kernel state gather
+# ---------------------------------------------------------------------------
+def _topk_ef_kernel(ids_ref, msg_ref, err_ref, sent_ref, new_ref, *,
+                    k_keep: int):
+    del ids_ref  # consumed by the index maps (the gather), not the body
+    corrected = msg_ref[...].astype(jnp.float32) \
+        + err_ref[...].astype(jnp.float32)          # (1, D)
+    mask = topk_keep_mask(jnp.abs(corrected), k_keep)
+    sent = jnp.where(mask, corrected, 0.0)
+    sent_ref[...] = sent
+    new_ref[...] = corrected - sent
+
+
+def fed_topk_ef_pallas(msgs, err_state, ids, *, k_keep: int,
+                       interpret: bool = True):
+    """Fused correct -> top-k -> residual over a ``(K, D)`` cohort.
+
+    ``err_state`` is the ``(L, D)`` error-memory leaf; ``ids`` the
+    ``(K,)`` int32 global client ids (pre-clipped to ``[0, L)`` — padded
+    rows read SOME row, their residual is scatter-dropped by the
+    caller).  The gather happens in-kernel: the error block's index map
+    reads the scalar-prefetched ``ids[k]``, so row ``k``'s grid step
+    DMAs exactly its client's memory row.  Returns ``(sent, new_err)``,
+    both ``(K, D)`` fp32 — matches ``ref.fed_topk_ef_ref`` on the
+    gathered rows bit-for-bit in interpret mode.
+    """
+    k, d = msgs.shape
+    if k == 0:
+        z = jnp.zeros((0, d), jnp.float32)
+        return z, z
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda ki, ids: (ki, 0)),
+            pl.BlockSpec((1, d), lambda ki, ids: (ids[ki], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda ki, ids: (ki, 0)),
+            pl.BlockSpec((1, d), lambda ki, ids: (ki, 0)),
+        ],
+    )
+    sent, new_err = pl.pallas_call(
+        functools.partial(_topk_ef_kernel, k_keep=k_keep),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((k, d), jnp.float32),
+                   jax.ShapeDtypeStruct((k, d), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(ids, jnp.int32), msgs, err_state)
+    return sent, new_err
+
+
+# ---------------------------------------------------------------------------
+# (c) dp-noise + secure-mask application
+# ---------------------------------------------------------------------------
+def _dp_secure_kernel(x_ref, noise_ref, mask_ref, coef_ref, w_ref, o_ref, *,
+                      noise_scale: float, use_clip: bool, use_noise: bool,
+                      use_mask: bool):
+    out = x_ref[...].astype(jnp.float32)            # (bk, bd)
+    # term order and association mirror the XLA transforms exactly:
+    # (x * coef) + (scale * noise) + (mask / max(w, 1e-9))
+    if use_clip:
+        out = out * coef_ref[...].astype(jnp.float32)[:, None]
+    if use_noise:
+        out = out + noise_scale * noise_ref[...].astype(jnp.float32)
+    if use_mask:
+        w = jnp.maximum(w_ref[...].astype(jnp.float32), 1e-9)
+        out = out + mask_ref[...].astype(jnp.float32) / w[:, None]
+    o_ref[...] = out
+
+
+def fed_dp_secure_apply_pallas(x, noise=None, masks=None, clip_coef=None,
+                               weights=None, *, noise_scale: float = 0.0,
+                               block_k: int = 8, block_d: int = 128,
+                               interpret: bool = True):
+    """One fused elementwise pass over a ``(K, D)`` cohort:
+
+        out = x * clip_coef + noise_scale * noise + mask / max(w, 1e-9)
+
+    with each term present only when its operand is given (statically
+    gated — absent terms cost nothing and, unlike adding a zero, cannot
+    flip signed zeros).  ``dp`` passes (noise, clip_coef); ``secure``
+    passes (masks, weights); matches ``ref.fed_dp_secure_apply_ref``.
+    """
+    k, d = x.shape
+    if k == 0:
+        return jnp.zeros((0, d), jnp.float32)
+    use_clip = clip_coef is not None
+    use_noise = noise is not None
+    use_mask = masks is not None
+    bk = min(block_k, k)
+    bd = min(block_d, d)
+    zeros2 = jnp.zeros((bk, bd), jnp.float32)       # placeholder blocks
+    ones1 = jnp.ones((bk,), jnp.float32)
+    pad2 = lambda a: _pad_axis(_pad_axis(a, bk, 0), bd, 1)  # noqa: E731
+    x = pad2(x)
+    k_pad, d_pad = x.shape
+    # unused operands collapse to a single broadcast block (index map 0)
+    noise = pad2(noise) if use_noise else zeros2
+    masks = pad2(masks) if use_mask else zeros2
+    clip_coef = _pad_axis(jnp.asarray(clip_coef, jnp.float32), bk, 0) \
+        if use_clip else ones1
+    # pad weights with 1.0, not 0.0: the padded tail is sliced off below,
+    # but max(w, 1e-9) must not manufacture huge mask/1e-9 garbage blocks
+    weights = jnp.concatenate(
+        [jnp.asarray(weights, jnp.float32),
+         jnp.ones((k_pad - k,), jnp.float32)]) if use_mask else ones1
+
+    def row_map(real):
+        return (lambda ki, di: (ki, di)) if real else (lambda ki, di: (0, 0))
+
+    def vec_map(real):
+        return (lambda ki, di: (ki,)) if real else (lambda ki, di: (0,))
+
+    kernel = functools.partial(
+        _dp_secure_kernel, noise_scale=float(noise_scale),
+        use_clip=use_clip, use_noise=use_noise, use_mask=use_mask)
+    out = pl.pallas_call(
+        kernel,
+        grid=(k_pad // bk, d_pad // bd),
+        in_specs=[
+            pl.BlockSpec((bk, bd), row_map(True)),
+            pl.BlockSpec((bk, bd), row_map(use_noise)),
+            pl.BlockSpec((bk, bd), row_map(use_mask)),
+            pl.BlockSpec((bk,), vec_map(use_clip)),
+            pl.BlockSpec((bk,), vec_map(use_mask)),
+        ],
+        out_specs=pl.BlockSpec((bk, bd), lambda ki, di: (ki, di)),
+        out_shape=jax.ShapeDtypeStruct((k_pad, d_pad), jnp.float32),
+        interpret=interpret,
+    )(x, noise, masks, clip_coef, weights)
+    return out[:k, :d]

@@ -11,9 +11,18 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention import flash_attention_bhsd
-from repro.kernels.ssd_scan import ssd_scan_pallas
-from repro.kernels.topic_decoder import topic_decoder_pallas
+# defined BEFORE the repro.core import below: core/__init__ -> engine
+# reads this constant off the partially-initialized module when the
+# import cycle is entered from the repro.kernels side
+KERNEL_BACKENDS = ("xla", "pallas")
+
+from repro.core.aggregation import (aggregate_stacked,  # noqa: E402
+                                    topk_keep_mask)
+from repro.kernels.fed_aggregate import (  # noqa: E402
+    fed_dp_secure_apply_pallas, fed_topk_ef_pallas, fed_weighted_sum_pallas)
+from repro.kernels.flash_attention import flash_attention_bhsd  # noqa: E402
+from repro.kernels.ssd_scan import ssd_scan_pallas  # noqa: E402
+from repro.kernels.topic_decoder import topic_decoder_pallas  # noqa: E402
 
 
 def _auto_interpret() -> bool:
@@ -53,3 +62,139 @@ def topic_decoder_loss(theta, beta, bow, dec_scale=None, *,
     return topic_decoder_pallas(theta, beta, bow, dec_scale,
                                 block_b=block_b, block_v=block_v,
                                 interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Federation aggregation (Eq. (2) + transforms hot path).
+#
+# Every wrapper takes ``backend`` ("xla" | "pallas") as a STATIC argument;
+# "xla" is the parity reference — its branches are byte-for-byte the
+# expressions the engine ran before this module existed, so routing the
+# fused graphs through here with the default backend changes nothing.
+# These are called from inside the engine's jitted round functions, so no
+# jit here except on the standalone-use paths exercised by tests/benches.
+# ---------------------------------------------------------------------------
+def _check_backend(backend: str) -> None:
+    if backend not in KERNEL_BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; expected one of "
+            f"{KERNEL_BACKENDS}")
+
+
+def _flat2(leaf):
+    """Stacked leaf (K, ...) -> (K, D) without copying when already 2-D."""
+    return leaf.reshape((leaf.shape[0], -1))
+
+
+def fed_weighted_combine(tree, weights, *, backend: str = "xla",
+                         interpret: bool | None = None):
+    """Eq. (2): per-leaf ``sum_k w_k x_k / max(sum w, 1e-12)`` over a
+    stacked ``(K, ...)`` pytree, zero-weight rows masked out."""
+    _check_backend(backend)
+    if backend == "xla":
+        return aggregate_stacked(tree, weights)
+    interpret = _auto_interpret() if interpret is None else interpret
+    w = jnp.asarray(weights, jnp.float32)
+    total = jnp.maximum(jnp.sum(w), 1e-12)
+
+    def combine(leaf):
+        num = fed_weighted_sum_pallas(_flat2(leaf), w, interpret=interpret)
+        return (num / total).reshape(leaf.shape[1:])
+
+    return jax.tree_util.tree_map(combine, tree)
+
+
+def fed_weighted_sum(tree, coefs, *, backend: str = "xla",
+                     interpret: bool | None = None):
+    """NUMERATOR-only per-leaf ``sum_k c_k x_k`` over a stacked pytree —
+    the ring buffer's staleness-discounted combine (denominator handled
+    by the caller, which also folds in the fresh-cohort term)."""
+    _check_backend(backend)
+    c = jnp.asarray(coefs, jnp.float32)
+    if backend == "xla":
+        return jax.tree_util.tree_map(
+            lambda leaf: (c @ _flat2(leaf).astype(jnp.float32))
+            .reshape(leaf.shape[1:]), tree)
+    interpret = _auto_interpret() if interpret is None else interpret
+    return jax.tree_util.tree_map(
+        lambda leaf: fed_weighted_sum_pallas(
+            _flat2(leaf), c, interpret=interpret).reshape(leaf.shape[1:]),
+        tree)
+
+
+def fed_topk_ef(msgs, err_state, ids, *, frac: float, backend: str = "xla",
+                interpret: bool | None = None):
+    """Fused correct -> exactly-k top-k -> residual per cohort row.
+
+    ``msgs``: stacked ``(K, ...)`` message pytree; ``err_state``: the
+    ``(L, ...)`` error-memory pytree; ``ids``: ``(K,)`` int32 global
+    client ids, pre-clipped to ``[0, L)``.  Per leaf,
+    ``k_keep = max(int(frac * row_size), 1)``.  Returns
+    ``(sent, new_err)`` pytrees of ``(K, ...)`` fp32 rows; scattering
+    ``new_err`` back into the ``(L, ...)`` state (padded rows dropped)
+    stays with the caller.
+    """
+    _check_backend(backend)
+    ids = jnp.asarray(ids, jnp.int32)
+
+    def one_leaf(msg_leaf, err_leaf):
+        m2 = _flat2(msg_leaf)
+        e2 = _flat2(err_leaf)
+        k_keep = max(int(frac * m2.shape[1]), 1)
+        if backend == "xla":
+            corrected = m2.astype(jnp.float32) + e2[ids].astype(jnp.float32)
+            mask = topk_keep_mask(jnp.abs(corrected), k_keep)
+            sent = jnp.where(mask, corrected, 0.0)
+            new_err = corrected - sent
+        else:
+            itp = _auto_interpret() if interpret is None else interpret
+            sent, new_err = fed_topk_ef_pallas(m2, e2, ids, k_keep=k_keep,
+                                               interpret=itp)
+        return (sent.reshape(msg_leaf.shape),
+                new_err.reshape(msg_leaf.shape))
+
+    pairs = jax.tree_util.tree_map(one_leaf, msgs, err_state)
+    sent = jax.tree_util.tree_map(lambda p: p[0], pairs,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree_util.tree_map(lambda p: p[1], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return sent, new_err
+
+
+def fed_dp_secure_apply(tree, *, noise=None, masks=None, clip_coef=None,
+                        weights=None, noise_scale: float = 0.0,
+                        backend: str = "xla",
+                        interpret: bool | None = None):
+    """Per-leaf ``x * clip_coef + noise_scale * noise + mask / max(w,1e-9)``
+    over stacked ``(K, ...)`` pytrees, terms present only when given.
+    ``dp`` passes (noise, clip_coef); ``secure`` passes (masks, weights)."""
+    _check_backend(backend)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    noise_leaves = (jax.tree_util.tree_leaves(noise) if noise is not None
+                    else [None] * len(leaves))
+    mask_leaves = (jax.tree_util.tree_leaves(masks) if masks is not None
+                   else [None] * len(leaves))
+
+    def one_leaf(leaf, nz, mk):
+        x2 = _flat2(leaf)
+        if backend == "xla":
+            out = x2.astype(jnp.float32)
+            if clip_coef is not None:
+                out = out * jnp.asarray(clip_coef, jnp.float32)[:, None]
+            if nz is not None:
+                out = out + noise_scale * _flat2(nz).astype(jnp.float32)
+            if mk is not None:
+                w = jnp.maximum(jnp.asarray(weights, jnp.float32), 1e-9)
+                out = out + _flat2(mk).astype(jnp.float32) / w[:, None]
+        else:
+            itp = _auto_interpret() if interpret is None else interpret
+            out = fed_dp_secure_apply_pallas(
+                x2, noise=None if nz is None else _flat2(nz),
+                masks=None if mk is None else _flat2(mk),
+                clip_coef=clip_coef, weights=weights,
+                noise_scale=noise_scale, interpret=itp)
+        return out.reshape(leaf.shape)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one_leaf(l, n, m)
+                  for l, n, m in zip(leaves, noise_leaves, mask_leaves)])

@@ -66,6 +66,59 @@ def ssd_scan_ref(x, dt, a, b, c, h0=None):
     return y.astype(x.dtype), hl
 
 
+def fed_combine_ref(stacked, weights):
+    """Eq. (2) weighted combine over one stacked ``(K, ...)`` leaf.
+
+    Mirrors ``core.aggregation.aggregate_stacked`` on a single leaf:
+    zero-weight (padded) rows are ``where``-masked OUT before the
+    multiply — their values may be non-finite garbage and must never
+    poison the sum — and an all-zero weight vector yields a zero combine
+    (guarded denominator), never 0/0.  fp32 accumulation regardless of
+    the message dtype (the bf16-deltas / fp32-accumulate contract).
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    total = jnp.maximum(jnp.sum(w), 1e-12)
+    wb = w.reshape((-1,) + (1,) * (stacked.ndim - 1))
+    contrib = jnp.where(wb > 0.0, stacked.astype(jnp.float32), 0.0)
+    return jnp.sum(wb * contrib, axis=0) / total
+
+
+def fed_topk_ef_ref(msgs, err_rows, k_keep: int):
+    """Fused top-k select + error feedback over a ``(K, D)`` cohort.
+
+    Per row: corrected = msg + err;  sent = the EXACTLY-``k_keep``
+    largest-|corrected| entries (index tie-breaking, matching
+    ``core.aggregation.topk_keep_mask``);  new_err = corrected - sent.
+    Returns ``(sent, new_err)``, both ``(K, D)`` fp32.
+    """
+    from repro.core.aggregation import topk_keep_mask
+    corrected = msgs.astype(jnp.float32) + err_rows.astype(jnp.float32)
+    mask = topk_keep_mask(jnp.abs(corrected), k_keep)
+    sent = jnp.where(mask, corrected, 0.0)
+    return sent, corrected - sent
+
+
+def fed_dp_secure_apply_ref(msgs, noise=None, masks=None, clip_coef=None,
+                            weights=None, noise_scale: float = 0.0):
+    """dp-noise + secure-mask application over a ``(K, D)`` cohort.
+
+    out = msg * clip_coef + noise_scale * noise + mask / max(w, 1e-9)
+    with each term present only when its operand is given — EXACTLY the
+    expressions the XLA transforms evaluate (``core/transforms.py``):
+    ``dp`` passes (noise, clip_coef), ``secure`` passes (masks, weights).
+    """
+    out = msgs.astype(jnp.float32)
+    if clip_coef is not None:
+        out = out * clip_coef.reshape((-1,) + (1,) * (out.ndim - 1))
+    if noise is not None:
+        out = out + noise_scale * noise.astype(jnp.float32)
+    if masks is not None:
+        w = jnp.maximum(weights.astype(jnp.float32), 1e-9)
+        out = out + masks.astype(jnp.float32) \
+            / w.reshape((-1,) + (1,) * (out.ndim - 1))
+    return out
+
+
 def topic_decoder_ref(theta, beta, bow, dec_scale=None):
     """ProdLDA reconstruction term, materialized:
         recon_d = -sum_v bow_dv * log softmax_v(theta_d . beta_v * scale)

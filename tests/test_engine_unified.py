@@ -196,10 +196,12 @@ def test_transform_guards():
 
 
 def test_transform_registry_surface():
-    assert set(TRANSFORMS) == {"dp", "topk", "secure"}
-    fed = FederatedConfig(compression_topk=0.1, dp_noise_multiplier=0.5)
-    built = build_transforms(("dp", "topk", "secure"), fed)
-    assert [name for name, _ in built] == ["dp", "topk", "secure"]
+    assert set(TRANSFORMS) == {"dp", "topk", "secure", "precision"}
+    fed = FederatedConfig(compression_topk=0.1, dp_noise_multiplier=0.5,
+                          message_precision="bf16")
+    built = build_transforms(("precision", "dp", "topk", "secure"), fed)
+    assert [name for name, _ in built] == ["precision", "dp", "topk",
+                                           "secure"]
 
 
 def test_federated_trainer_grad_transforms_unchanged():

@@ -63,15 +63,7 @@ def test_loop_vmap_parity_delta_messages(lm_corpus):
 
 def test_loop_vmap_parity_epochs_and_dirichlet(lm_corpus):
     """Parity must survive the stateful knobs: E=2 local epochs plus a
-    dirichlet re-partition that leaves ragged client sizes.
-
-    (top-k compression is deliberately NOT in this cross-mode bound:
-    the magnitude threshold is a knife edge, so the paths' ~1e-7
-    reduction-order difference can flip near-threshold coordinates in
-    and out of the kept set — docs/lm_federation.md known limits; the
-    compression contract is pinned same-path in
-    ``test_topk_deltas_compress_and_converge`` and bitwise under resume
-    below.)"""
+    dirichlet re-partition that leaves ragged client sizes."""
     ov = {"schedule.local_epochs": 2,
           "data.partition": "dirichlet(5.0)"}
     runs = {}
@@ -82,6 +74,34 @@ def test_loop_vmap_parity_epochs_and_dirichlet(lm_corpus):
         fed.run()
         runs[mode] = fed
     assert max_param_dev(runs["loop"].params, runs["vmap"].params) <= 1e-5
+
+
+def test_loop_vmap_parity_with_topk(lm_corpus):
+    """Top-k compression in the CROSS-mode bound — the knife edge is
+    closed.  Until PR 7 this assertion was impossible: the old
+    ``>= threshold`` selection let coordinates near the k-th magnitude
+    flip in/out of the kept set under the paths' ~1e-7 reduction-order
+    difference, so the compression contract was only pinned same-path
+    (old docs/lm_federation.md known limits).  ``topk_keep_mask`` now
+    (a) keeps EXACTLY k entries with index tie-breaking and (b) ranks on
+    bf16-quantized magnitudes, collapsing near-ties into exact ties the
+    index rule resolves identically — a support flip would need a
+    sub-1e-7 perturbation to cross a ~2^-8-relative bf16 grid boundary.
+    Loop and vmap therefore pick identical coordinates and the
+    trajectories track to the usual bound."""
+    ov = {"schedule.rounds": 3,
+          "transforms.names": ("topk",),
+          "transforms.compression_topk": 0.25}
+    runs = {}
+    for mode in ("loop", "vmap"):
+        fed = Federation.from_spec(
+            _lm_spec(**{**ov, "execution.exec_mode": mode}),
+            corpus=lm_corpus)
+        fed.run()
+        runs[mode] = fed
+    assert max_param_dev(runs["loop"].params, runs["vmap"].params) <= 1e-5
+    for a, b in zip(runs["loop"].history, runs["vmap"].history):
+        assert abs(a["loss"] - b["loss"]) <= 1e-5
 
 
 def test_topk_deltas_compress_and_converge(lm_corpus):

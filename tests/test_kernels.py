@@ -157,6 +157,211 @@ def test_topic_decoder_zero_bow_rows(rng):
     np.testing.assert_allclose(np.asarray(out0), 0.0, atol=1e-6)
 
 
+# ---------------------------------------------------------------------------
+# federation aggregation kernels (fed_aggregate.py) — oracle-first grid
+# ---------------------------------------------------------------------------
+# (K, D, block_k, block_d): uneven tails on BOTH grid axes, single-row
+# cohorts, block-multiple shapes — every case also runs with zero-weight
+# padded rows holding non-finite garbage (the fixed-K padding contract)
+COMBINE_CASES = [
+    (5, 300, 4, 128),      # K and D tails
+    (1, 7, 8, 128),        # single client, tiny leaf
+    (8, 128, 8, 128),      # exact block multiples
+    (13, 1000, 8, 256),    # multi-block both axes, tails
+    (3, 129, 2, 64),       # 1-col D tail, 1-row K tail
+]
+
+
+@pytest.mark.parametrize("k,d,bk,bd", COMBINE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fed_combine_matches_ref(k, d, bk, bd, dtype, rng):
+    from repro.kernels.fed_aggregate import fed_weighted_sum_pallas
+    x = rng.standard_normal((k, d)).astype(np.float32)
+    w = rng.uniform(0, 2, k).astype(np.float32)
+    w[rng.random(k) < 0.4] = 0.0
+    # zero-weight padded rows may hold non-finite local-update garbage;
+    # the in-kernel where-mask must keep it out of the sum (0*nan is nan)
+    x[w == 0.0] = np.nan
+    x, w = jnp.asarray(x, dtype), jnp.asarray(w)
+    num = fed_weighted_sum_pallas(x, w, block_k=bk, block_d=bd,
+                                  interpret=True)
+    got = num / jnp.maximum(jnp.sum(w), 1e-12)
+    want = ref.fed_combine_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=2e-6)
+
+
+def test_fed_combine_empty_and_all_padded(rng):
+    """All-zero weights -> zero combine (guarded denominator, matching
+    aggregate_stacked); an empty K=0 cohort -> zeros without tracing a
+    zero-size grid."""
+    from repro.kernels.fed_aggregate import fed_weighted_sum_pallas
+    out = fed_weighted_sum_pallas(jnp.full((4, 17), jnp.nan),
+                                  jnp.zeros((4,)), interpret=True)
+    assert np.all(np.asarray(out) == 0.0)
+    out0 = fed_weighted_sum_pallas(jnp.zeros((0, 9)), jnp.zeros((0,)),
+                                   interpret=True)
+    assert out0.shape == (9,) and np.all(np.asarray(out0) == 0.0)
+
+
+@pytest.mark.parametrize("num_clients", [2, 3, 4, 16])
+def test_fed_combine_preserves_mask_cancellation(num_clients):
+    """The dyadic-grid secure masks must sum to BITWISE +0.0 through the
+    Pallas combine's block-tiled in-kernel summation order, exactly as
+    they do under jnp.sum — the DESIGN.md argument that grid-integer
+    partial sums never round, under a DIFFERENT association."""
+    from repro.core.transforms import pairwise_mask_stack
+    from repro.kernels.fed_aggregate import fed_weighted_sum_pallas
+    tmpl = {"w": jnp.zeros((13, 7), jnp.float32),
+            "b": jnp.zeros((257,), jnp.float32)}
+    stack = pairwise_mask_stack(jax.random.PRNGKey(3), tmpl, num_clients)
+    ones = jnp.ones((num_clients,), jnp.float32)
+    for leaf in jax.tree_util.tree_leaves(stack):
+        flat = leaf.reshape((num_clients, -1))
+        s = fed_weighted_sum_pallas(flat, ones, block_k=2, block_d=64,
+                                    interpret=True) / num_clients
+        assert float(jnp.sum(jnp.abs(s))) == 0.0
+
+
+TOPK_EF_CASES = [
+    # (k, l, d, k_keep)
+    (3, 5, 40, 4),
+    (6, 6, 129, 13),       # gather is identity-size, non-tiled D
+    (2, 9, 8, 1),          # k_keep = 1
+    (4, 4, 16, 16),        # keep everything -> zero residual
+]
+
+
+@pytest.mark.parametrize("k,l,d,kk", TOPK_EF_CASES)
+def test_fed_topk_ef_matches_ref(k, l, d, kk, rng):
+    from repro.kernels.fed_aggregate import fed_topk_ef_pallas
+    msgs = rng.standard_normal((k, d)).astype(np.float32)
+    msgs[0, : min(6, d)] = 0.5          # magnitude ties at the threshold
+    state = rng.standard_normal((l, d)).astype(np.float32)
+    ids = rng.integers(0, l, k).astype(np.int32)
+    want_sent, want_err = ref.fed_topk_ef_ref(
+        jnp.asarray(msgs), jnp.asarray(state)[ids], kk)
+    sent, new_err = fed_topk_ef_pallas(jnp.asarray(msgs),
+                                       jnp.asarray(state),
+                                       jnp.asarray(ids), k_keep=kk,
+                                       interpret=True)
+    # the in-kernel gather + shared topk_keep_mask selection is BITWISE
+    # the oracle's math — identical coordinates, identical residuals
+    np.testing.assert_array_equal(np.asarray(sent), np.asarray(want_sent))
+    np.testing.assert_array_equal(np.asarray(new_err), np.asarray(want_err))
+    assert np.all(np.count_nonzero(np.asarray(sent), axis=1) <= kk)
+
+
+def test_fed_topk_ef_matches_loop_compression(rng):
+    """Cross-implementation: the fused kernel equals the loop path's
+    compress_with_error_feedback (gather done host-side) — one selection
+    rule across host loop, vmapped XLA, and Pallas."""
+    from repro.core.aggregation import compress_with_error_feedback
+    from repro.kernels.fed_aggregate import fed_topk_ef_pallas
+    k, l, d, frac = 4, 7, 60, 0.25
+    kk = max(int(frac * d), 1)
+    msgs = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    state = jnp.asarray(rng.standard_normal((l, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, l, k), jnp.int32)
+    want = jax.vmap(
+        lambda g, e: compress_with_error_feedback(g, e, frac))(
+        msgs, state[ids])
+    sent, new_err = fed_topk_ef_pallas(msgs, state, ids, k_keep=kk,
+                                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(sent), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(new_err), np.asarray(want[1]))
+
+
+DP_SECURE_CASES = [(5, 33), (8, 256), (3, 1), (9, 130)]
+
+
+@pytest.mark.parametrize("k,d", DP_SECURE_CASES)
+def test_fed_dp_secure_apply_matches_ref(k, d, rng):
+    from repro.kernels.fed_aggregate import fed_dp_secure_apply_pallas
+    x = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    nz = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    mk = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    cc = jnp.asarray(rng.uniform(0.1, 1.0, k), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.1, 2, k), jnp.float32)
+    # clip and mask terms are BITWISE the XLA expressions; only the
+    # noise add may drift <= 2 ulp under fma contraction (kernel docs)
+    for kwargs, bitwise in [
+        (dict(), True),
+        (dict(masks=mk, weights=w), True),
+        (dict(clip_coef=cc), True),
+        (dict(noise=nz, clip_coef=cc, noise_scale=0.37), False),
+        (dict(noise=nz, masks=mk, clip_coef=cc, weights=w,
+              noise_scale=1.5), False),
+    ]:
+        want = np.asarray(ref.fed_dp_secure_apply_ref(x, **kwargs))
+        got = np.asarray(fed_dp_secure_apply_pallas(x, **kwargs,
+                                                    interpret=True))
+        if bitwise:
+            np.testing.assert_array_equal(got, want)
+        else:
+            np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
+
+
+def test_fed_ops_wrappers_backend_parity(rng):
+    """The pytree-level ops wrappers agree across backends on mixed-rank
+    trees (the engine calls these, never the kernels directly)."""
+    tree = {"a": jnp.asarray(rng.standard_normal((5, 3, 7)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((5, 11)), jnp.float32)}
+    w = jnp.asarray([1.0, 0.0, 2.0, 0.5, 0.0])
+    cx = ops.fed_weighted_combine(tree, w, backend="xla")
+    cp = ops.fed_weighted_combine(tree, w, backend="pallas", interpret=True)
+    sx = ops.fed_weighted_sum(tree, w, backend="xla")
+    sp = ops.fed_weighted_sum(tree, w, backend="pallas", interpret=True)
+    est = {"a": jnp.asarray(rng.standard_normal((7, 3, 7)), jnp.float32),
+           "b": jnp.asarray(rng.standard_normal((7, 11)), jnp.float32)}
+    ids = jnp.asarray([0, 6, 3, 3, 1], jnp.int32)
+    tx = ops.fed_topk_ef(tree, est, ids, frac=0.3, backend="xla")
+    tp = ops.fed_topk_ef(tree, est, ids, frac=0.3, backend="pallas",
+                         interpret=True)
+    ax = ops.fed_dp_secure_apply(tree, masks=tree, weights=w, backend="xla")
+    ap = ops.fed_dp_secure_apply(tree, masks=tree, weights=w,
+                                 backend="pallas", interpret=True)
+    for key in tree:
+        np.testing.assert_allclose(np.asarray(cx[key]), np.asarray(cp[key]),
+                                   rtol=0, atol=2e-6)
+        np.testing.assert_allclose(np.asarray(sx[key]), np.asarray(sp[key]),
+                                   rtol=0, atol=2e-5)
+        np.testing.assert_array_equal(np.asarray(tx[0][key]),
+                                      np.asarray(tp[0][key]))
+        np.testing.assert_array_equal(np.asarray(tx[1][key]),
+                                      np.asarray(tp[1][key]))
+        np.testing.assert_array_equal(np.asarray(ax[key]),
+                                      np.asarray(ap[key]))
+    with pytest.raises(ValueError, match="kernel backend"):
+        ops.fed_weighted_combine(tree, w, backend="mlir")
+
+
+def test_fed_engine_backend_parity_end_to_end():
+    """xla- and pallas-backend vmap engines walk the same trajectory
+    (<=1e-5) on a small federation, secure transform included — and the
+    pallas graph still compiles exactly once (fixed-K contract)."""
+    from benchmarks.bench_scenarios import base_spec
+    from repro.api import (Federation, build_corpus, max_param_dev,
+                           spec_replace)
+    base = base_spec(vocab=120, topics=4, hidden=16, num_clients=3,
+                     docs_per_client=18, batch=8, lr=2e-3, seed=0,
+                     rounds=2)
+    syn = build_corpus(base)
+    for overrides in ({}, {"transforms.names": ("secure",)}):
+        engines = {}
+        for kb in ("xla", "pallas"):
+            spec = spec_replace(base, dict(
+                overrides, **{"execution.exec_mode": "vmap",
+                              "execution.kernel_backend": kb}))
+            eng = Federation.from_spec(spec, corpus=syn).engine
+            for r in range(2):
+                eng.round(seed=7 + r)
+            engines[kb] = eng
+        dev = max_param_dev(engines["xla"].params, engines["pallas"].params)
+        assert dev <= 1e-5, (overrides, dev)
+        assert sum(engines["pallas"].trace_counts.values()) == 1
+
+
 def test_topic_decoder_matches_prodlda_loss(rng):
     """The fused kernel computes exactly ProdLDA's reconstruction term."""
     from repro.configs import get_config

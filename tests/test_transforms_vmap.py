@@ -147,7 +147,7 @@ def test_transform_order_preserved_and_composed():
     _run_both(fed, RoundConfig(transforms=("topk", "dp")))
     built = build_transforms(("topk", "dp"), fed)
     assert [n for n, _ in built] == ["topk", "dp"]
-    assert set(TRANSFORMS) == {"dp", "topk", "secure"}
+    assert set(TRANSFORMS) == {"dp", "topk", "secure", "precision"}
 
 
 # ---------------------------------------------------------------------------

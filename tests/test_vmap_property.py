@@ -9,6 +9,7 @@ DESIGN.md §4 for the padding/masking correctness argument).
 ``hypothesis`` is an optional test extra (``pip install -e .[test]``);
 this module skips wholesale without it, like the other property suites.
 """
+import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip(
@@ -16,7 +17,11 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 
+import jax.numpy as jnp  # noqa: E402
+
+from repro.api.spec import FederationSpec, spec_replace  # noqa: E402
 from repro.configs.base import FederatedConfig, RoundConfig  # noqa: E402
+from repro.kernels import ops as kops  # noqa: E402
 # sibling test module (pytest's prepend import mode puts tests/ on the path)
 from test_vmap_equivalence import (_assert_trajectories_match,  # noqa: E402
                                    _make_setup)
@@ -56,3 +61,63 @@ def test_vmap_matches_loop_property(fc):
     _assert_trajectories_match(loss, loss_sum, init, clients, fed,
                                RoundConfig(**rc_kwargs), batch_size=32,
                                rounds=3, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# precision("bf16") transform properties (PR 7)
+# ---------------------------------------------------------------------------
+@st.composite
+def bf16_combine_cases(draw):
+    k = draw(st.integers(1, 6))
+    d = draw(st.integers(1, 300))
+    seed = draw(st.integers(0, 2 ** 16))
+    scale = draw(st.sampled_from([1e-3, 1.0, 1e3]))
+    n_zero = draw(st.integers(0, k - 1)) if k > 1 else 0
+    backend = draw(st.sampled_from(kops.KERNEL_BACKENDS))
+    return k, d, seed, scale, n_zero, backend
+
+
+@settings(max_examples=8, deadline=None)
+@given(bf16_combine_cases())
+def test_bf16_combine_error_bound_property(case):
+    """precision('bf16') is a wire format, not an accuracy cliff: the
+    Eq. (2) combine is a convex combination of the cohort rows, so
+    casting messages to bf16 moves the result by at most the worst
+    per-element rounding error, ~2^-9 * max|x|.  Asserted at the
+    doubled 2^-8 * max|x| bound (+ fp32 accumulation slack) on BOTH
+    kernel backends, with zero-weight padded rows in the draw."""
+    k, d, seed, scale, n_zero, backend = case
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.standard_normal((k, d)) * scale, jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 4.0, size=k), jnp.float32)
+    if n_zero:
+        w = w.at[:n_zero].set(0.0)
+    exact = kops.fed_weighted_combine({"g": x}, w, backend=backend)["g"]
+    cast = x.astype(jnp.bfloat16).astype(jnp.float32)
+    approx = kops.fed_weighted_combine({"g": cast}, w, backend=backend)["g"]
+    bound = 2.0 ** -8 * float(jnp.max(jnp.abs(x))) + 1e-7
+    assert float(jnp.max(jnp.abs(approx - exact))) <= bound
+
+
+@st.composite
+def secure_bf16_name_tuples(draw):
+    extras = draw(st.lists(st.sampled_from(["dp", "topk"]), unique=True,
+                           max_size=2))
+    return tuple(draw(st.permutations(["secure", "precision"] + extras)))
+
+
+@settings(max_examples=8, deadline=None)
+@given(secure_bf16_name_tuples())
+def test_secure_bf16_refused_property(names):
+    """secure x precision must be refused at spec construction for EVERY
+    transform-name ordering/combination: pairwise masks cancel bitwise
+    only on the fp32 dyadic grid, so bf16 messages under secure
+    aggregation would be a silent privacy downgrade, never a tolerable
+    approximation."""
+    ov = {"transforms.names": names, "transforms.precision": "bf16"}
+    if "dp" in names:
+        ov["transforms.dp_noise_multiplier"] = 0.5
+    if "topk" in names:
+        ov["transforms.compression_topk"] = 0.25
+    with pytest.raises(ValueError, match="fp32 dyadic grid"):
+        spec_replace(FederationSpec(), ov)
