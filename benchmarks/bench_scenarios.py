@@ -43,12 +43,36 @@ mask-cancellation invariant with the client-axis sum computed INSIDE
 the Pallas combine kernel (block-tiled accumulation order) — also
 bitwise 0.0 by the dyadic-grid construction.
 
-JSON layout: {"setup": {...}, "straggler_over_sync_vmap": float,
-"secure_mask_sum_abs": float, "secure_mask_sum_abs_pallas": float,
-"results": [{"scenario", "partition", "kernel_backend",
+Cells whose spec sets ``execution.mesh`` (the ``mesh-*`` registry
+scenarios) run the SAME fused graphs with the stacked ``(K, ...)``
+cohort, the ``(L, ...)`` transform state and the straggler ring
+row-sharded over a ``("data",)``-axis device mesh.  For those the
+third run is instead the SAME spec unsharded (``execution.mesh =
+None``, same kernel backend) — ``backend_param_dev`` /
+``backend_loss_dev`` become the sharded-vs-unsharded parity numbers
+(the mesh branch takes precedence over the pallas branch; pallas
+backend parity is already covered by the ``pallas-*`` cells) and
+``shard_over_single_vmap`` records the unsharded/sharded wall-clock
+ratio.  Mesh cells need mesh-size-many visible devices: when the host
+has fewer the cell is KEPT in the payload as a ``skipped`` record with
+the reason (so the gate's strict scenario membership still holds) and
+no numbers.  ``secure_mask_sum_abs_mesh`` re-probes the
+mask-cancellation invariant through the SHARDED combine (per-device
+partial sums + a cross-device ``psum``, both backends) — also bitwise
+0.0: the dyadic grid makes every per-device partial an exact grid
+integer, so the ≤N-term psum is exact (DESIGN.md).  Emitted only when
+≥2 devices are visible.
+
+JSON layout: {"setup": {..., "device_count"},
+"straggler_over_sync_vmap": float, "secure_mask_sum_abs": float,
+"secure_mask_sum_abs_pallas": float, ("secure_mask_sum_abs_mesh"
+with >= 2 devices), "results": [{"scenario", "partition",
+"kernel_backend", "device_count", "mesh_shape",
 "loop_s_per_round", "vmap_s_per_round", "speedup", "max_param_dev",
 "vmap_traces", "final_loss", ("backend_param_dev",
-"backend_loss_dev" on pallas cells), ...}]}.
+"backend_loss_dev" on pallas/mesh cells),
+("shard_over_single_vmap" on mesh cells),
+("skipped" on mesh cells the host cannot run), ...}]}.
 """
 from __future__ import annotations
 
@@ -84,7 +108,8 @@ def base_spec(*, vocab, topics, hidden, num_clients, docs_per_client,
 
 
 def secure_mask_cancellation(num_clients: int, seed: int = 0,
-                             backend: str = "xla") -> float:
+                             backend: str = "xla",
+                             mesh_data: int = 0) -> float:
     """Max |sum over clients| of the secure transform's stacked pairwise
     masks — bitwise 0.0 by construction (``core/transforms.py``); any
     other value means the privacy invariant broke.  Probed on a small
@@ -93,14 +118,29 @@ def secure_mask_cancellation(num_clients: int, seed: int = 0,
     ``backend="pallas"`` computes the client-axis sum INSIDE the Pallas
     combine kernel (``fed_weighted_sum``, unit coefficients) — the
     block-tiled accumulation order must preserve the cancellation too,
-    which the dyadic grid guarantees for ANY summation order."""
+    which the dyadic grid guarantees for ANY summation order.
+
+    ``mesh_data > 0`` computes the sum through the SHARDED combine
+    (``num_clients`` must divide it evenly): each device reduces its
+    row shard to a partial sum, then a cross-device ``psum`` combines
+    the partials.  Every per-device partial is an exact dyadic-grid
+    integer, so the ≤N-term psum is exact too — the cancellation must
+    stay bitwise under sharding, for either kernel backend."""
     tmpl = {"w": jnp.zeros((13, 7), jnp.float32),
             "b": jnp.zeros((11,), jnp.float32)}
     stack = pairwise_mask_stack(jax.random.PRNGKey(seed), tmpl, num_clients)
-    if backend == "pallas":
+    mesh = None
+    if mesh_data:
+        from repro.parallel import sharding
+        if num_clients % mesh_data:
+            raise ValueError(f"mesh probe needs num_clients divisible by "
+                             f"mesh_data, got {num_clients} % {mesh_data}")
+        mesh = sharding.fed_mesh(mesh_data)
+    if backend == "pallas" or mesh is not None:
         from repro.kernels import ops as kops
         total = kops.fed_weighted_sum(
-            stack, jnp.ones((num_clients,), jnp.float32), backend="pallas")
+            stack, jnp.ones((num_clients,), jnp.float32), backend=backend,
+            mesh=mesh)
     else:
         total = jax.tree_util.tree_map(lambda l: jnp.sum(l, axis=0), stack)
     return max(float(np.abs(np.asarray(leaf)).max())
@@ -142,9 +182,28 @@ def run(out_path="experiments/bench_scenarios.json", *, vocab=1000,
                              "not silently shrink the sweep")
         names = tuple(n for n in BENCH_SCENARIOS if n in scenarios)
 
+    dev_count = jax.device_count()
     results = []
     for name in names:
         spec = scenario_spec(name, base)
+        mesh_n = (spec.execution.mesh.data
+                  if spec.execution.mesh is not None else 0)
+        mesh_shape = {"data": mesh_n} if mesh_n else None
+        if mesh_n > dev_count:
+            # kept in the payload (strict scenario membership in the CI
+            # gate) but carrying no numbers — the reason is recorded so
+            # the skip is auditable, never silent
+            reason = (f"needs {mesh_n} devices, {dev_count} visible — "
+                      "export XLA_FLAGS=--xla_force_host_platform_"
+                      f"device_count={mesh_n} before importing jax")
+            results.append({"scenario": name,
+                            "partition": spec.data.partition.to_string(),
+                            "kernel_backend": spec.execution.kernel_backend,
+                            "device_count": dev_count,
+                            "mesh_shape": mesh_shape,
+                            "skipped": reason})
+            print(f"{name:18s} SKIPPED: {reason}")
+            continue
         loop = Federation.from_spec(
             spec_replace(spec, {"execution.exec_mode": "loop"}),
             corpus=syn).engine
@@ -159,6 +218,8 @@ def run(out_path="experiments/bench_scenarios.json", *, vocab=1000,
         rec = {"scenario": name,
                "partition": spec.data.partition.to_string(),
                "kernel_backend": spec.execution.kernel_backend,
+               "device_count": dev_count,
+               "mesh_shape": mesh_shape,
                "loop_s_per_round": t_loop,
                "vmap_s_per_round": t_vmap,
                "speedup": t_loop / max(t_vmap, 1e-12),
@@ -169,7 +230,24 @@ def run(out_path="experiments/bench_scenarios.json", *, vocab=1000,
                "client_docs_min": min(c.num_docs for c in clients),
                "client_docs_max": max(c.num_docs for c in clients),
                "final_loss": loop.history[-1]["loss"]}
-        if spec.execution.kernel_backend == "pallas":
+        if mesh_n:
+            # third run: the SAME spec unsharded (same kernel backend)
+            # — backend_param_dev/backend_loss_dev isolate the mesh
+            # sharding itself, and the wall-clock ratio is the
+            # shard_over_single_vmap headline (the pallas branch below
+            # yields: pallas backend parity is the pallas-* cells' job)
+            vu = Federation.from_spec(
+                spec_replace(spec, {"execution.exec_mode": "vmap",
+                                    "execution.mesh": None}),
+                corpus=syn).engine
+            t_unsharded = _time_rounds(vu, warmup=warmup, rounds=rounds,
+                                       seed=seed)
+            rec["backend_param_dev"] = _max_dev(vu.params, vm.params)
+            rec["backend_loss_dev"] = abs(vu.history[-1]["loss"]
+                                          - vm.history[-1]["loss"])
+            rec["shard_over_single_vmap"] = (t_unsharded
+                                             / max(t_vmap, 1e-12))
+        elif spec.execution.kernel_backend == "pallas":
             # third run: same vmap spec on the XLA reference backend —
             # the DIRECT pallas-vs-xla parity numbers (the loop run
             # above differs by exec path as well as backend)
@@ -182,8 +260,12 @@ def run(out_path="experiments/bench_scenarios.json", *, vocab=1000,
             rec["backend_loss_dev"] = abs(vx.history[-1]["loss"]
                                           - vm.history[-1]["loss"])
         results.append(rec)
-        extra = (f" xla-vs-pallas={rec['backend_param_dev']:.1e}"
-                 if "backend_param_dev" in rec else "")
+        extra = ""
+        if "backend_param_dev" in rec:
+            tag = ("sharded-vs-unsharded" if mesh_n else "xla-vs-pallas")
+            extra = f" {tag}={rec['backend_param_dev']:.1e}"
+        if "shard_over_single_vmap" in rec:
+            extra += f" shardx={rec['shard_over_single_vmap']:4.2f}"
         print(f"{name:18s} loop={t_loop * 1e3:8.1f}ms/round "
               f"vmap={t_vmap * 1e3:8.1f}ms/round "
               f"speedup={rec['speedup']:5.1f}x "
@@ -216,17 +298,33 @@ def run(out_path="experiments/bench_scenarios.json", *, vocab=1000,
                       for k in sorted(probe_ks))
     print(f"secure-mask cancellation (pallas combine): "
           f"{mask_sum_pl!r} (must be exactly 0.0)")
+    # ... and through the SHARDED combine: per-device partial sums +
+    # cross-device psum, both backends, on the largest power-of-two
+    # device mesh the host can build (probe Ks are mesh multiples so
+    # the rows shard evenly) — only meaningful with >= 2 devices
+    mask_sum_mesh = None
+    if dev_count >= 2:
+        mesh_d = 1 << (dev_count.bit_length() - 1)
+        mask_sum_mesh = max(
+            secure_mask_cancellation(mesh_d * m, seed=seed, backend=bk,
+                                     mesh_data=mesh_d)
+            for bk in ("xla", "pallas") for m in (1, 2, 3))
+        print(f"secure-mask cancellation (sharded combine, data={mesh_d}): "
+              f"{mask_sum_mesh!r} (must be exactly 0.0)")
 
     payload = {"setup": {"vocab": vocab, "topics": topics, "hidden": hidden,
                          "num_clients": num_clients,
                          "docs_per_client": docs_per_client, "batch": batch,
                          "lr": lr, "seed": seed, "warmup_rounds": warmup,
                          "timed_rounds": rounds,
-                         "backend": jax.default_backend()},
+                         "backend": jax.default_backend(),
+                         "device_count": dev_count},
                "straggler_over_sync_vmap": ratio,
                "secure_mask_sum_abs": mask_sum,
                "secure_mask_sum_abs_pallas": mask_sum_pl,
                "results": results}
+    if mask_sum_mesh is not None:
+        payload["secure_mask_sum_abs_mesh"] = mask_sum_mesh
     if out_path:
         os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
         with open(out_path, "w") as f:

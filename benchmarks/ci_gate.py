@@ -12,11 +12,23 @@ holds BOTH) and enforces a two-tier policy:
         transforms included);
       - ``backend_param_dev`` / ``backend_loss_dev >= 1e-5`` in any
         ``pallas-*`` scenario (the vmap run on the Pallas kernel
-        backend drifted from the SAME vmap run on the XLA reference);
+        backend drifted from the SAME vmap run on the XLA reference)
+        or any ``mesh-*`` scenario (the mesh-sharded vmap run drifted
+        from the SAME spec unsharded);
+      - a cell marked ``skipped`` whose recorded mesh size the host
+        could actually build (``setup.device_count`` large enough) —
+        a skip is only legitimate when the devices are truly absent;
+        legitimately-skipped mesh cells warn and keep baseline
+        membership satisfied (the host-mesh CI leg provides the real
+        coverage);
       - ``secure_mask_sum_abs != 0.0`` or
         ``secure_mask_sum_abs_pallas != 0.0`` (the bitwise secure-mask
         cancellation invariant, probed both through plain jnp summation
         and INSIDE the Pallas combine kernel's block-tiled accumulation);
+      - ``secure_mask_sum_abs_mesh != 0.0``, or the key missing from a
+        payload produced with >= 2 visible devices (the same invariant
+        through per-device partial sums + a cross-device psum — exact
+        because every partial is a dyadic-grid integer, DESIGN.md);
       - ``vmap_traces > 1`` for any scenario (the fixed-K retrace-free
         contract — a second trace means the fused path silently
         degenerated to per-cohort-size recompiles);
@@ -25,7 +37,9 @@ holds BOTH) and enforces a two-tier policy:
         ``kernels/ref.py``);
       - a scenario or kernel cell present in the baseline missing from
         the current payload (a silently-shrunk grid reads as "all
-        green").
+        green"); baseline ``mesh-*`` cells are exempt only on hosts
+        whose ``setup.device_count`` cannot build the recorded mesh —
+        the host-mesh CI leg still hard-requires them.
   * WARN ONLY (``::warning::`` annotations, exit 0) — timing trends.
     Shared CI runners are noisy, so these inform rather than block:
       - ``straggler_over_sync_vmap`` worsened beyond the allowed ratio
@@ -120,8 +134,19 @@ def gate(current: dict, baseline: dict, *,
     base = {r["scenario"]: r for r in baseline.get("results", [])}
 
     # ---- hard gates: correctness / privacy / retrace contract -----------
-    for name in base:
+    dev_count = current.get("setup", {}).get("device_count", 1)
+    for name, b in base.items():
         if name not in cur:
+            # baseline mesh cells are exempt ONLY on hosts that cannot
+            # build the recorded mesh (the 1-device smoke legs); the
+            # host-mesh CI leg, whose payload records enough devices,
+            # still hard-requires them
+            mesh_n = (b.get("mesh_shape") or {}).get("data", 0)
+            if mesh_n and mesh_n > dev_count:
+                _warn(f"baseline scenario {name!r} needs a "
+                      f"{mesh_n}-device mesh, current host has "
+                      f"{dev_count} — membership waived for this leg")
+                continue
             failures.append(f"scenario {name!r} present in baseline but "
                             "missing from the current payload")
     # the gate's cells ARE the named registry scenarios — a payload name
@@ -143,21 +168,40 @@ def gate(current: dict, baseline: dict, *,
                 "the named registry (repro.api.registry.SCENARIOS) — "
                 "bench cells must be registry scenarios")
     for name, r in cur.items():
+        if "skipped" in r:
+            # a mesh cell the host could not build: legitimate ONLY
+            # when the recorded mesh is larger than the visible device
+            # count — anything else is a silently-dropped cell
+            mesh_n = (r.get("mesh_shape") or {}).get("data", 0)
+            if mesh_n and mesh_n > dev_count:
+                _warn(f"{name}: skipped ({r['skipped']}) — the "
+                      "host-mesh CI leg provides the real coverage")
+            else:
+                failures.append(
+                    f"{name}: marked skipped ({r.get('skipped')!r}) but "
+                    f"the host had {dev_count} device(s) for a "
+                    f"mesh of {mesh_n or '?'} — a runnable cell must "
+                    "run")
+            continue
         dev = r.get("max_param_dev")
         if dev is None or not dev < dev_bound:
             failures.append(f"{name}: max_param_dev={dev!r} (bound "
                             f"{dev_bound:g}) — loop/vmap parity broke")
         # pallas-backend cells carry the DIRECT xla-vs-pallas vmap
-        # deviations; a pallas cell missing them means the bench
-        # silently stopped measuring the kernel backend
-        if r.get("kernel_backend") == "pallas":
+        # deviations, mesh cells the sharded-vs-unsharded ones; a cell
+        # missing them means the bench silently stopped measuring
+        is_mesh = bool(r.get("mesh_shape"))
+        if is_mesh or r.get("kernel_backend") == "pallas":
+            what = ("the mesh-sharded vmap run drifted from the same "
+                    "spec unsharded" if is_mesh else
+                    "the Pallas aggregation backend drifted from the "
+                    "XLA reference on the same vmap path")
             for key in ("backend_param_dev", "backend_loss_dev"):
                 bdev = r.get(key)
                 if bdev is None or not bdev < dev_bound:
                     failures.append(
                         f"{name}: {key}={bdev!r} (bound {dev_bound:g}) "
-                        "— the Pallas aggregation backend drifted from "
-                        "the XLA reference on the same vmap path")
+                        f"— {what}")
         traces = r.get("vmap_traces")
         if traces is not None and traces > 1:
             failures.append(f"{name}: vmap_traces={traces} — the fixed-K "
@@ -176,6 +220,25 @@ def gate(current: dict, baseline: dict, *,
                 f"secure_mask_sum_abs_pallas={mask_sum_pl!r} — the "
                 "in-kernel client-axis sum broke the bitwise secure-mask "
                 "cancellation (dyadic-grid invariant)")
+    # ... and through the SHARDED combine (per-device partials + psum):
+    # required whenever the producing host could build a >= 2-device
+    # mesh — a multi-device payload without the probe means the bench
+    # silently stopped checking the cross-device invariant
+    if "secure_mask_sum_abs_mesh" in current:
+        mask_sum_mesh = current["secure_mask_sum_abs_mesh"]
+        if mask_sum_mesh != 0.0:
+            failures.append(
+                f"secure_mask_sum_abs_mesh={mask_sum_mesh!r} — the "
+                "cross-device partial-sum + psum path broke the bitwise "
+                "secure-mask cancellation (every per-device partial is "
+                "an exact dyadic-grid integer, so the psum is exact; "
+                "DESIGN.md)")
+    elif current.get("setup", {}).get("device_count", 1) >= 2:
+        failures.append(
+            "secure_mask_sum_abs_mesh missing from a payload produced "
+            f"with {current['setup']['device_count']} visible devices — "
+            "the sharded-combine cancellation probe must run whenever "
+            "the host can build a mesh")
 
     # ---- warn-only trend gates: timings -------------------------------
     ratio, base_ratio = (current.get("straggler_over_sync_vmap"),

@@ -106,6 +106,29 @@ def main() -> None:
                  f"straggler/sync={ratio:.2f}x,"
                  f"max_dev={max(devs):.1e}"))
 
+    # mesh-sharded cohort execution (quick scale): sharded-vs-unsharded
+    # parity + wall-clock ratio on whatever device mesh the host can
+    # build — a 1-device host reports the cell as skipped rather than
+    # dropping the row
+    import jax
+    if jax.device_count() >= 2:
+        t0 = time.time()
+        mres = bench_scenarios.run("experiments/bench_mesh_quick.json",
+                                   vocab=200, topics=5, hidden=32,
+                                   num_clients=4, docs_per_client=40,
+                                   batch=16, rounds=3,
+                                   scenarios=("mesh-sync",))
+        dt = (time.time() - t0) * 1e6
+        cell = mres["results"][0]
+        rows.append(("mesh_sharded_quick", dt,
+                     f"mesh={cell['mesh_shape']},"
+                     f"sharded_dev={cell['backend_param_dev']:.1e},"
+                     f"shard/vmap={cell['shard_over_single_vmap']:.2f}x"))
+    else:
+        rows.append(("mesh_sharded_quick", 0.0,
+                     "skipped=1_device_host (export XLA_FLAGS="
+                     "--xla_force_host_platform_device_count=8)"))
+
     # roofline artifacts (built by the dry-run, reported by roofline.py)
     from benchmarks import roofline
     reports = roofline.load_reports()

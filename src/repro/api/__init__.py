@@ -15,6 +15,6 @@ from repro.api.registry import (  # noqa: F401
     BENCH_SCENARIOS, SCENARIOS, register_scenario, scenario_names,
     scenario_spec)
 from repro.api.spec import (  # noqa: F401
-    SPEC_VERSION, DataSpec, ExecutionSpec, FederationSpec, ModelSpec,
-    PartitionSpec, ScheduleSpec, ServerOptSpec, TransformsSpec,
-    parse_int_tuple, spec_replace)
+    SPEC_VERSION, DataSpec, ExecutionSpec, FederationSpec, MeshSpec,
+    ModelSpec, PartitionSpec, ScheduleSpec, ServerOptSpec,
+    TransformsSpec, parse_int_tuple, spec_replace)

@@ -322,6 +322,16 @@ class Federation:
         """Rounds completed so far (== the next round's index)."""
         return self.engine._round
 
+    @property
+    def mesh_shape(self) -> Optional[Dict[str, int]]:
+        """The engine's RESOLVED device-mesh axes (``{"data": N}``), or
+        None when running unsharded — what ``execution.mesh`` actually
+        compiled to (loop mode: always None, the mesh knob is inert
+        there).  Benchmarks record this per cell next to
+        ``device_count``."""
+        mesh = getattr(self.engine, "_mesh", None)
+        return dict(mesh.shape) if mesh is not None else None
+
     # -- stepping ---------------------------------------------------------
     def _round_seed(self, round_idx: int) -> int:
         # the fixed schedule FederationEngine.fit has always used —

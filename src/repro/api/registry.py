@@ -58,6 +58,27 @@ def _dropout_join(base: FederationSpec) -> Dict[str, Any]:
             + (max(r - 1, 1),)}
 
 
+def _mesh_overrides(extra: Optional[Mapping[str, Any]] = None, *,
+                    axis: int = 2) -> Overrides:
+    """Mesh scenario knobs sized to the base federation, like
+    :func:`_dropout_join`: the data axis is the largest divisor of both
+    K (cohort width) and L (client count) not exceeding ``axis``, so
+    the scenario rebases onto any caller-sized federation without
+    tripping the never-silently-repartitioned refusal (the resolved
+    size is recorded in the spec, and per cell by the bench)."""
+    def overrides(base: FederationSpec) -> Dict[str, Any]:
+        L = base.data.num_clients
+        k = min(base.schedule.clients_per_round or L, L)
+        d = max(axis, 1)
+        while d > 1 and (k % d or L % d):
+            d -= 1
+        ov = dict(extra or {})
+        ov.update({"execution.exec_mode": "vmap",
+                   "execution.mesh": {"data": d}})
+        return ov
+    return overrides
+
+
 SCENARIOS: Dict[str, Overrides] = {
     # the paper regime: all defaults (topic partition, K = L, E = 1,
     # synchronous, FedAvg(server_lr=1) == Eq. (3) server SGD)
@@ -96,6 +117,20 @@ SCENARIOS: Dict[str, Overrides] = {
     "pallas-secure": {"transforms.names": ("secure",),
                       "execution.exec_mode": "vmap",
                       "execution.kernel_backend": "pallas"},
+    # ---- mesh-sharded cohort execution (execution.mesh) ----------------
+    # the same fused graphs with the stacked (K, ...) cohort, the
+    # (L, ...) transform state and the straggler ring row-sharded over a
+    # ("data",)-axis device mesh; the unsharded vmap run the bench pairs
+    # each cell with is the parity reference (backend_param_dev), and
+    # the loop run stays the host reference.  Cells need
+    # mesh-size-many visible devices (the CI host-mesh leg forces 8 CPU
+    # devices; elsewhere the bench skips them with a recorded reason).
+    "mesh-sync": _mesh_overrides(),
+    "mesh-straggler": _mesh_overrides(_STRAGGLER_KNOBS),
+    "mesh-topk": _mesh_overrides({"transforms.names": ("topk",),
+                                  "transforms.compression_topk": 0.25}),
+    "mesh-pallas": _mesh_overrides(
+        {"execution.kernel_backend": "pallas"}),
     # ---- fused-path presets -------------------------------------------
     # the in-graph straggler ring buffer (DESIGN.md §4)
     "straggler_ring": {**_STRAGGLER_KNOBS,
@@ -126,7 +161,8 @@ BENCH_SCENARIOS = ("sync", "straggler", "straggler-heavy",
                    "dropout-join", "dp-transform", "topk-transform",
                    "secure-transform", "dp-straggler",
                    "precision-transform", "pallas-aggregate",
-                   "pallas-topk", "pallas-secure")
+                   "pallas-topk", "pallas-secure", "mesh-sync",
+                   "mesh-straggler", "mesh-topk", "mesh-pallas")
 assert set(BENCH_SCENARIOS) <= set(SCENARIOS)
 
 

@@ -482,6 +482,51 @@ class ServerOptSpec:
 
 
 @dataclass(frozen=True)
+class MeshSpec:
+    """``execution.mesh`` sub-section: the device-mesh axis shape.
+
+    ``{"data": N}`` shards the fused vmap graphs' cohort axis — the
+    stacked ``(K, ...)`` batches/deltas/weights, the ``(L, ...)`` top-k
+    error-memory tree and the straggler ring — over the first ``N``
+    local devices (a ``("data",)`` mesh built by
+    :func:`repro.parallel.sharding.fed_mesh`).  ``None`` (the field
+    default on :class:`ExecutionSpec`) is today's single-device
+    behavior; ``data=1`` builds a real one-device mesh, i.e. the
+    sharded code path without cross-device traffic.  Serializes as the
+    ``{"data": N}`` mapping; ``from_value`` also accepts the CLI's
+    ``"data=N"`` string form.
+    """
+    data: int = 1
+
+    @classmethod
+    def from_value(cls, v, where: str = "execution.mesh"):
+        if v is None or isinstance(v, cls):
+            return v
+        if isinstance(v, str):
+            axis, sep, size = v.partition("=")
+            if axis.strip() != "data" or not sep:
+                raise ValueError(f"{where} string form must be 'data=N', "
+                                 f"got {v!r}")
+            try:
+                return cls(data=int(size))
+            except ValueError:
+                raise ValueError(f"{where}: axis size {size!r} is not an "
+                                 "integer") from None
+        if isinstance(v, Mapping):
+            unknown = sorted(set(v) - {"data"})
+            if unknown:
+                raise ValueError(f"unknown key(s) {unknown} in {where}; "
+                                 "known: ['data']")
+            return cls(data=v.get("data", 1))
+        raise ValueError(
+            f"{where} must be null, a {{data: N}} mapping, or the "
+            f"'data=N' string form, got {type(v).__name__}")
+
+    def _validate(self) -> None:
+        _check_int(self.data, "execution.mesh.data", 1)
+
+
+@dataclass(frozen=True)
 class ExecutionSpec:
     """``execution`` section: how (and how long) the spec runs."""
     exec_mode: str = "loop"
@@ -496,6 +541,12 @@ class ExecutionSpec:
     # pad_cohorts, accepted-but-inert under exec_mode="loop" — the host
     # loop is itself the reference both vmap backends are held to.
     kernel_backend: str = "xla"
+    # device-mesh shape for the fused vmap graphs (None = single
+    # device).  Like kernel_backend, accepted-but-inert under
+    # exec_mode="loop" — the host loop stays the unsharded reference
+    # the sharded graphs are held to (so a cell's loop run never needs
+    # the mesh's devices).
+    mesh: Optional[MeshSpec] = None
 
     def _validate(self) -> None:
         _require(self.exec_mode in EXEC_MODES,
@@ -512,6 +563,11 @@ class ExecutionSpec:
         _check_float(self.rel_tol, "execution.rel_tol", 0.0)
         # feeds numpy RNGs (scheduler, straggler draws): non-negative
         _check_int(self.seed, "execution.seed", 0)
+        _require(self.mesh is None or isinstance(self.mesh, MeshSpec),
+                 "execution.mesh must be null or a MeshSpec (or the "
+                 "mapping/string forms accepted by from_dict)")
+        if self.mesh is not None:
+            self.mesh._validate()
 
 
 _SECTIONS = {
@@ -597,6 +653,24 @@ class FederationSpec:
                      "num_clients, no client join/leave): pairwise "
                      "masks only cancel when every client's message "
                      "joins the same combine")
+        mesh = self.execution.mesh
+        if mesh is not None:
+            # cohorts are NEVER silently repartitioned: an indivisible
+            # mesh is refused at construction time, whatever exec_mode
+            # (the mesh is part of the scenario's declared shape)
+            L = self.data.num_clients
+            k = min(self.schedule.clients_per_round or L, L)
+            _require(k % mesh.data == 0,
+                     f"execution.mesh data={mesh.data} does not divide "
+                     f"the cohort width K={k} (schedule.clients_per_round"
+                     f" or data.num_clients) — cohorts are never "
+                     "silently repartitioned; resize K or the mesh")
+            _require(L % mesh.data == 0,
+                     f"execution.mesh data={mesh.data} does not divide "
+                     f"the registered-client count L={L} "
+                     "(data.num_clients) — the (L, ...) per-client state "
+                     "trees shard over the same axis; resize L or the "
+                     "mesh")
 
     # -- resolved (cross-section) defaults --------------------------------
     @property
@@ -688,7 +762,9 @@ class FederationSpec:
             client_join_round=s.client_join_round,
             client_leave_round=s.client_leave_round,
             partition=self.data.partition.to_string(),
-            kernel_backend=self.execution.kernel_backend)
+            kernel_backend=self.execution.kernel_backend,
+            mesh_data=self.execution.mesh.data
+            if self.execution.mesh is not None else 0)
 
     # -- dict / JSON round trip -------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -776,6 +852,8 @@ def _section_from_dict(cls, d, where: str):
     for fname, v in d.items():
         if cls is DataSpec and fname == "partition":
             v = PartitionSpec.from_value(v)
+        elif cls is ExecutionSpec and fname == "mesh":
+            v = MeshSpec.from_value(v)
         elif isinstance(v, list):
             v = tuple(v)
         kw[fname] = v
@@ -819,14 +897,34 @@ def spec_replace(spec: FederationSpec,
         cls = _SECTIONS[sect]
         fields = {f.name for f in dataclasses.fields(cls)}
         clean = {}
+        mesh_updates: Dict[str, Any] = {}
         for fname, v in updates.items():
+            if cls is ExecutionSpec and fname.startswith("mesh."):
+                # nested dotted path: execution.mesh.<field>
+                sub = fname[len("mesh."):]
+                mesh_fields = {f.name for f in dataclasses.fields(MeshSpec)}
+                if sub not in mesh_fields:
+                    raise ValueError(
+                        f"unknown key {sub!r} in spec section "
+                        f"'execution.mesh'; known: {sorted(mesh_fields)}")
+                mesh_updates[sub] = v
+                continue
             if fname not in fields:
                 raise ValueError(f"unknown key {fname!r} in spec section "
                                  f"{sect!r}; known: {sorted(fields)}")
             if cls is DataSpec and fname == "partition":
                 v = PartitionSpec.from_value(v)
+            elif cls is ExecutionSpec and fname == "mesh":
+                v = MeshSpec.from_value(v)
             elif isinstance(v, list):
                 v = tuple(v)
             clean[fname] = v
+        if mesh_updates:
+            # build on the whole-mesh override if one rode along, else
+            # on the spec's current mesh; a nested update on a meshless
+            # spec creates the section (MeshSpec defaults + updates)
+            base_mesh = clean.get("mesh", getattr(spec, sect).mesh)
+            clean["mesh"] = MeshSpec(**mesh_updates) if base_mesh is None \
+                else dataclasses.replace(base_mesh, **mesh_updates)
         kw[sect] = dataclasses.replace(getattr(spec, sect), **clean)
     return dataclasses.replace(spec, **kw)

@@ -376,6 +376,15 @@ class RoundConfig:
     # this is a vmap-path knob: loop mode always runs host XLA and IS
     # the reference both vmap backends are held to (<=1e-5, tested).
     kernel_backend: str = "xla"
+    # device-mesh width for the fused vmap graphs (FederationSpec's
+    # execution.mesh.data): 0 = unsharded single-device execution; N >= 1
+    # builds a ("data",)-axis mesh over the first N local devices
+    # (parallel/sharding.py fed_mesh) and shards the stacked (K, ...)
+    # cohort, the (L, ...) per-client state trees and the straggler ring
+    # over it.  K and L must be divisible by N (refused, never silently
+    # repartitioned).  Another vmap-path knob: loop mode stays the
+    # unsharded host reference the sharded graphs are held to.
+    mesh_data: int = 0
 
 
 @dataclass(frozen=True)

@@ -83,6 +83,7 @@ from repro.data.federated_split import (round_minibatches, sample_minibatch,
                                         stacked_round_batches)
 from repro.kernels import ops as kops
 from repro.optim.optimizers import global_norm
+from repro.parallel import sharding
 
 Pytree = Any
 
@@ -516,6 +517,24 @@ class FederationEngine:
         # reuses ONE compiled graph (trace_counts pins this)
         self._pad = (self.exec_mode == "vmap" and self.rc.pad_cohorts
                      and len(self.clients) > 0)
+        # -- device mesh (RoundConfig.mesh_data / execution.mesh) -------
+        # a ("data",)-axis mesh sharding the stacked (K, ...) cohort,
+        # the (L, ...) transform state and the (C, ...) straggler ring;
+        # None = unsharded.  Like kernel_backend, accepted-but-inert
+        # under loop mode — the host loop stays the unsharded reference.
+        self._mesh = None
+        mesh_data = int(getattr(self.rc, "mesh_data", 0) or 0)
+        if mesh_data and self.exec_mode == "vmap" and len(self.clients):
+            k_fix = self.scheduler.clients_per_round
+            n_state = len(self.clients)
+            if k_fix % mesh_data or n_state % mesh_data:
+                raise ValueError(
+                    f"execution.mesh data={mesh_data} does not divide the "
+                    f"cohort width K={k_fix} and the client count "
+                    f"L={n_state} — cohorts and per-client state are "
+                    "never silently repartitioned; resize the federation "
+                    "or the mesh")
+            self._mesh = sharding.fed_mesh(mesh_data)
         self.pending: List[PendingUpdate] = []   # loop-mode reference
         self._ring = None                        # vmap-mode device buffer
 
@@ -693,6 +712,21 @@ class FederationEngine:
         # static at trace time: selects the aggregation kernel backend
         # ("xla" keeps every expression below byte-identical to pre-PR-7)
         kb = self.kernel_backend
+        # static at trace time: the ("data",)-axis device mesh (or None).
+        # Sharded runs keep the SAME graphs below — inputs arrive with
+        # the K/L/C axes row-sharded (in_shardings), the per-row stages
+        # partition by GSPMD propagation, and the cross-row reductions
+        # (Eq. (2) combine, ring delivery) run as kernels/ops.py
+        # shard_map islands of per-device partials + one psum.
+        mesh = self._mesh
+        if mesh is not None:
+            row_ns = sharding.shardings_for(mesh, sharding.P("data"))
+
+            def pin_rows(tree):
+                return tmap(lambda x: jax.lax.with_sharding_constraint(
+                    x, row_ns), tree)
+        else:
+            pin_rows = lambda tree: tree  # noqa: E731
 
         def transform_stage(msgs, tstate, round_key, ids, w):
             """Stage 3 INSIDE the fused graph: every registry transform
@@ -704,7 +738,8 @@ class FederationEngine:
             if transforms:
                 ctx = _StackedCtx(
                     round_key=round_key, client_ids=ids, valid=w > 0.0,
-                    weights=w, num_clients=nmask, kernel_backend=kb)
+                    weights=w, num_clients=nmask, kernel_backend=kb,
+                    mesh=mesh)
                 tstate = dict(tstate)
                 for name, t in transforms:
                     msgs, st = t.stacked(msgs, ctx, tstate.get(name))
@@ -731,9 +766,10 @@ class FederationEngine:
             momentum must not decay on a no-arrival round."""
             counts["fused_sync"] = counts.get("fused_sync", 0) + 1
             msgs, losses = stacked_messages(params, stacked, e_counts)
+            msgs = pin_rows(msgs)
             w = weights.astype(jnp.float32)
             msgs, tstate = transform_stage(msgs, tstate, round_key, ids, w)
-            bar = kops.fed_weighted_combine(msgs, w, backend=kb)
+            bar = kops.fed_weighted_combine(msgs, w, backend=kb, mesh=mesh)
             upd_p, upd_s = server_opt.apply(params, bar, server_state,
                                             round_idx)
             has = w.sum() > 0.0
@@ -787,7 +823,20 @@ class FederationEngine:
                         (fresh_leaf.shape[0], -1)).astype(jnp.float32)
                 return (acc / denom).reshape(ring_leaf.shape[1:])
 
-            if fresh is None:
+            if mesh is not None:
+                # cross-device ring delivery: the (C, ...) slots and the
+                # (K, ...) fresh stack are both row-sharded, so each
+                # numerator is per-device backend partials + one psum
+                # (kernels/ops.py), then the replicated division
+                acc = kops.fed_weighted_sum(ring["delta"], ring_coef,
+                                            backend=kb, mesh=mesh)
+                if fresh is not None:
+                    acc = tmap(
+                        lambda a, b: a + b, acc,
+                        kops.fed_weighted_sum(fresh[0], fresh_w,
+                                              backend=kb, mesh=mesh))
+                bar = tmap(lambda a: a / denom, acc)
+            elif fresh is None:
                 bar = tmap(combine, ring["delta"])
             else:
                 bar = tmap(combine, ring["delta"], fresh[0])
@@ -817,6 +866,7 @@ class FederationEngine:
             all-padded cohort degenerates to a deliver-only round."""
             counts["fused_stale"] = counts.get("fused_stale", 0) + 1
             msgs, losses = stacked_messages(params, stacked, e_counts)
+            msgs = pin_rows(msgs)
             w = weights.astype(jnp.float32)
             msgs, tstate = transform_stage(msgs, tstate, round_key, ids, w)
             new_params, new_state, ring, rel, n_due, _ = ring_deliver(
@@ -860,13 +910,39 @@ class FederationEngine:
         # buffers in place on accelerators; CPU ignores donation, skip
         # the warning
         dn = jax.default_backend() != "cpu"
-        self._fused_sync = jax.jit(fused_sync,
-                                   donate_argnums=(0, 1, 2) if dn else ())
-        self._fused_stale = jax.jit(fused_stale,
-                                    donate_argnums=(0, 1, 2, 3) if dn
-                                    else ())
-        self._deliver_only = jax.jit(deliver_only,
-                                     donate_argnums=(0, 1, 2) if dn else ())
+        if mesh is None:
+            self._fused_sync = jax.jit(
+                fused_sync, donate_argnums=(0, 1, 2) if dn else ())
+            self._fused_stale = jax.jit(
+                fused_stale, donate_argnums=(0, 1, 2, 3) if dn else ())
+            self._deliver_only = jax.jit(
+                deliver_only, donate_argnums=(0, 1, 2) if dn else ())
+            return
+        # sharded-jit: pytree-prefix shardings place every client-axis
+        # operand (stacked batches, weights/ids/delays, transform state,
+        # ring slots, per-client losses) row-first over "data" and keep
+        # params/server state replicated — one compile, no host-side
+        # resharding between rounds (outputs already carry the input
+        # shardings of the next call).
+        row = sharding.shardings_for(mesh, sharding.P("data"))
+        rep = sharding.shardings_for(mesh, sharding.P())
+        self._fused_sync = jax.jit(
+            fused_sync, donate_argnums=(0, 1, 2) if dn else (),
+            # (params, server_state, tstate, stacked, e_counts, weights,
+            #  ids, round_key, round_idx)
+            in_shardings=(rep, rep, row, row, row, row, row, rep, rep),
+            out_shardings=(rep, rep, row, row, rep))
+        self._fused_stale = jax.jit(
+            fused_stale, donate_argnums=(0, 1, 2, 3) if dn else (),
+            # (params, server_state, tstate, ring, stacked, e_counts,
+            #  weights, delays, ids, round_key, round_idx)
+            in_shardings=(rep, rep, row, row, row, row, row, row, row,
+                          rep, rep),
+            out_shardings=(rep, rep, row, row, row, rep, rep, rep))
+        self._deliver_only = jax.jit(
+            deliver_only, donate_argnums=(0, 1, 2) if dn else (),
+            in_shardings=(rep, rep, row, rep),
+            out_shardings=(rep, rep, row, rep, rep, rep))
 
     def _init_ring(self):
         """Fixed-capacity device ring buffer for in-flight deltas.
@@ -929,7 +1005,9 @@ class FederationEngine:
                 [self.clients[l].data for l in cohort],
                 [self.clients[l].num_docs for l in cohort], round_key,
                 cohort, batch_size=self.batch_size,
-                local_epochs=self._e_max, pad_to=k_fix)
+                local_epochs=self._e_max, pad_to=k_fix,
+                shard_multiple=self._mesh.shape["data"]
+                if self._mesh is not None else None)
         else:
             stacked, counts = self._zero_cohort(k_fix)
         e_counts = np.zeros((k_fix,), np.int32)

@@ -94,6 +94,12 @@ class StackedTransformCtx:
     weights: Any            # (K,) float32 Eq. (2) weights
     num_clients: int        # static: mask population / state row count
     kernel_backend: str = "xla"   # static: "xla" (reference) | "pallas"
+    # static: the engine's ("data",)-axis device mesh, or None.  Pallas
+    # branches hand it to kernels/ops.py so each device runs the kernel
+    # on its own cohort rows (shard_map island); the XLA branches need
+    # no threading — GSPMD partitions their row-parallel expressions
+    # along the already-sharded K axis by propagation.
+    mesh: Any = None
 
 
 @dataclass(frozen=True)
@@ -188,7 +194,7 @@ def _dp_stacked_pallas(msgs, ctx: StackedTransformCtx, clip: float,
         for i, l in enumerate(leaves)])
     return kops.fed_dp_secure_apply(msgs, noise=noise, clip_coef=coef,
                                     noise_scale=mult * clip,
-                                    backend="pallas")
+                                    backend="pallas", mesh=ctx.mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -222,7 +228,8 @@ def _topk_transform(fed: FederatedConfig) -> MessageTransform:
             # branch below, so both backends keep identical coordinates
             from repro.kernels import ops as kops
             sent, new_err = kops.fed_topk_ef(msgs, state, ids, frac=frac,
-                                             backend="pallas")
+                                             backend="pallas",
+                                             mesh=ctx.mesh)
         else:
             err = _tmap(lambda e: e[ids], state)
             # the SAME correct -> sparsify -> residual code the loop
@@ -355,7 +362,7 @@ def _secure_transform(fed: FederatedConfig) -> MessageTransform:
             from repro.kernels import ops as kops
             return kops.fed_dp_secure_apply(
                 msgs, masks=rows, weights=ctx.weights,
-                backend="pallas"), state
+                backend="pallas", mesh=ctx.mesh), state
         w = jnp.maximum(ctx.weights, 1e-9)
         return _tmap(
             lambda g, m: g.astype(jnp.float32) + m / _row_bcast(w, m),

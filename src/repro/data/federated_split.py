@@ -288,6 +288,7 @@ def stacked_round_batches(
     batch_size: int,
     local_epochs: int = 1,
     pad_to: Optional[int] = None,
+    shard_multiple: Optional[int] = None,
 ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
     """Assemble one round's cohort minibatches into a leading client axis.
 
@@ -319,6 +320,11 @@ def stacked_round_batches(
     The gathering itself is host-side numpy; the single resulting
     transfer replaces the per-client-per-epoch device round-trips of the
     loop path.
+
+    ``shard_multiple`` (the engine's ``execution.mesh`` data-axis size)
+    asserts the stacked width divides the device mesh: an indivisible
+    cohort is REFUSED here, at the data layer, before any array reaches
+    a sharded graph — cohorts are never silently repartitioned.
     """
     k_clients = len(datas)
     k_stack = k_clients if pad_to is None else int(pad_to)
@@ -326,6 +332,12 @@ def stacked_round_batches(
         raise ValueError(f"pad_to={pad_to} is smaller than the cohort "
                          f"({k_clients} clients); the stacked axis cannot "
                          "drop cohort members")
+    if shard_multiple and k_stack % shard_multiple:
+        raise ValueError(
+            f"stacked cohort width {k_stack} is not divisible by the "
+            f"device-mesh data axis ({shard_multiple}) — cohorts are "
+            "never silently repartitioned; enable execution.pad_cohorts "
+            "(fixed-K padding) or resize the cohort/mesh")
     e = local_epochs
     p = batch_size
     stacked: Dict[str, np.ndarray] = {

@@ -10,6 +10,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 # defined BEFORE the repro.core import below: core/__init__ -> engine
 # reads this constant off the partially-initialized module when the
@@ -73,6 +75,15 @@ def topic_decoder_loss(theta, beta, bow, dec_scale=None, *,
 # fused graphs through here with the default backend changes nothing.
 # These are called from inside the engine's jitted round functions, so no
 # jit here except on the standalone-use paths exercised by tests/benches.
+#
+# Every wrapper also takes ``mesh`` (a ("data",)-axis jax Mesh, or None):
+# with a mesh the reduction runs as a shard_map island — each device
+# applies the SAME backend kernel to its K/N local cohort rows and the
+# cross-device Eq. (2) reduction is one psum of the per-device partial
+# numerators (DESIGN.md §5: per-device partials of the secure-mask stack
+# stay on the dyadic grid, so the psum order cannot break cancellation).
+# ``check_rep=False`` everywhere a pallas_call sits inside the island —
+# the pinned jax has no replication rule for pallas_call.
 # ---------------------------------------------------------------------------
 def _check_backend(backend: str) -> None:
     if backend not in KERNEL_BACKENDS:
@@ -86,44 +97,104 @@ def _flat2(leaf):
     return leaf.reshape((leaf.shape[0], -1))
 
 
-def fed_weighted_combine(tree, weights, *, backend: str = "xla",
-                         interpret: bool | None = None):
-    """Eq. (2): per-leaf ``sum_k w_k x_k / max(sum w, 1e-12)`` over a
-    stacked ``(K, ...)`` pytree, zero-weight rows masked out."""
-    _check_backend(backend)
+def _local_weighted_num(tree, w, backend: str, interpret: bool):
+    """Per-leaf masked partial numerator ``sum_k w_k x_k`` over the rows
+    this device holds (the single-device numerator when unsharded)."""
     if backend == "xla":
-        return aggregate_stacked(tree, weights)
-    interpret = _auto_interpret() if interpret is None else interpret
-    w = jnp.asarray(weights, jnp.float32)
-    total = jnp.maximum(jnp.sum(w), 1e-12)
-
-    def combine(leaf):
-        num = fed_weighted_sum_pallas(_flat2(leaf), w, interpret=interpret)
-        return (num / total).reshape(leaf.shape[1:])
-
-    return jax.tree_util.tree_map(combine, tree)
-
-
-def fed_weighted_sum(tree, coefs, *, backend: str = "xla",
-                     interpret: bool | None = None):
-    """NUMERATOR-only per-leaf ``sum_k c_k x_k`` over a stacked pytree —
-    the ring buffer's staleness-discounted combine (denominator handled
-    by the caller, which also folds in the fresh-cohort term)."""
-    _check_backend(backend)
-    c = jnp.asarray(coefs, jnp.float32)
-    if backend == "xla":
-        return jax.tree_util.tree_map(
-            lambda leaf: (c @ _flat2(leaf).astype(jnp.float32))
-            .reshape(leaf.shape[1:]), tree)
-    interpret = _auto_interpret() if interpret is None else interpret
+        def num(leaf):
+            wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+            contrib = jnp.where(wb > 0.0, leaf.astype(jnp.float32), 0.0)
+            return jnp.sum(wb * contrib, axis=0)
+        return jax.tree_util.tree_map(num, tree)
     return jax.tree_util.tree_map(
         lambda leaf: fed_weighted_sum_pallas(
-            _flat2(leaf), c, interpret=interpret).reshape(leaf.shape[1:]),
+            _flat2(leaf), w, interpret=interpret).reshape(leaf.shape[1:]),
         tree)
 
 
+def fed_weighted_combine(tree, weights, *, backend: str = "xla",
+                         interpret: bool | None = None, mesh=None):
+    """Eq. (2): per-leaf ``sum_k w_k x_k / max(sum w, 1e-12)`` over a
+    stacked ``(K, ...)`` pytree, zero-weight rows masked out.
+
+    With ``mesh`` the K axis is row-sharded: each device reduces its own
+    rows with the selected backend kernel, then one ``psum`` over
+    ``"data"`` forms the cross-device numerator and denominator — the
+    replicated output is the same Eq. (2) mean up to fp32 summation
+    order (bitwise for the secure-mask stack, which lives on the dyadic
+    grid).
+    """
+    _check_backend(backend)
+    if mesh is None:
+        if backend == "xla":
+            return aggregate_stacked(tree, weights)
+        interpret = _auto_interpret() if interpret is None else interpret
+        w = jnp.asarray(weights, jnp.float32)
+        total = jnp.maximum(jnp.sum(w), 1e-12)
+
+        def combine(leaf):
+            num = fed_weighted_sum_pallas(_flat2(leaf), w,
+                                          interpret=interpret)
+            return (num / total).reshape(leaf.shape[1:])
+
+        return jax.tree_util.tree_map(combine, tree)
+
+    itp = _auto_interpret() if interpret is None else interpret
+
+    def local(tree_l, w_l):
+        w32 = jnp.asarray(w_l, jnp.float32)
+        num = _local_weighted_num(tree_l, w32, backend, itp)
+        num = jax.tree_util.tree_map(lambda x: jax.lax.psum(x, "data"), num)
+        total = jnp.maximum(jax.lax.psum(jnp.sum(w32), "data"), 1e-12)
+        return jax.tree_util.tree_map(lambda n: n / total, num)
+
+    return shard_map(local, mesh=mesh, in_specs=(P("data"), P("data")),
+                     out_specs=P(), check_rep=False)(
+                         tree, jnp.asarray(weights, jnp.float32))
+
+
+def fed_weighted_sum(tree, coefs, *, backend: str = "xla",
+                     interpret: bool | None = None, mesh=None):
+    """NUMERATOR-only per-leaf ``sum_k c_k x_k`` over a stacked pytree —
+    the ring buffer's staleness-discounted combine (denominator handled
+    by the caller, which also folds in the fresh-cohort term).  With
+    ``mesh``, per-device partial sums + one psum, as in
+    :func:`fed_weighted_combine`."""
+    _check_backend(backend)
+    c = jnp.asarray(coefs, jnp.float32)
+    if mesh is None:
+        if backend == "xla":
+            return jax.tree_util.tree_map(
+                lambda leaf: (c @ _flat2(leaf).astype(jnp.float32))
+                .reshape(leaf.shape[1:]), tree)
+        interpret = _auto_interpret() if interpret is None else interpret
+        return jax.tree_util.tree_map(
+            lambda leaf: fed_weighted_sum_pallas(
+                _flat2(leaf), c,
+                interpret=interpret).reshape(leaf.shape[1:]),
+            tree)
+
+    itp = _auto_interpret() if interpret is None else interpret
+
+    def local(tree_l, c_l):
+        if backend == "xla":
+            num = jax.tree_util.tree_map(
+                lambda leaf: (c_l @ _flat2(leaf).astype(jnp.float32))
+                .reshape(leaf.shape[1:]), tree_l)
+        else:
+            num = jax.tree_util.tree_map(
+                lambda leaf: fed_weighted_sum_pallas(
+                    _flat2(leaf), c_l,
+                    interpret=itp).reshape(leaf.shape[1:]), tree_l)
+        return jax.tree_util.tree_map(lambda x: jax.lax.psum(x, "data"),
+                                      num)
+
+    return shard_map(local, mesh=mesh, in_specs=(P("data"), P("data")),
+                     out_specs=P(), check_rep=False)(tree, c)
+
+
 def fed_topk_ef(msgs, err_state, ids, *, frac: float, backend: str = "xla",
-                interpret: bool | None = None):
+                interpret: bool | None = None, mesh=None):
     """Fused correct -> exactly-k top-k -> residual per cohort row.
 
     ``msgs``: stacked ``(K, ...)`` message pytree; ``err_state``: the
@@ -133,9 +204,48 @@ def fed_topk_ef(msgs, err_state, ids, *, frac: float, backend: str = "xla",
     ``(sent, new_err)`` pytrees of ``(K, ...)`` fp32 rows; scattering
     ``new_err`` back into the ``(L, ...)`` state (padded rows dropped)
     stays with the caller.
+
+    With ``mesh`` (K and L both row-sharded over ``"data"``), the
+    cohort's error rows are gathered OUTSIDE the island — GSPMD lowers
+    ``err[ids]`` into the cross-shard collective — and each device runs
+    the per-row correct/top-k/residual kernel on its own pre-gathered
+    rows with iota ids.  Same math: ``corrected = msg + err[ids]`` row
+    by row, no cross-row term anywhere.
     """
     _check_backend(backend)
     ids = jnp.asarray(ids, jnp.int32)
+
+    if mesh is not None:
+        itp = _auto_interpret() if interpret is None else interpret
+        gathered = jax.tree_util.tree_map(lambda e: e[ids], err_state)
+
+        def local(msgs_l, err_l):
+            def one_leaf(m, e):
+                m2, e2 = _flat2(m), _flat2(e)
+                k_keep = max(int(frac * m2.shape[1]), 1)
+                if backend == "xla":
+                    corrected = m2.astype(jnp.float32) \
+                        + e2.astype(jnp.float32)
+                    mask = topk_keep_mask(jnp.abs(corrected), k_keep)
+                    sent = jnp.where(mask, corrected, 0.0)
+                    new_err = corrected - sent
+                else:
+                    iota = jnp.arange(m2.shape[0], dtype=jnp.int32)
+                    sent, new_err = fed_topk_ef_pallas(
+                        m2, e2, iota, k_keep=k_keep, interpret=itp)
+                return sent.reshape(m.shape), new_err.reshape(m.shape)
+
+            pairs = jax.tree_util.tree_map(one_leaf, msgs_l, err_l)
+            is_pair = lambda x: isinstance(x, tuple)  # noqa: E731
+            return (jax.tree_util.tree_map(lambda p: p[0], pairs,
+                                           is_leaf=is_pair),
+                    jax.tree_util.tree_map(lambda p: p[1], pairs,
+                                           is_leaf=is_pair))
+
+        return shard_map(local, mesh=mesh,
+                         in_specs=(P("data"), P("data")),
+                         out_specs=(P("data"), P("data")),
+                         check_rep=False)(msgs, gathered)
 
     def one_leaf(msg_leaf, err_leaf):
         m2 = _flat2(msg_leaf)
@@ -164,11 +274,37 @@ def fed_topk_ef(msgs, err_state, ids, *, frac: float, backend: str = "xla",
 def fed_dp_secure_apply(tree, *, noise=None, masks=None, clip_coef=None,
                         weights=None, noise_scale: float = 0.0,
                         backend: str = "xla",
-                        interpret: bool | None = None):
+                        interpret: bool | None = None, mesh=None):
     """Per-leaf ``x * clip_coef + noise_scale * noise + mask / max(w,1e-9)``
     over stacked ``(K, ...)`` pytrees, terms present only when given.
-    ``dp`` passes (noise, clip_coef); ``secure`` passes (masks, weights)."""
+    ``dp`` passes (noise, clip_coef); ``secure`` passes (masks, weights).
+
+    Strictly per-row, so the ``mesh`` path is an embarrassingly-parallel
+    shard_map island: every operand row-sharded over ``"data"``, no
+    collectives — each device's kernel output is bitwise the rows the
+    single-device kernel would produce."""
     _check_backend(backend)
+    if mesh is not None:
+        packed = {"x": tree}
+        if noise is not None:
+            packed["noise"] = noise
+        if masks is not None:
+            packed["masks"] = masks
+        if clip_coef is not None:
+            packed["clip_coef"] = jnp.asarray(clip_coef, jnp.float32)
+        if weights is not None:
+            packed["weights"] = jnp.asarray(weights, jnp.float32)
+
+        def local(p):
+            return fed_dp_secure_apply(
+                p["x"], noise=p.get("noise"), masks=p.get("masks"),
+                clip_coef=p.get("clip_coef"), weights=p.get("weights"),
+                noise_scale=noise_scale, backend=backend,
+                interpret=interpret, mesh=None)
+
+        specs = {k: P("data") for k in packed}
+        return shard_map(local, mesh=mesh, in_specs=(specs,),
+                         out_specs=P("data"), check_rep=False)(packed)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     noise_leaves = (jax.tree_util.tree_leaves(noise) if noise is not None
                     else [None] * len(leaves))

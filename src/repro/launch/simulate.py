@@ -63,7 +63,7 @@ from repro.api import Federation, FederationSpec, scenario_names, \
 # bench_rounds.py and the tests import these names from this module
 from repro.api.federation import (  # noqa: F401
     build_clients, build_corpus, heldout_elbo_per_token, heldout_perplexity)
-from repro.api.spec import (DataSpec, ExecutionSpec, ModelSpec,
+from repro.api.spec import (DataSpec, ExecutionSpec, MeshSpec, ModelSpec,
                             PartitionSpec, ScheduleSpec, ServerOptSpec,
                             TransformsSpec, parse_int_tuple)
 from repro.core.aggregation import SERVER_OPTIMIZERS
@@ -119,7 +119,9 @@ def spec_from_args(args) -> FederationSpec:
                                 learning_rate=args.lr,
                                 rel_tol=args.rel_tol,
                                 stochastic_loss=args.stochastic_loss,
-                                seed=args.seed))
+                                seed=args.seed,
+                                mesh=(MeshSpec.from_value(args.mesh)
+                                      if args.mesh else None)))
 
 
 # flags that control I/O or select the spec source, not the scenario —
@@ -272,6 +274,13 @@ def main(argv=None):
                     help="loop = host-side per-client stepping (Alg. 1 "
                          "literal); vmap = all K local updates + combine "
                          "+ server step in one jitted graph")
+    ap.add_argument("--mesh", default="",
+                    help="device-mesh axis spec 'data=N': shard the "
+                         "fused vmap graphs' cohort/state/ring rows "
+                         "over the first N visible devices (K and L "
+                         "must divide N; on a CPU host export "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N first); empty = single-device")
     ap.add_argument("--clients-per-round", type=int, default=0,
                     help="K; 0 = all clients (paper Alg. 1)")
     ap.add_argument("--sampling", default="uniform",

@@ -90,6 +90,30 @@ def use_abstract_mesh(mesh):
         yield
 
 
+def fed_mesh(data: int) -> Mesh:
+    """The federation's ``("data",)``-axis device mesh over the first
+    ``data`` local devices (``FederationSpec`` ``execution.mesh``).
+
+    The fused round graphs shard their client axes over it: the stacked
+    ``(K, ...)`` cohort, the ``(L, ...)`` per-client state trees and the
+    ``(C, ...)`` straggler ring all split along ``"data"`` while params
+    and server state stay replicated.  ``data=1`` is a real one-device
+    mesh (the sharded code path, no cross-device traffic), so the path
+    is exercisable on single-device hosts.
+    """
+    if data < 1:
+        raise ValueError(f"fed_mesh needs data >= 1, got {data}")
+    devs = jax.devices()
+    if len(devs) < data:
+        raise ValueError(
+            f"execution.mesh data={data} needs {data} devices but only "
+            f"{len(devs)} are visible; on a CPU host export "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={data} "
+            "before importing jax (the CI host-mesh leg does exactly "
+            "this), or shrink the mesh")
+    return Mesh(np.asarray(devs[:data]), ("data",))
+
+
 # ---------------------------------------------------------------------------
 # sharding profile
 # ---------------------------------------------------------------------------

@@ -27,6 +27,32 @@ def rng():
     return np.random.default_rng(0)
 
 
+# devices the mesh-sharded execution tests need (tests/test_mesh_federation.py
+# and the CI host-mesh leg, which exports the XLA flag before pytest starts)
+HOST_MESH_DEVICES = 8
+
+
+@pytest.fixture
+def host_mesh_devices():
+    """The visible device count for mesh-execution tests, or a skip.
+
+    XLA fixes the device count at backend init, so a fixture cannot
+    grow it after jax is imported — the CI host-mesh leg (and anyone
+    running the mesh suite locally) must export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` BEFORE
+    pytest starts.  Everywhere else the mesh tests skip with that
+    incantation as the reason instead of failing on a 1-device host."""
+    import jax
+    n = jax.device_count()
+    if n < HOST_MESH_DEVICES:
+        pytest.skip(
+            f"needs {HOST_MESH_DEVICES} devices, {n} visible — export "
+            "XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{HOST_MESH_DEVICES} before importing jax (the CI "
+            "host-mesh leg does exactly this)")
+    return n
+
+
 # ---------------------------------------------------------------------------
 # shared federated-engine test helpers (import via `from conftest import …`;
 # the single home for the loop==vmap deviation metric and the tiny

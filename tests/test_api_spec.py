@@ -14,7 +14,7 @@ import warnings
 import pytest
 
 from repro.api import (BENCH_SCENARIOS, SCENARIOS, DataSpec, ExecutionSpec,
-                       FederationSpec, ModelSpec, PartitionSpec,
+                       FederationSpec, MeshSpec, ModelSpec, PartitionSpec,
                        ScheduleSpec, ServerOptSpec, TransformsSpec,
                        parse_int_tuple, register_scenario, scenario_names,
                        scenario_spec, spec_replace)
@@ -109,6 +109,53 @@ def test_spec_replace_paths_checked():
         spec_replace(spec, {"schedule.roundz": 9})
     with pytest.raises(ValueError, match="unknown spec override"):
         spec_replace(spec, {"rounds": 9})
+
+
+def test_mesh_accepted_forms_and_roundtrip():
+    # the three accepted input forms resolve to the same MeshSpec ...
+    for form in ({"data": 2}, "data=2", MeshSpec(data=2)):
+        s = _tiny_spec(**{"data.num_clients": 4,
+                          "execution.mesh": form})
+        assert s.execution.mesh == MeshSpec(data=2)
+    # ... and both the set and the unset mesh survive the JSON round
+    # trip byte-identically
+    for s in (_tiny_spec(),
+              _tiny_spec(**{"data.num_clients": 4,
+                            "execution.mesh": {"data": 2}})):
+        assert FederationSpec.from_dict(s.to_dict()) == s
+        assert FederationSpec.from_json(s.to_json()) == s
+        assert s.to_json() == FederationSpec.from_json(s.to_json()).to_json()
+
+
+def test_spec_replace_mesh_dotted_paths():
+    spec = _tiny_spec(**{"data.num_clients": 4})
+    # create-from-None via the nested dotted path
+    a = spec_replace(spec, {"execution.mesh.data": 2})
+    assert a.execution.mesh == MeshSpec(data=2)
+    # replace-into-existing keeps being a plain field update
+    b = spec_replace(a, {"execution.mesh.data": 4})
+    assert b.execution.mesh == MeshSpec(data=4)
+    # whole-section values in any accepted form, and None clears
+    assert spec_replace(a, {"execution.mesh": "data=4"}
+                        ).execution.mesh == MeshSpec(data=4)
+    assert spec_replace(a, {"execution.mesh": None}).execution.mesh is None
+
+
+def test_mesh_refusals():
+    # unknown keys refused in the named-field error style, both for the
+    # mapping form and the nested dotted path
+    with pytest.raises(ValueError, match="unknown key.*execution.mesh"):
+        _tiny_spec(**{"execution.mesh": {"data": 2, "model": 1}})
+    with pytest.raises(ValueError, match="unknown key 'datum'"):
+        spec_replace(_tiny_spec(), {"execution.mesh.datum": 2})
+    with pytest.raises(ValueError, match="execution.mesh"):
+        _tiny_spec(**{"execution.mesh": "model=2"})
+    with pytest.raises(ValueError, match="mesh.data must be"):
+        _tiny_spec(**{"execution.mesh": {"data": 0}})
+    # K/L divisibility is a construction-time spec error — cohorts are
+    # never silently repartitioned at runtime
+    with pytest.raises(ValueError, match="never silently repartitioned"):
+        _tiny_spec(**{"execution.mesh": {"data": 2}})  # L = 3
 
 
 # ---------------------------------------------------------------------------
