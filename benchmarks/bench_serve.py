@@ -1,0 +1,155 @@
+"""Buffered-async service benchmark — correctness anchor + concurrent
+train/serve throughput (the ``serve_results`` payload block).
+
+Three cells, gated by ``benchmarks/ci_gate.py`` against the committed
+baseline (HARD on correctness, warn-only on timing — the repo-wide
+two-tier policy):
+
+* ``sync-equivalence`` — the DESIGN.md §6 anchor: a buffered-async
+  service with ``M=K``, ``max_staleness=0`` and in-order arrivals must
+  reproduce the synchronous FedAvg trajectory of the sync twin spec.
+  ``final_param_dev`` hard-fails at the repo-wide 1e-5 bound.
+* ``buffered-async`` — the FedBuff regime (M < L, held-back uploads,
+  duplicate resubmissions): records aggregations, the rejection ledger
+  (every reason must be a documented ``REJECT_REASONS`` member — an
+  unnamed rejection path hard-fails), and observed staleness.
+  ``uploads_per_s`` is the train-side throughput (warn-only trend).
+* ``train-serve`` — the same service answering inference every other
+  step while training: ``infer_latency_p50_s`` /
+  ``infer_throughput_per_s`` are the serve-side cells (warn-only
+  trend); zero recorded inference calls hard-fails (the measurement
+  silently stopped).
+
+Usage (what .github/workflows/ci.yml runs):
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --quick \\
+        --out experiments/bench_serve_ci.json
+    python -m benchmarks.ci_gate experiments/bench_serve_ci.json \\
+        benchmarks/baselines/BENCH_scenarios_ci.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+from repro.api import (DataSpec, ExecutionSpec, Federation, FederationSpec,
+                       ModelSpec, ScheduleSpec, build_corpus,
+                       max_param_dev, spec_replace)
+from repro.serve import FederationService, run_traffic, sync_twin_spec
+
+
+def base_async_spec(*, vocab, topics, hidden, num_clients, docs, batch,
+                    rounds) -> FederationSpec:
+    # lr below the tiny-config divergence point (the same sizing the
+    # scenario tests use) — the anchor compares absolute param devs, so
+    # both trajectories must stay numerically sane
+    return spec_replace(
+        FederationSpec(
+            name="bench-serve",
+            model=ModelSpec(vocab=vocab, topics=topics, hidden=hidden),
+            data=DataSpec(num_clients=num_clients, docs_per_node=docs,
+                          val_docs_per_node=8),
+            schedule=ScheduleSpec(rounds=rounds),
+            execution=ExecutionSpec(batch_size=batch,
+                                    learning_rate=2e-4)),
+        {"schedule.mode": "buffered_async",
+         "schedule.max_staleness": 0,
+         "execution.exec_mode": "loop"})
+
+
+def equivalence_cell(spec, corpus, *, sweeps) -> dict:
+    """M=K, staleness 0, in-order arrivals vs the sync twin trajectory."""
+    twin = spec_replace(sync_twin_spec(spec), {"schedule.rounds": sweeps})
+    fed = Federation.from_spec(twin, corpus=corpus)
+    fed.run()
+    svc = FederationService.from_spec(spec, corpus=corpus)
+    L = spec.data.num_clients
+    t0 = time.perf_counter()
+    accepted = 0
+    for _ in range(sweeps):
+        for c in range(L):
+            accepted += int(svc.upload(c)["accepted"])
+    wall = time.perf_counter() - t0
+    return {"cell": "sync-equivalence",
+            "final_param_dev": max_param_dev(fed.engine.params,
+                                             svc._live[1]),
+            "aggregations": svc.agg_index, "version": svc.version,
+            "uploads": sweeps * L, "accepted": accepted,
+            "uploads_per_s": sweeps * L / wall}
+
+
+def traffic_cell(name, spec, corpus, *, sweeps, infer_every,
+                 infer_batch) -> dict:
+    svc = FederationService.from_spec(spec, corpus=corpus)
+    t0 = time.perf_counter()
+    stats = run_traffic(svc, sweeps=sweeps, order_seed=1, hold_prob=0.25,
+                        duplicate_prob=0.2, infer_every=infer_every,
+                        infer_batch=infer_batch)
+    stats.update(svc.shutdown())
+    wall = time.perf_counter() - t0
+    cell = {"cell": name, "uploads_per_s": stats["uploads"] / wall}
+    cell.update({k: stats[k] for k in
+                 ("uploads", "accepted", "aggregations", "version",
+                  "rejections", "mean_staleness", "max_staleness_seen",
+                  "infer_calls")})
+    for k in ("infer_latency_p50_s", "infer_throughput_per_s"):
+        if k in stats:
+            cell[k] = stats[k]
+    return cell
+
+
+def run_bench(args) -> dict:
+    size = dict(vocab=64, topics=4, hidden=16, num_clients=4, docs=40,
+                batch=16, rounds=3) if args.quick else \
+        dict(vocab=200, topics=8, hidden=32, num_clients=6, docs=120,
+             batch=32, rounds=6)
+    sweeps = 3 if args.quick else 6
+    spec = base_async_spec(**size)
+    corpus = build_corpus(sync_twin_spec(spec))
+    fedbuff = spec_replace(spec, {"schedule.buffer_size": 2,
+                                  "schedule.max_staleness": 2,
+                                  "schedule.staleness_policy":
+                                      "polynomial"})
+    results = [
+        equivalence_cell(spec, corpus, sweeps=sweeps),
+        traffic_cell("buffered-async", fedbuff, corpus, sweeps=sweeps,
+                     infer_every=0, infer_batch=0),
+        traffic_cell("train-serve", fedbuff, corpus, sweeps=sweeps,
+                     infer_every=2,
+                     infer_batch=4 if args.quick else 16),
+    ]
+    for r in results:
+        extra = (f" dev={r['final_param_dev']:.1e}"
+                 if "final_param_dev" in r else
+                 f" rejections={r.get('rejections', {})}")
+        print(f"[{r['cell']}] aggs={r['aggregations']} "
+              f"up/s={r['uploads_per_s']:.1f}{extra}")
+    return {"setup": {"jax": jax.__version__,
+                      "device_count": jax.device_count(),
+                      "quick": bool(args.quick), "sweeps": sweeps,
+                      **size},
+            "serve_results": results}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI sizing (tiny model, 3 sweeps)")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    payload = run_bench(args)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out}")
+    return payload
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main() else 1)

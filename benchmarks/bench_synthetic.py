@@ -11,7 +11,7 @@ we additionally assert that equality each run), then score DSS (Eq. 5,
 lower better) and TSS (Eq. 6, closer to K better) against the known
 generative ground truth, plus the paper's a-priori TSS baseline.
 
-Default scale is reduced for CPU (documented in DESIGN.md §10); ``--full``
+Default scale is reduced for CPU (documented in DESIGN.md §11); ``--full``
 restores the paper's V=5000, K=50, 10k docs/node.
 """
 from __future__ import annotations

@@ -1,7 +1,7 @@
 """Paper Fig. 4 reproduction: AMWMD between node-specific and federated
 models on real-style data (paper §4.2).
 
-S2ORC is not redistributable offline (data gate, DESIGN.md §10); we build a
+S2ORC is not redistributable offline (data gate, DESIGN.md §11); we build a
 synthetic 5-"discipline" corpus with the same structure the paper relies
 on: each client's documents concentrate on discipline-specific topics plus
 a shared base, and word embeddings carry topic locality.  gFedNTM with

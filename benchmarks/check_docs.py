@@ -1,0 +1,144 @@
+"""Docs reference checker — every intra-repo link must resolve.
+
+Stdlib-only (runnable before PYTHONPATH is set, like the trend gate).
+Scans ``README.md``, ``DESIGN.md`` and ``docs/*.md`` for:
+
+* markdown links ``[text](target)`` — external (``http``/``mailto``)
+  and pure-anchor targets are skipped; everything else, fragment
+  stripped, must exist relative to the linking file's directory (or the
+  repo root as a fallback for root-style paths);
+* backtick file references — `` `path/to/file.py` `` (also ``.md`` /
+  ``.json`` / ``.yml`` / ``.toml``), optionally suffixed
+  ``:symbol`` or ``:lineno``.  Paths resolve against the roots ``.``,
+  ``src`` and ``src/repro`` (docs refer to modules both ways); a bare
+  filename (the repo-map-table style, `` `spec.py` `` inside an
+  ``api/`` row) resolves through a repo-wide basename index.  A
+  ``:symbol`` must occur as a word in the file, a ``:lineno`` must not
+  exceed the file's length.  Glob-ish tokens (``docs/*.md``) are
+  skipped — they name families, not files.
+
+Exit 1 listing every dangling reference; CI runs this on every push
+(and ``tests/test_docs_refs.py`` runs it under tier-1), so a rename
+that strands the docs fails before review.
+
+Usage:
+
+    python -m benchmarks.check_docs          # from the repo root
+    python benchmarks/check_docs.py --root /path/to/repo
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+
+DOC_GLOBS = ("README.md", "DESIGN.md", "docs/*.md")
+ROOTS = (".", "src", "src/repro")
+
+_MD_LINK = re.compile(r"\[[^\]\n]*\]\(([^)\s]+)\)")
+_BACKTICK = re.compile(
+    r"`([\w./-]+\.(?:py|md|json|yml|yaml|toml))"
+    r"(?::([A-Za-z_][\w.]*|\d+))?`")
+
+
+_SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
+
+
+def _basename_index(root: str):
+    """basename -> first path, over the whole tree (bare-filename refs)."""
+    index = {}
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d not in _SKIP_DIRS)
+        for fn in sorted(filenames):
+            index.setdefault(fn, os.path.join(dirpath, fn))
+    return index
+
+
+def _resolve(target: str, base_dir: str, root: str, index):
+    """First existing candidate path for a doc reference, else None."""
+    cands = [os.path.join(base_dir, target)]
+    cands += [os.path.join(root, r, target) for r in ROOTS]
+    for c in cands:
+        if os.path.exists(c):
+            return c
+    if "/" not in target:
+        return index.get(target)
+    return None
+
+
+def check_file(path: str, root: str, index) -> list:
+    problems = []
+    base_dir = os.path.dirname(path) or "."
+    rel = os.path.relpath(path, root)
+    text = open(path, encoding="utf-8").read()
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in _MD_LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")) \
+                    or target.startswith("#"):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue
+            if _resolve(target, base_dir, root, index) is None:
+                problems.append(f"{rel}:{lineno}: broken link "
+                                f"({m.group(0)}) — {target!r} does not "
+                                "exist")
+        for m in _BACKTICK.finditer(line):
+            target, suffix = m.group(1), m.group(2)
+            if "*" in target:
+                continue
+            found = _resolve(target, base_dir, root, index)
+            if found is None:
+                problems.append(f"{rel}:{lineno}: backtick reference "
+                                f"`{target}` resolves under none of "
+                                f"{ROOTS}")
+                continue
+            if suffix is None:
+                continue
+            content = open(found, encoding="utf-8").read()
+            if suffix.isdigit():
+                if int(suffix) > content.count("\n") + 1:
+                    problems.append(
+                        f"{rel}:{lineno}: `{target}:{suffix}` points "
+                        f"past the end of {found}")
+            elif not re.search(
+                    r"\b" + re.escape(suffix.split(".")[-1]) + r"\b",
+                    content):
+                problems.append(
+                    f"{rel}:{lineno}: `{target}:{suffix}` — symbol "
+                    f"{suffix!r} does not occur in {found}")
+    return problems
+
+
+def check_docs(root: str = ".") -> list:
+    files = []
+    for g in DOC_GLOBS:
+        files += sorted(glob.glob(os.path.join(root, g)))
+    if not files:
+        return [f"no doc files matched {DOC_GLOBS} under {root!r} — "
+                "the checker must check something"]
+    index = _basename_index(root)
+    problems = []
+    for f in files:
+        problems += check_file(f, root, index)
+    if not problems:
+        print(f"check_docs: {len(files)} doc files, all intra-repo "
+              "references resolve")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=".",
+                    help="repository root (default: cwd)")
+    problems = check_docs(ap.parse_args(argv).root)
+    for p in problems:
+        print(f"FAIL: {p}", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,11 @@
 """CI perf/regression gate for the scenario- and kernel-suite payloads.
 
-Compares a freshly-produced bench JSON (``bench_scenarios`` or
-``bench_kernels`` — the gate is suite-aware, keyed on which of
-``results`` / ``kernel_results`` the payload carries; the single
-committed baseline ``benchmarks/baselines/BENCH_scenarios_ci.json``
-holds BOTH) and enforces a two-tier policy:
+Compares a freshly-produced bench JSON (``bench_scenarios``,
+``bench_kernels`` or ``bench_serve`` — the gate is suite-aware, keyed
+on which of ``results`` / ``kernel_results`` / ``serve_results`` the
+payload carries; the single committed baseline
+``benchmarks/baselines/BENCH_scenarios_ci.json`` holds ALL THREE) and
+enforces a two-tier policy:
 
   * HARD FAIL (exit 1) — correctness/privacy invariants.  These do not
     drift with runner noise, so any violation is a real regression:
@@ -35,6 +36,12 @@ holds BOTH) and enforces a two-tier policy:
       - a kernel cell's ``max_dev_vs_ref >= 1e-5`` (a Pallas or XLA
         aggregation path drifted from its pure-jnp oracle,
         ``kernels/ref.py``);
+      - the serve suite's ``sync-equivalence`` anchor missing or its
+        ``final_param_dev >= 1e-5`` (the buffered-async service with
+        M=K / staleness 0 / in-order arrivals must reproduce the sync
+        FedAvg trajectory, DESIGN.md §6), a serve cell recording a
+        rejection reason outside ``repro.serve.REJECT_REASONS``, zero
+        aggregations, or a train-serve cell with zero inference calls;
       - a scenario or kernel cell present in the baseline missing from
         the current payload (a silently-shrunk grid reads as "all
         green"); baseline ``mesh-*`` cells are exempt only on hosts
@@ -61,6 +68,8 @@ Usage (what .github/workflows/ci.yml runs):
     python -m benchmarks.ci_gate experiments/bench_scenarios_ci.json \\
         benchmarks/baselines/BENCH_scenarios_ci.json
     python -m benchmarks.ci_gate experiments/bench_kernels_ci.json \\
+        benchmarks/baselines/BENCH_scenarios_ci.json
+    python -m benchmarks.ci_gate experiments/bench_serve_ci.json \\
         benchmarks/baselines/BENCH_scenarios_ci.json
     python -m benchmarks.ci_gate --spec-validate
 """
@@ -111,12 +120,94 @@ def _gate_kernels(current: dict, baseline: dict, *, dev_bound: float,
     return failures
 
 
+# the documented rejection ledger of the buffered-async service; kept
+# importable-free (the trend gate's stdlib-only contract) with the live
+# tuple preferred when repro IS on the path
+_REJECT_REASONS_FALLBACK = ("stale", "superseded", "unknown_client",
+                            "draining", "zero_weight", "bad_version",
+                            "upload_failed")
+
+
+def _gate_serve(current: dict, baseline: dict, *, dev_bound: float,
+                timing_slack: float) -> list:
+    """Hard/warn policy for a ``bench_serve`` payload: the M=K /
+    staleness-0 sync-equivalence anchor, rejection-ledger naming, and
+    cell membership are hard; throughput/latency trends warn-only."""
+    failures = []
+    try:
+        from repro.serve import REJECT_REASONS
+    except ImportError:
+        REJECT_REASONS = _REJECT_REASONS_FALLBACK
+        _warn("repro.serve not importable (set PYTHONPATH=src) — gating "
+              "rejection reasons against the vendored fallback tuple")
+    cur = {r["cell"]: r for r in current.get("serve_results", [])}
+    base = {r["cell"]: r for r in baseline.get("serve_results", [])}
+    for name in base:
+        if name not in cur:
+            failures.append(f"serve cell {name!r} present in baseline "
+                            "but missing from the current payload")
+    eq = cur.get("sync-equivalence")
+    if eq is None:
+        failures.append("serve payload carries no 'sync-equivalence' "
+                        "cell — the anchor must be measured every run")
+    else:
+        dev = eq.get("final_param_dev")
+        if dev is None or not dev < dev_bound:
+            failures.append(
+                f"sync-equivalence: final_param_dev={dev!r} (bound "
+                f"{dev_bound:g}) — the buffered-async service with M=K, "
+                "max_staleness=0 and in-order arrivals must reproduce "
+                "the synchronous FedAvg trajectory (DESIGN.md §6)")
+    for name, r in cur.items():
+        unknown = sorted(set(r.get("rejections", {})) -
+                         set(REJECT_REASONS))
+        if unknown:
+            failures.append(
+                f"{name}: rejection reason(s) {unknown} are not in "
+                "repro.serve.REJECT_REASONS — every rejection path must "
+                "be named and documented")
+        if not r.get("aggregations"):
+            failures.append(f"{name}: zero aggregations — the service "
+                            "never advanced the model")
+        if name == "train-serve" and not r.get("infer_calls"):
+            failures.append("train-serve: zero inference calls recorded "
+                            "— the serve-side measurement silently "
+                            "stopped")
+        b = base.get(name)
+        if not b:
+            continue
+        for key, worse_is in (("uploads_per_s", "lower"),
+                              ("infer_throughput_per_s", "lower"),
+                              ("infer_latency_p50_s", "higher")):
+            c_v, b_v = r.get(key), b.get(key)
+            if not (c_v and b_v):
+                continue
+            degraded = (c_v > timing_slack * b_v if worse_is == "higher"
+                        else c_v * timing_slack < b_v)
+            if degraded:
+                _warn(f"{name}: {key} {c_v:.4g} vs baseline {b_v:.4g} "
+                      f"(beyond {timing_slack:g}x slack)")
+    return failures
+
+
 def gate(current: dict, baseline: dict, *,
          dev_bound: float = DEV_BOUND,
          timing_slack: float = TIMING_SLACK) -> int:
-    # suite dispatch: a bench_kernels payload carries kernel_results
-    # (and no scenario results) — gate it against the SAME baseline
-    # file's kernel_results block
+    # suite dispatch: a bench_serve payload carries serve_results, a
+    # bench_kernels payload kernel_results (and no scenario results) —
+    # both gate against the SAME baseline file's matching block
+    if "serve_results" in current and "results" not in current:
+        failures = _gate_serve(current, baseline, dev_bound=dev_bound,
+                               timing_slack=timing_slack)
+        if failures:
+            for f in failures:
+                print(f"FAIL: {f}", file=sys.stderr)
+            return 1
+        n = len(current.get("serve_results", []))
+        print(f"ci_gate: {n} serve cells pass (sync-equivalence anchor "
+              f"dev<{dev_bound:g}, rejection ledger fully named); "
+              "throughput/latency deltas warn-only")
+        return 0
     if "kernel_results" in current and "results" not in current:
         failures = _gate_kernels(current, baseline, dev_bound=dev_bound,
                                  timing_slack=timing_slack)

@@ -215,6 +215,13 @@ class Federation:
         elif isinstance(spec, Mapping):
             spec = FederationSpec.from_dict(spec)
         spec.validate()
+        if spec.schedule.mode == "buffered_async":
+            raise ValueError(
+                "schedule.mode='buffered_async' describes the "
+                "long-running federation service, not a "
+                "round-synchronous simulation — build it with "
+                "repro.serve.FederationService.from_spec(spec) "
+                "(docs/serving.md); Federation runs sync specs only")
         cfg = spec.to_model_config()
         if spec.model.family == "lm":
             corpus, clients, loss_fn, loss_sum_fn, init_params = \

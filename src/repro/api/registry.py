@@ -152,6 +152,22 @@ SCENARIOS: Dict[str, Overrides] = {
                           "transforms.names": ("topk",),
                           "transforms.compression_topk": 0.25,
                           "execution.exec_mode": "vmap"},
+    # ---- buffered-async service presets (docs/serving.md) -------------
+    # FedBuff-style: aggregate every M=2 arrivals, staleness window 2,
+    # polynomial delta discount; builds via FederationService.from_spec
+    # (Federation.from_spec refuses async specs)
+    "buffered_async": {"schedule.mode": "buffered_async",
+                       "schedule.buffer_size": 2,
+                       "schedule.max_staleness": 2,
+                       "schedule.staleness_policy": "polynomial",
+                       "execution.exec_mode": "loop"},
+    # the sync-equivalence anchor regime: M = K, staleness window 0 —
+    # under in-order arrivals every aggregation IS one FedAvg round
+    # (DESIGN.md §6; pinned in tests/test_serve_service.py and gated in
+    # benchmarks/bench_serve.py)
+    "buffered_async_eq": {"schedule.mode": "buffered_async",
+                          "schedule.max_staleness": 0,
+                          "execution.exec_mode": "loop"},
 }
 
 # the scenario-bench sweep, in sweep order — bench_scenarios.py and the

@@ -60,6 +60,14 @@ from repro.data.federated_split import parse_partition_spec
 
 SPEC_VERSION = 1
 
+# schedule.mode values: "sync" = round-synchronous simulation
+# (Federation); "buffered_async" = the long-running FedBuff-style
+# service (repro.serve.FederationService, docs/serving.md)
+SCHEDULE_MODES = ("sync", "buffered_async")
+# staleness-discount policies for buffered-async aggregation: the
+# discount scales the DELTA, never the Eq. (2) weight (DESIGN.md §6)
+STALENESS_POLICIES = ("exponential", "polynomial")
+
 
 def _require(cond: bool, msg: str) -> None:
     if not cond:
@@ -366,6 +374,16 @@ class ScheduleSpec:
     straggler_prob: float = 0.0
     max_staleness: int = 0
     staleness_decay: float = 0.5
+    # ---- buffered-async service knobs (docs/serving.md) --------------
+    # mode="buffered_async" describes the long-running FederationService
+    # (repro.serve): aggregation fires whenever `buffer_size` client
+    # deltas accumulate — no round barrier.  Under it, max_staleness is
+    # the version-lag acceptance bound and staleness_policy picks the
+    # delta discount.  Sync specs must leave these at their defaults:
+    # async knobs are never silently dropped.
+    mode: str = "sync"
+    buffer_size: int = 0                # M; 0 = the cohort width K
+    staleness_policy: str = ""          # "" -> "exponential" under async
 
     def _validate(self) -> None:
         _check_int(self.rounds, "schedule.rounds", 1)
@@ -390,6 +408,32 @@ class ScheduleSpec:
         # outside [0, 1] stale deltas are amplified or sign-flipped
         _check_float(self.staleness_decay, "schedule.staleness_decay",
                      0.0, 1.0)
+        _require(self.mode in SCHEDULE_MODES,
+                 f"schedule.mode {self.mode!r} is not one of "
+                 f"{SCHEDULE_MODES}")
+        _check_int(self.buffer_size, "schedule.buffer_size", 0)
+        _require(self.staleness_policy in ("",) + STALENESS_POLICIES,
+                 f"schedule.staleness_policy {self.staleness_policy!r} "
+                 f"is not one of {STALENESS_POLICIES} (or '' for the "
+                 "mode default)")
+        if self.mode == "sync":
+            _require(self.buffer_size == 0,
+                     "schedule.buffer_size is a buffered-async knob but "
+                     "schedule.mode is 'sync' — set "
+                     "schedule.mode='buffered_async' (docs/serving.md); "
+                     "async knobs are never silently dropped")
+            _require(self.staleness_policy == "",
+                     "schedule.staleness_policy is a buffered-async "
+                     "knob but schedule.mode is 'sync' — set "
+                     "schedule.mode='buffered_async' (docs/serving.md); "
+                     "async knobs are never silently dropped")
+        else:
+            _require(self.straggler_prob == 0.0,
+                     "schedule.straggler_prob simulates in-round delays "
+                     "and needs a round barrier; under "
+                     "schedule.mode='buffered_async' staleness is REAL "
+                     "version lag (bounded by schedule.max_staleness) — "
+                     "drop the straggler knob")
 
 
 @dataclass(frozen=True)
@@ -653,6 +697,36 @@ class FederationSpec:
                      "num_clients, no client join/leave): pairwise "
                      "masks only cancel when every client's message "
                      "joins the same combine")
+        if self.schedule.mode == "buffered_async":
+            L = self.data.num_clients
+            m = self.resolved_buffer_size
+            _require(m <= L,
+                     f"schedule.buffer_size M={m} exceeds "
+                     f"data.num_clients L={L} — the service holds at "
+                     "most ONE in-flight delta per client (the newest "
+                     "upload supersedes), so a buffer wider than the "
+                     "population can never fill and aggregation would "
+                     "never fire")
+            _require("secure" not in self.transforms.names,
+                     "the 'secure' transform is incompatible with "
+                     "schedule.mode='buffered_async': pairwise masks "
+                     "cancel only when a FIXED cohort's messages join "
+                     "one combine — a buffered-async aggregation fires "
+                     "on whichever M deltas arrive first, so mask "
+                     "partners can land in different aggregations and "
+                     "the dyadic-grid cancellation breaks (DESIGN.md §6)")
+            _require(self.execution.exec_mode == "loop",
+                     "execution.exec_mode='vmap' has no meaning under "
+                     "schedule.mode='buffered_async': the fused graphs "
+                     "stack a round's cohort, but the service has no "
+                     "round barrier — each upload is an independent "
+                     "per-client local update (the loop/reference "
+                     "path); set exec_mode='loop'")
+            _require(self.execution.mesh is None,
+                     "execution.mesh shards the fused vmap graphs; the "
+                     "buffered-async service aggregates its M-slot "
+                     "buffer on the serving host — drop the mesh "
+                     "(multi-host serving is a ROADMAP item)")
         mesh = self.execution.mesh
         if mesh is not None:
             # cohorts are NEVER silently repartitioned: an indivisible
@@ -693,6 +767,22 @@ class FederationSpec:
     def resolved_seq_len(self) -> int:
         """Tokens per federated LM document (model.seq_len, default 32)."""
         return self.model.seq_len or 32
+
+    @property
+    def resolved_buffer_size(self) -> int:
+        """Buffered-async aggregation threshold M (schedule.buffer_size,
+        0 = the cohort width K — the M=K default is the sync-equivalence
+        anchor, DESIGN.md §6)."""
+        L = self.data.num_clients
+        k = min(self.schedule.clients_per_round or L, L)
+        return self.schedule.buffer_size or k
+
+    @property
+    def resolved_staleness_policy(self) -> str:
+        """Delta-discount policy under buffered_async
+        (schedule.staleness_policy, '' = 'exponential' — the straggler
+        ring's decay**age semantics)."""
+        return self.schedule.staleness_policy or "exponential"
 
     # -- compilation to the engine's config objects -----------------------
     def to_model_config(self) -> ModelConfig:

@@ -4,7 +4,7 @@ The paper trains gFedNTM+CTM over five Semantic Scholar (S2ORC) field-of-
 study subsets with K in {10, 25}, max 100 federated iterations, CTM author
 defaults. SBERT embeddings are 768-d (all-MiniLM/SBERT-base per [19]).
 S2ORC is not redistributable offline; benchmarks use the synthetic stand-in
-corpus documented in DESIGN.md §10.
+corpus documented in DESIGN.md §11.
 """
 from repro.configs.base import NTM, ModelConfig
 

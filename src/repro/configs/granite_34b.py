@@ -20,6 +20,6 @@ CONFIG = ModelConfig(
     max_seq_len=8192,
     rope_theta=10000.0,
     activation="swiglu",
-    # long_500k runs only through this sliding-window variant (DESIGN.md §6)
+    # long_500k runs only through this sliding-window variant (DESIGN.md §7)
     sliding_window=0,
 )

@@ -322,7 +322,8 @@ class PendingUpdate:
 
 
 def combine_arrivals(arrivals: Sequence[Any],
-                     staleness_decay: float) -> Pytree:
+                     staleness_decay: float, *,
+                     clients: Optional[Sequence[int]] = None) -> Pytree:
     """Eq. (2) weighted mean of one round's arriving deltas.
 
     ``arrivals`` is a non-empty list of ``(age, delta, weight)`` and
@@ -330,6 +331,15 @@ def combine_arrivals(arrivals: Sequence[Any],
     ``ValueError`` up front instead of surfacing as NaN params (decay
     outside [0, 1] amplifies or sign-flips stale updates) or an opaque
     IndexError from the empty weighted mean.
+
+    ``clients`` (optional, aligned with ``arrivals``) enables the
+    duplicate-client guard: two weight>0 arrivals from one client id in
+    a single delivery window double-count that client's Eq. (2) weight,
+    so they are REFUSED.  The engine upholds the supersede-at-message
+    contract (a client's newest message replaces its in-flight older
+    delta — the same last-write-wins rule the async service documents in
+    docs/serving.md), so a duplicate reaching this function indicates a
+    routing bug upstream, never a tolerable input.
 
     Zero-weight arrivals are treated as ABSENT, mirroring the fused
     path's fixed-K padding contract: a padded row must not advance any
@@ -350,6 +360,22 @@ def combine_arrivals(arrivals: Sequence[Any],
         raise ValueError(f"staleness_decay must be in [0, 1], got "
                          f"{staleness_decay!r} (values outside amplify or "
                          "sign-flip stale deltas)")
+    arrivals = list(arrivals)
+    if clients is not None:
+        if len(clients) != len(arrivals):
+            raise ValueError(
+                f"combine_arrivals got {len(clients)} client ids for "
+                f"{len(arrivals)} arrivals — the alignment is the whole "
+                "point of the duplicate guard")
+        live = [int(c) for c, a in zip(clients, arrivals) if a[2] > 0]
+        dupes = sorted({c for c in live if live.count(c) > 1})
+        if dupes:
+            raise ValueError(
+                f"combine_arrivals got multiple weight>0 arrivals from "
+                f"client(s) {dupes} in one delivery window — a duplicated "
+                "client double-counts its Eq. (2) weight; the engine "
+                "supersedes in-flight deltas at message time (newest "
+                "wins), so this is a routing bug upstream")
     arrivals = [a for a in arrivals if a[2] > 0]
     if not arrivals:
         raise ValueError("combine_arrivals needs at least one (age, delta, "
@@ -360,6 +386,39 @@ def combine_arrivals(arrivals: Sequence[Any],
         lambda x: x * staleness_decay ** age, d)
         for age, d, _ in arrivals]
     return agg.aggregate_host(scaled, [w for _, _, w in arrivals])
+
+
+def init_delta_buffer(params: Pytree, capacity: int, *,
+                      int_fields: Optional[Mapping[str, int]] = None
+                      ) -> Dict[str, Any]:
+    """The ONE fixed-capacity stacked delta-slot layout.
+
+    Both in-flight delta stores build on this: the fused straggler ring
+    (``FederationEngine._init_ring`` adds ``due``/``age`` bookkeeping)
+    and the buffered-async service's aggregation buffer
+    (``repro.serve.buffer.DeltaBuffer`` adds ``base_version``).  A slot
+    is one client message: ``delta`` leaves are stacked ``(capacity,
+    *leaf.shape)`` zeros, ``weight`` is the Eq. (2) sample count (0 =
+    free slot — zero-weight rows are masked by every combine), and
+    ``client`` records the owning client id (-1 = free) so duplicate
+    deltas from one client can be superseded instead of double-counted.
+
+    ``int_fields`` maps extra per-slot int32 field names to their fill
+    values (e.g. ``{"due": -1}``).
+    """
+    c = int(capacity)
+    if c < 1:
+        raise ValueError(f"delta buffer capacity must be >= 1, got "
+                         f"{capacity!r}")
+    buf: Dict[str, Any] = {
+        "delta": jax.tree_util.tree_map(
+            lambda p: jnp.zeros((c,) + p.shape, p.dtype), params),
+        "weight": jnp.zeros((c,), jnp.float32),
+        "client": jnp.full((c,), -1, jnp.int32),
+    }
+    for name, fill in (int_fields or {}).items():
+        buf[name] = jnp.full((c,), int(fill), jnp.int32)
+    return buf
 
 
 # ---------------------------------------------------------------------------
@@ -601,22 +660,49 @@ class FederationEngine:
         return int(rng.integers(1, rc.max_staleness + 1))
 
     # -- arrival delivery (loop-mode reference) ---------------------------
-    def _deliver_and_apply(self, r: int, fresh) -> tuple:
+    def _deliver_and_apply(self, r: int, fresh, fresh_clients=None) -> tuple:
         """Merge this round's fresh arrivals with due stragglers, run the
         Eq. (2) combine (staleness-discounted) + server-optimizer update.
         Returns ``(rel_change, num_arrived)``."""
         due = [p for p in self.pending if p.due_round <= r]
         self.pending = [p for p in self.pending if p.due_round > r]
+        superseded = 0
+        if fresh_clients is not None:
+            # newest-wins dedupe within the delivery window (the
+            # supersede contract the async service documents,
+            # docs/serving.md): a fresh message beats the same client's
+            # due straggler delta, and among due deltas from one client
+            # the latest issue wins.  Without this, a client landing
+            # twice in one window double-counts its Eq. (2) weight —
+            # the combine_arrivals duplicate guard refuses downstream.
+            fresh_ids = set(fresh_clients)
+            best: Dict[int, PendingUpdate] = {}
+            for p in due:
+                if p.client in fresh_ids:
+                    superseded += 1
+                    continue
+                b = best.get(p.client)
+                if b is None:
+                    best[p.client] = p
+                else:
+                    superseded += 1
+                    if p.issued_round > b.issued_round:
+                        best[p.client] = p
+            due = [p for p in due if best.get(p.client) is p]
         arrivals = list(fresh) + [(r - p.issued_round, p.delta, p.weight)
                                   for p in due]
+        clients = None
+        if fresh_clients is not None:
+            clients = list(fresh_clients) + [p.client for p in due]
         rel = 0.0
         if arrivals:
-            delta_bar = combine_arrivals(arrivals, self.rc.staleness_decay)
+            delta_bar = combine_arrivals(arrivals, self.rc.staleness_decay,
+                                         clients=clients)
             old = self.params
             self.params, self.server_state = self.server_opt.apply(
                 self.params, delta_bar, self.server_state, r)
             rel = float(_rel_change(old, self.params))
-        return rel, len(arrivals)
+        return rel, len(arrivals), superseded
 
     # -- local update + transforms, one client (loop mode) ----------------
     def _local_message(self, l: int, round_key):
@@ -642,7 +728,7 @@ class FederationEngine:
     # -- one round, loop mode ---------------------------------------------
     def _round_loop(self, r: int, round_key, cohort) -> Dict[str, float]:
         losses, loss_w = [], []
-        fresh = []                         # (age=0, message, weight)
+        fresh, fresh_clients = [], []      # (age=0, message, weight)
         for l in cohort:
             l = int(l)
             msg, n, loss = self._local_message(l, round_key)
@@ -651,16 +737,19 @@ class FederationEngine:
             d = self._straggler_delay(r, l)
             if d == 0:
                 fresh.append((0, msg, n))
+                fresh_clients.append(l)
             else:
                 self.pending.append(PendingUpdate(l, r, r + d, msg, n))
 
-        rel, arrived = self._deliver_and_apply(r, fresh)
+        rel, arrived, superseded = self._deliver_and_apply(
+            r, fresh, fresh_clients)
         return {"round": r,
                 "loss": float(np.average(losses, weights=loss_w))
                 if losses else float("nan"),
                 "rel_change": rel,
                 "participants": len(cohort),
                 "arrived": arrived,
+                "superseded": superseded,
                 "in_flight": len(self.pending)}
 
     # -- vmap graph builders ----------------------------------------------
@@ -784,17 +873,42 @@ class FederationEngine:
                          fresh=None):
             """The in-graph equivalent of ``_deliver_and_apply``:
             fresh (K,)-stacked messages (optional) + due ring slots ->
-            staleness-discounted Eq. (2) combine -> gated server update ->
-            cleared slots.  Matches :func:`combine_arrivals` on the same
-            arrivals up to float32 reduction order (tested)."""
+            newest-wins window dedupe -> staleness-discounted Eq. (2)
+            combine -> gated server update -> cleared slots.  Matches
+            :func:`combine_arrivals` + the ``_deliver_and_apply``
+            supersede contract on the same arrivals up to float32
+            reduction order (tested)."""
             occupied = ring["weight"] > 0.0
             due = occupied & (ring["due"] <= round_idx)
+            # newest-wins dedupe within the delivery window (the loop
+            # path's supersede contract, docs/serving.md): among due
+            # slots sharing a client the youngest (smallest age ==
+            # latest issue) wins; a fresh arrival beats any due slot
+            # from the same client.  Padded fresh rows (w == 0) never
+            # supersede — their ids alias client 0.
+            cl, age = ring["client"], ring["age"]
+            idx = jnp.arange(cl.shape[0])
+            same = due[:, None] & due[None, :] \
+                & (cl[:, None] == cl[None, :]) \
+                & (idx[:, None] != idx[None, :])
+            beat = same & ((age[None, :] < age[:, None])
+                           | ((age[None, :] == age[:, None])
+                              & (idx[None, :] < idx[:, None])))
+            sup = beat.any(axis=1)
+            if fresh is not None:
+                f_live = (fresh[2] == 0) \
+                    & (fresh[1].astype(jnp.float32) > 0.0)
+                dup_f = (cl[:, None] == fresh[3][None, :]) \
+                    & f_live[None, :]
+                sup = sup | (due & dup_f.any(axis=1))
+            n_sup = sup.sum()
+            due = due & ~sup
             due_w = jnp.where(due, ring["weight"], 0.0)          # (C,)
             discount = jnp.power(decay, ring["age"].astype(jnp.float32))
             total_w = due_w.sum()
             fresh_w = None
             if fresh is not None:
-                msgs, weights, delays = fresh
+                msgs, weights, delays, _ids = fresh
                 fresh_w = jnp.where(delays == 0,
                                     weights.astype(jnp.float32), 0.0)
                 total_w = total_w + fresh_w.sum()
@@ -849,10 +963,14 @@ class FederationEngine:
             new_params, new_state = sel(params, upd_p), sel(server_state,
                                                             upd_s)
             rel = jnp.where(has, _rel_change(params, new_params), 0.0)
+            # delivered AND superseded slots both leave the ring — a
+            # superseded delta will never deliver
+            gone = due | sup
             ring = dict(ring,
-                        weight=jnp.where(due, 0.0, ring["weight"]),
-                        due=jnp.where(due, -1, ring["due"]))
-            return new_params, new_state, ring, rel, due.sum(), has
+                        weight=jnp.where(gone, 0.0, ring["weight"]),
+                        due=jnp.where(gone, -1, ring["due"]),
+                        client=jnp.where(gone, -1, ring["client"]))
+            return new_params, new_state, ring, rel, due.sum(), has, n_sup
 
         def fused_stale(params, server_state, tstate, ring, stacked,
                         e_counts, weights, delays, ids, round_key,
@@ -869,8 +987,9 @@ class FederationEngine:
             msgs = pin_rows(msgs)
             w = weights.astype(jnp.float32)
             msgs, tstate = transform_stage(msgs, tstate, round_key, ids, w)
-            new_params, new_state, ring, rel, n_due, _ = ring_deliver(
-                params, server_state, ring, round_idx, (msgs, w, delays))
+            new_params, new_state, ring, rel, n_due, _, n_sup = \
+                ring_deliver(params, server_state, ring, round_idx,
+                             (msgs, w, delays, ids))
             # insert this round's stragglers into the freed slots:
             # j-th straggler (cohort order) -> j-th free slot (slot order),
             # computed with cumsum ranks so the scatter is one fixed-shape
@@ -890,21 +1009,23 @@ class FederationEngine:
                 weight=ring["weight"].at[tgt].set(w, mode="drop"),
                 due=ring["due"].at[tgt].set(
                     round_idx + delays, mode="drop"),
-                age=ring["age"].at[tgt].set(delays, mode="drop"))
+                age=ring["age"].at[tgt].set(delays, mode="drop"),
+                client=ring["client"].at[tgt].set(ids, mode="drop"))
             arrived = ((delays == 0) & (w > 0)).sum() + n_due
             in_flight = (ring["weight"] > 0).sum()
             return (new_params, new_state, tstate, ring, losses, rel,
-                    arrived, in_flight)
+                    arrived, in_flight, n_sup)
 
         def deliver_only(params, server_state, ring, round_idx):
             """Empty-cohort round (unpadded mode): due stragglers still
             deliver.  With ``pad_cohorts`` the all-padded cohort runs
             through ``fused_stale`` instead — one graph for every round."""
             counts["deliver_only"] = counts.get("deliver_only", 0) + 1
-            new_params, new_state, ring, rel, n_due, _ = ring_deliver(
-                params, server_state, ring, round_idx)
+            new_params, new_state, ring, rel, n_due, _, n_sup = \
+                ring_deliver(params, server_state, ring, round_idx)
             in_flight = (ring["weight"] > 0).sum()
-            return new_params, new_state, ring, rel, n_due, in_flight
+            return (new_params, new_state, ring, rel, n_due, in_flight,
+                    n_sup)
 
         # donation reuses the param/server-state/transform-state/ring
         # buffers in place on accelerators; CPU ignores donation, skip
@@ -938,11 +1059,11 @@ class FederationEngine:
             #  weights, delays, ids, round_key, round_idx)
             in_shardings=(rep, rep, row, row, row, row, row, row, row,
                           rep, rep),
-            out_shardings=(rep, rep, row, row, row, rep, rep, rep))
+            out_shardings=(rep, rep, row, row, row, rep, rep, rep, rep))
         self._deliver_only = jax.jit(
             deliver_only, donate_argnums=(0, 1, 2) if dn else (),
             in_shardings=(rep, rep, row, rep),
-            out_shardings=(rep, rep, row, rep, rep, rep))
+            out_shardings=(rep, rep, row, rep, rep, rep, rep))
 
     def _init_ring(self):
         """Fixed-capacity device ring buffer for in-flight deltas.
@@ -953,13 +1074,8 @@ class FederationEngine:
         most K*(max_staleness-1) older entries are still in flight.
         """
         c = max(1, self.scheduler.clients_per_round * self.rc.max_staleness)
-        return {
-            "delta": jax.tree_util.tree_map(
-                lambda p: jnp.zeros((c,) + p.shape, p.dtype), self.params),
-            "weight": jnp.zeros((c,), jnp.float32),
-            "due": jnp.full((c,), -1, jnp.int32),
-            "age": jnp.zeros((c,), jnp.int32),
-        }
+        return init_delta_buffer(self.params, c,
+                                 int_fields={"due": -1, "age": 0})
 
     def _zero_cohort(self, k_fix: int):
         """All-padded stacked round template (cached): the fixed-K shape
@@ -989,16 +1105,16 @@ class FederationEngine:
 
         if not cohort and not self._pad:
             # unpadded mode: nobody active; due stragglers still deliver
-            rel, arrived, in_flight = 0.0, 0, 0
+            rel, arrived, in_flight, superseded = 0.0, 0, 0, 0
             if self._stale_enabled and self._ring is not None:
                 (self.params, self.server_state, self._ring, rel, arrived,
-                 in_flight) = self._deliver_only(
+                 in_flight, n_sup) = self._deliver_only(
                     self.params, self.server_state, self._ring, ri)
                 rel, arrived = float(rel), int(arrived)
-                in_flight = int(in_flight)
+                in_flight, superseded = int(in_flight), int(n_sup)
             return {"round": r, "loss": float("nan"), "rel_change": rel,
                     "participants": 0, "arrived": arrived,
-                    "in_flight": in_flight}
+                    "superseded": superseded, "in_flight": in_flight}
 
         if cohort:
             stacked, counts = stacked_round_batches(
@@ -1021,6 +1137,7 @@ class FederationEngine:
                            < e_counts[:, None])
         weights = counts.sum(axis=1)        # (K,) Eq. (2) weights, pad=0
 
+        superseded = 0
         if not self._stale_enabled:
             # fast path: one jitted call per round, donated buffers
             (self.params, self.server_state, self._tstate, losses,
@@ -1038,11 +1155,12 @@ class FederationEngine:
             delays[:len(cohort)] = [self._straggler_delay(r, l)
                                     for l in cohort]
             (self.params, self.server_state, self._tstate, self._ring,
-             losses, rel, arrived, in_flight) = self._fused_stale(
+             losses, rel, arrived, in_flight, n_sup) = self._fused_stale(
                 self.params, self.server_state, self._tstate, self._ring,
                 stacked, e_counts, weights, delays, ids, round_key, ri)
             rel = float(rel)
             arrived, in_flight = int(arrived), int(in_flight)
+            superseded = int(n_sup)
 
         losses = np.asarray(losses)             # (K, E) per-epoch means
         # zero-count epochs (padded rows under homogeneous E, where the
@@ -1058,6 +1176,7 @@ class FederationEngine:
                 "rel_change": rel,
                 "participants": len(cohort),
                 "arrived": arrived,
+                "superseded": superseded,
                 "in_flight": in_flight}
 
     # -- stopping ---------------------------------------------------------
@@ -1070,7 +1189,9 @@ class FederationEngine:
         return bool(rec["arrived"]) and rec["rel_change"] < rel_tol
 
     # -- snapshot / resume -------------------------------------------------
-    STATE_FORMAT = 1
+    # format 2: the straggler ring gained a per-slot "client" array (the
+    # supersede-at-message contract) — format-1 rings cannot be resumed
+    STATE_FORMAT = 2
 
     def state_dict(self) -> Dict[str, Any]:
         """Host-numpy snapshot of EVERYTHING the next round depends on.

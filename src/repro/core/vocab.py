@@ -13,7 +13,7 @@ c)) == merge(merge(a, b), c) and merge(a, empty) == a — which is what
 makes the consensus stage order-independent across stragglers.
 
 For the LM architectures the same machinery merges client *token*
-vocabularies (DESIGN.md §7): ``consensus_token_map`` returns old-id ->
+vocabularies (DESIGN.md §8): ``consensus_token_map`` returns old-id ->
 new-id tables per client.
 """
 from __future__ import annotations

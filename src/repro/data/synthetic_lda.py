@@ -133,7 +133,7 @@ def fake_contextual_embeddings(bows: np.ndarray, dim: int,
     meaningless but shape/distribution-correct, and *documents with similar
     BoWs get similar embeddings*, which is the property CTM relies on.
     Used where the offline container cannot run a real SBERT model
-    (documented data gate, DESIGN.md §10).
+    (documented data gate, DESIGN.md §11).
     """
     rng = np.random.default_rng(seed)
     proj = rng.standard_normal((bows.shape[1], dim)).astype(np.float32)

@@ -79,7 +79,7 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    serve(args)
+    return serve(args)
 
 
 if __name__ == "__main__":

@@ -76,7 +76,7 @@ def amwmd(beta_ref: np.ndarray, beta_eval: np.ndarray,
 
     ``embeddings`` (V, dim) is the word-embedding table — real vectors in
     the paper (gensim word2vec); benchmarks use fixed random embeddings
-    with locality induced by the generative model (DESIGN.md §10).
+    with locality induced by the generative model (DESIGN.md §11).
     """
     ref_td = topic_descriptions(beta_ref, top_n)
     ev_td = topic_descriptions(beta_eval, top_n)

@@ -1,0 +1,17 @@
+"""`repro.serve` — the buffered-async federation service.
+
+The long-running counterpart of :class:`repro.api.Federation`: a
+FedBuff-style server (`FederationService`) that accepts client delta
+uploads with no round barrier, aggregates whenever M deltas accumulate
+in a generalized ring buffer (`DeltaBuffer`), and serves the current
+global model to inference traffic from the same process.  Specs with
+``schedule.mode="buffered_async"`` build here; see docs/serving.md and
+DESIGN.md §6 for the correctness contract.
+"""
+from repro.serve.buffer import DeltaBuffer
+from repro.serve.service import (REJECT_REASONS, FederationService,
+                                 UploadTimeout, sync_twin_spec)
+from repro.serve.traffic import run_traffic
+
+__all__ = ["DeltaBuffer", "FederationService", "UploadTimeout",
+           "REJECT_REASONS", "sync_twin_spec", "run_traffic"]

@@ -1,0 +1,118 @@
+"""The buffered-async aggregation buffer — the straggler ring, generalized.
+
+`DeltaBuffer` is the FedBuff accumulation buffer of the federation
+service (docs/serving.md): a fixed-capacity stack of M device-resident
+delta slots built on the SAME layout as the engine's in-graph straggler
+ring (:func:`repro.core.engine.init_delta_buffer` — stacked ``(M, ...)``
+delta leaves + per-slot ``weight``/``client`` arrays), with a
+``base_version`` array in place of the ring's round-indexed
+``due``/``age`` bookkeeping: under buffered-async there are no rounds,
+so staleness is the VERSION LAG ``current_version - base_version``
+measured when aggregation fires.
+
+Invariants (the service's documented contract, enforced here):
+
+* one slot per client — a client's newer upload overwrites its own
+  occupied slot in place (last-write-wins; the service records the
+  displaced delta as ``superseded``), so one aggregation can never
+  double-count a client's Eq. (2) weight;
+* slots fill densely (``0..count-1``) and the buffer fully resets at
+  aggregation, so ``count`` alone describes occupancy;
+* free slots carry weight 0 / client -1 — every combine in
+  ``kernels/ops.py`` masks zero-weight rows, so a partial buffer (the
+  shutdown drain) aggregates correctly without slicing.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import Pytree, init_delta_buffer
+
+
+class DeltaBuffer:
+    """Fixed-capacity stacked delta buffer (one slot per client)."""
+
+    def __init__(self, params_template: Pytree, capacity: int):
+        self.capacity = int(capacity)
+        self._buf = init_delta_buffer(params_template, self.capacity,
+                                      int_fields={"base_version": -1})
+        self.count = 0
+
+        def _ins(buf, slot, delta, weight, client, version):
+            return dict(
+                delta=jax.tree_util.tree_map(
+                    lambda b, d: b.at[slot].set(d.astype(b.dtype)),
+                    buf["delta"], delta),
+                weight=buf["weight"].at[slot].set(weight),
+                client=buf["client"].at[slot].set(client),
+                base_version=buf["base_version"].at[slot].set(version))
+        # one dispatch per upload; the slot index is traced, so every
+        # insert reuses one compiled program
+        self._ins = jax.jit(_ins)
+
+    # -- occupancy ---------------------------------------------------------
+    @property
+    def full(self) -> bool:
+        return self.count >= self.capacity
+
+    def slot_of(self, client: int) -> int:
+        """Occupied slot holding this client's in-flight delta, or -1."""
+        if not self.count:
+            return -1
+        cl = np.asarray(self._buf["client"][:self.count])
+        hits = np.nonzero(cl == int(client))[0]
+        return int(hits[0]) if hits.size else -1
+
+    # -- mutation ----------------------------------------------------------
+    def insert(self, delta: Pytree, weight: float, client: int,
+               base_version: int, *, slot: int = -1) -> int:
+        """Write a delta into ``slot`` (-1 = next free), return the slot."""
+        s = self.count if slot < 0 else int(slot)
+        if s >= self.capacity:
+            raise RuntimeError(
+                f"DeltaBuffer overflow: slot {s} of capacity "
+                f"{self.capacity} — the service must aggregate when the "
+                "buffer fills, inserts past M are a control-flow bug")
+        self._buf = self._ins(self._buf, jnp.int32(s), delta,
+                              jnp.float32(weight), jnp.int32(client),
+                              jnp.int32(base_version))
+        if slot < 0:
+            self.count += 1
+        return s
+
+    def reset(self) -> None:
+        """Clear all slots (weight 0 / client -1); delta payloads of
+        cleared slots are left in place — every combine masks them."""
+        self._buf = dict(
+            self._buf,
+            weight=jnp.zeros_like(self._buf["weight"]),
+            client=jnp.full_like(self._buf["client"], -1),
+            base_version=jnp.full_like(self._buf["base_version"], -1))
+        self.count = 0
+
+    # -- aggregation view --------------------------------------------------
+    def stacked(self) -> Tuple[Pytree, Any, Any, Any]:
+        """``(deltas, weights, clients, base_versions)`` — the full
+        ``(M, ...)`` stacks (free slots weight-0-masked downstream)."""
+        b = self._buf
+        return b["delta"], b["weight"], b["client"], b["base_version"]
+
+    # -- snapshot ----------------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        host = lambda t: jax.tree_util.tree_map(  # noqa: E731
+            lambda x: np.asarray(jax.device_get(x)), t)
+        return {"capacity": self.capacity, "count": self.count,
+                "buf": host(self._buf)}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        if int(state["capacity"]) != self.capacity:
+            raise ValueError(
+                f"snapshot buffer capacity {state['capacity']} != this "
+                f"buffer's {self.capacity}; rebuild the service from the "
+                "snapshot's spec")
+        self._buf = jax.tree_util.tree_map(jnp.asarray, state["buf"])
+        self.count = int(state["count"])

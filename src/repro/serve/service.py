@@ -1,0 +1,460 @@
+"""`FederationService` — FedBuff-style buffered-async federation + serving.
+
+The long-running counterpart of :class:`repro.api.Federation` for specs
+with ``schedule.mode="buffered_async"`` (docs/serving.md, DESIGN.md §6).
+One process, two surfaces:
+
+* **train**: clients fetch the current global model version, compute a
+  local update (the engine's own loop-path local-update stage — same
+  minibatch draws, transforms and Eq. (2) weights as a sync round), and
+  ``upload`` the delta.  Whenever M deltas accumulate in the
+  :class:`repro.serve.buffer.DeltaBuffer`, the service applies one
+  staleness-discounted Eq. (2) combine (``kernels/ops.py``) + server
+  optimizer step and advances the model version — no round barrier.
+* **serve**: ``infer`` (batched doc→topic posteriors for the NTM
+  families) and ``generate`` (greedy decode via the registry bundle's
+  prefill/decode path for ``model.family="lm"``) read the live model
+  through an atomic reference swap, so inference traffic never sees a
+  half-aggregated model.
+
+Robustness contract (pinned in tests/test_serve_service.py):
+
+* uploads retry transient transport failures with exponential backoff;
+* late (version lag > ``schedule.max_staleness``), duplicate
+  (superseded by the same client's newer upload) and malformed deltas
+  are rejected with recorded reasons (:data:`REJECT_REASONS`) — never
+  silently dropped;
+* ``shutdown(drain=True)`` flushes a partial buffer, then refuses new
+  uploads;
+* ``state_dict``/``load_state_dict`` resume is bitwise: a restored
+  service continues the exact trajectory (same aggregation points,
+  same versions).
+
+Anchor equivalence (DESIGN.md §6): with ``M=K``, ``max_staleness=0``
+and in-order arrivals, every aggregation is exactly one synchronous
+FedAvg round — the trajectory matches ``Federation.from_spec`` on the
+sync twin spec within the repo-wide ≤1e-5 bound.
+"""
+from __future__ import annotations
+
+import pickle
+import time
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.federation import Federation
+from repro.api.spec import FederationSpec, atomic_write, spec_replace
+from repro.core.engine import Pytree
+from repro.core.ntm import prodlda
+from repro.kernels import ops as kops
+from repro.serve.buffer import DeltaBuffer
+
+# every rejection the service can record; ci_gate.py hard-fails a bench
+# payload whose rejection ledger carries a reason outside this set
+REJECT_REASONS = ("stale", "superseded", "unknown_client", "draining",
+                  "zero_weight", "bad_version", "upload_failed")
+
+SERVE_STATE_FORMAT = 1
+
+
+class UploadTimeout(RuntimeError):
+    """Transient transport failure during an upload attempt (retryable)."""
+
+
+def sync_twin_spec(spec: FederationSpec) -> FederationSpec:
+    """The round-synchronous twin of a buffered-async spec: identical
+    model/data/transforms/server-opt/execution sections with the async
+    schedule knobs reset.  The service wires its model, corpus, clients
+    and server optimizer through ``Federation.from_spec(twin)``, and the
+    M=K/staleness-0 anchor test compares against ``twin.run()`` — one
+    construction path, so service and simulator can never drift."""
+    return spec_replace(spec, {"schedule.mode": "sync",
+                               "schedule.buffer_size": 0,
+                               "schedule.staleness_policy": "",
+                               "schedule.max_staleness": 0})
+
+
+class FederationService:
+    """Buffered-async federation server + live model serving (module
+    docstring; construction via :meth:`from_spec`)."""
+
+    def __init__(self, spec: FederationSpec, fed: Federation):
+        if spec.schedule.mode != "buffered_async":
+            raise ValueError(
+                "FederationService runs schedule.mode='buffered_async' "
+                "specs; a sync spec belongs to Federation.from_spec "
+                "(docs/serving.md)")
+        self.spec = spec
+        self._fed = fed
+        eng = fed.engine
+        self.buffer_size = spec.resolved_buffer_size
+        self.max_staleness = spec.schedule.max_staleness
+        self.staleness_policy = spec.resolved_staleness_policy
+        self.version = 0
+        self.agg_index = 0
+        self.draining = False
+        self.server_state = eng.server_state
+        self.buffer = DeltaBuffer(eng.params, self.buffer_size)
+        self.client_rounds = [0] * spec.data.num_clients
+        self.rejections: List[Dict[str, Any]] = []
+        self.history: List[Dict[str, Any]] = []
+        # the serving reference: ONE attribute holding (version, params).
+        # Aggregation publishes by rebinding it — a single atomic swap,
+        # so a concurrent reader sees either the old or the new model,
+        # never a mix (hot-swap atomicity, docs/serving.md)
+        self._live = (0, eng.params)
+        self._agg_fn = self._build_agg_fn()
+        self._infer_fn = None
+        self._infer_ctx_fn = None
+        self._bundle = None
+        self._gen_fns: Dict[Any, Any] = {}
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_spec(cls, spec: Union[FederationSpec, Mapping, str], *,
+                  corpus=None, clients=None, loss_fn=None,
+                  loss_sum_fn=None, init_params=None
+                  ) -> "FederationService":
+        """Compile a buffered-async spec (object, mapping, or registry
+        name) into a running service.  The override surface matches
+        ``Federation.from_spec``."""
+        if isinstance(spec, str):
+            from repro.api.registry import scenario_spec
+            spec = scenario_spec(spec)
+        elif isinstance(spec, Mapping):
+            spec = FederationSpec.from_dict(spec)
+        spec.validate()
+        if spec.schedule.mode != "buffered_async":
+            raise ValueError(
+                "FederationService.from_spec needs "
+                "schedule.mode='buffered_async'; run sync specs through "
+                "Federation.from_spec (docs/serving.md)")
+        fed = Federation.from_spec(sync_twin_spec(spec), corpus=corpus,
+                                   clients=clients, loss_fn=loss_fn,
+                                   loss_sum_fn=loss_sum_fn,
+                                   init_params=init_params)
+        return cls(spec, fed)
+
+    # -- aggregation graph -------------------------------------------------
+    def _build_agg_fn(self):
+        decay = float(self.spec.schedule.staleness_decay)
+        policy = self.staleness_policy
+        kb = self.spec.execution.kernel_backend
+        server_opt = self._fed.engine.server_opt
+        tmap = jax.tree_util.tree_map
+
+        def agg(params, server_state, deltas, weights, base_versions,
+                version, agg_idx):
+            # staleness = version lag at aggregation time; the discount
+            # scales the DELTA, never the Eq. (2) weight (the
+            # combine_arrivals invariant, DESIGN.md §6).  Free slots
+            # (base_version -1) get a garbage age but carry weight 0 —
+            # the combine masks them.
+            ages = jnp.maximum(
+                (version - base_versions).astype(jnp.float32), 0.0)
+            if policy == "exponential":
+                disc = jnp.power(jnp.float32(decay), ages)
+            else:                        # "polynomial": FedBuff's choice
+                disc = jax.lax.rsqrt(1.0 + ages)
+            scaled = tmap(
+                lambda x: x * disc.reshape(
+                    (-1,) + (1,) * (x.ndim - 1)).astype(x.dtype), deltas)
+            bar = kops.fed_weighted_combine(
+                scaled, weights.astype(jnp.float32), backend=kb)
+            return server_opt.apply(params, bar, server_state, agg_idx)
+
+        return jax.jit(agg)
+
+    # -- the train surface -------------------------------------------------
+    def fetch_model(self):
+        """What a client pulls before training: ``(version, params)``."""
+        return self._live
+
+    def client_update(self, client: int):
+        """One client's local update against the CURRENT published model.
+
+        Runs the engine's own loop-path local-update + transform stage
+        (``FederationEngine._local_message``) with the per-client upload
+        counter as the round index of the seed schedule — under in-order
+        arrivals the counter equals the sync round index, which is what
+        makes the M=K anchor trajectory reproduce sync FedAvg exactly.
+        Returns ``(base_version, delta, weight)``.
+        """
+        L = self.spec.data.num_clients
+        if not 0 <= int(client) < L:
+            raise ValueError(f"unknown client {client!r}; this federation "
+                             f"registers clients 0..{L - 1}")
+        eng = self._fed.engine
+        version, params = self._live
+        eng.params = params
+        t = self.client_rounds[client]
+        round_key = jax.random.PRNGKey(
+            self.spec.execution.seed * 100003 + t)
+        msg, n, _loss = eng._local_message(int(client), round_key)
+        self.client_rounds[client] = t + 1
+        return version, msg, float(n)
+
+    def submit(self, client: int, delta: Pytree, weight: float, *,
+               base_version: int) -> Dict[str, Any]:
+        """Offer one delta to the aggregation buffer.
+
+        Returns a receipt ``{"accepted", "reason", "version", "slot"}``;
+        rejected deltas are recorded in :attr:`rejections` with one of
+        :data:`REJECT_REASONS` — the ledger is part of the bench payload
+        and gated in CI, so a new rejection path cannot land unnamed.
+        """
+        client = int(client)
+        receipt: Dict[str, Any] = {"client": client, "accepted": False,
+                                   "reason": None, "version": self.version,
+                                   "slot": -1}
+        L = self.spec.data.num_clients
+        if self.draining:
+            return self._reject(receipt, base_version, "draining")
+        if not 0 <= client < L:
+            return self._reject(receipt, base_version, "unknown_client")
+        if not np.isfinite(weight) or weight <= 0:
+            return self._reject(receipt, base_version, "zero_weight")
+        if not isinstance(base_version, (int, np.integer)) \
+                or base_version < 0 or base_version > self.version:
+            return self._reject(receipt, base_version, "bad_version")
+        if self.version - base_version > self.max_staleness:
+            return self._reject(receipt, base_version, "stale")
+        slot = self.buffer.slot_of(client)
+        if slot >= 0:
+            # last-write-wins: the in-flight delta is displaced and its
+            # rejection recorded — one slot per client, so one
+            # aggregation can never double-count a client's weight
+            self._record(client, base_version, "superseded")
+            receipt["superseded_previous"] = True
+        slot = self.buffer.insert(delta, weight, client,
+                                  int(base_version), slot=slot)
+        receipt.update(accepted=True, slot=slot)
+        if self.buffer.full:
+            self._aggregate()
+        return receipt
+
+    def upload(self, client: int, *, max_retries: int = 3,
+               backoff_s: float = 0.05, transport=None,
+               sleep_fn=None) -> Dict[str, Any]:
+        """``client_update`` + ``submit`` with retry/backoff.
+
+        ``transport(client, attempt)`` models the wire: raising
+        :class:`UploadTimeout` marks the attempt failed and the upload
+        retries after ``backoff_s * 2**attempt`` (``sleep_fn``
+        injectable so tests stay instant).  After ``max_retries``
+        failures the delta is dropped with reason ``upload_failed``.
+        The delta is computed ONCE — a retry resubmits the same bytes,
+        and the staleness check runs at submit time, so a delta that
+        went stale while retrying is rejected as ``stale``.
+        """
+        if self.draining:
+            receipt = {"client": int(client), "accepted": False,
+                       "reason": None, "version": self.version, "slot": -1}
+            return self._reject(receipt, self.version, "draining")
+        base_version, delta, weight = self.client_update(client)
+        sleep = sleep_fn if sleep_fn is not None else time.sleep
+        attempt = 0
+        while True:
+            try:
+                if transport is not None:
+                    transport(int(client), attempt)
+                return self.submit(client, delta, weight,
+                                   base_version=base_version)
+            except UploadTimeout:
+                attempt += 1
+                if attempt > max_retries:
+                    receipt = {"client": int(client), "accepted": False,
+                               "reason": None, "version": self.version,
+                               "slot": -1}
+                    return self._reject(receipt, base_version,
+                                        "upload_failed")
+                sleep(backoff_s * (2 ** (attempt - 1)))
+
+    def _reject(self, receipt: Dict[str, Any], base_version,
+                reason: str) -> Dict[str, Any]:
+        self._record(receipt["client"], base_version, reason)
+        receipt["reason"] = reason
+        return receipt
+
+    def _record(self, client: int, base_version, reason: str) -> None:
+        assert reason in REJECT_REASONS, reason
+        self.rejections.append({"client": int(client),
+                                "base_version": int(base_version),
+                                "at_version": self.version,
+                                "reason": reason})
+
+    @property
+    def rejection_counts(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for r in self.rejections:
+            counts[r["reason"]] = counts.get(r["reason"], 0) + 1
+        return counts
+
+    def _aggregate(self) -> None:
+        """One FedBuff aggregation: discount, combine, server step,
+        version bump, atomic publish, buffer reset."""
+        deltas, weights, clients, base_versions = self.buffer.stacked()
+        n = self.buffer.count
+        params = self._live[1]
+        new_params, self.server_state = self._agg_fn(
+            params, self.server_state, deltas, weights, base_versions,
+            jnp.int32(self.version), jnp.int32(self.agg_index))
+        ages = self.version - np.asarray(base_versions)[:n]
+        self.agg_index += 1
+        self.version += 1
+        self.history.append({
+            "agg": self.agg_index - 1, "version": self.version,
+            "arrivals": n,
+            "mean_age": float(ages.mean()) if n else 0.0,
+            "max_age": int(ages.max()) if n else 0})
+        self.buffer.reset()
+        self._live = (self.version, new_params)   # the atomic hot swap
+
+    def shutdown(self, *, drain: bool = True) -> Dict[str, Any]:
+        """Stop accepting uploads; with ``drain`` a partially-filled
+        buffer aggregates first (zero-weight slots are masked, so the
+        partial Eq. (2) combine is exact over what arrived)."""
+        flushed = 0
+        if drain and self.buffer.count:
+            flushed = self.buffer.count
+            self._aggregate()
+        self.draining = True
+        return {"version": self.version, "aggregations": self.agg_index,
+                "flushed": flushed}
+
+    # -- the serve surface -------------------------------------------------
+    def infer(self, bow, contextual=None):
+        """Batched doc→topic posteriors ``theta (B, T)`` from the live
+        global model (``prodlda.infer_theta``, train=False)."""
+        if self.spec.model.family == "lm":
+            raise ValueError(
+                "doc->topic posteriors are an NTM surface; an LM-family "
+                "service serves generate() (docs/serving.md)")
+        params = self._live[1]
+        bow = jnp.asarray(bow, jnp.float32)
+        if self._infer_fn is None:
+            cfg = self._fed.model_cfg
+            self._infer_fn = jax.jit(
+                lambda p, b: prodlda.infer_theta(p, cfg, b))
+            self._infer_ctx_fn = jax.jit(
+                lambda p, b, c: prodlda.infer_theta(p, cfg, b,
+                                                    contextual=c))
+        if contextual is None:
+            return self._infer_fn(params, bow)
+        return self._infer_ctx_fn(params, bow,
+                                  jnp.asarray(contextual, jnp.float32))
+
+    def generate(self, prompts, max_new: int = 16):
+        """Greedy generation from the live global model
+        (``model.family="lm"`` only): batched prefill + lock-step decode
+        through the registry bundle — the same path as
+        ``launch/serve.py``.  Returns ``(B, max_new)`` int32 tokens."""
+        if self.spec.model.family != "lm":
+            raise ValueError(
+                "generation is an LM surface (model.family='lm'); the "
+                "NTM service serves doc->topic posteriors via infer() "
+                "(docs/serving.md)")
+        if self._bundle is None:
+            from repro.models.registry import build_model
+            self._bundle = build_model(self._fed.model_cfg,
+                                       dtype=jnp.float32)
+        b = self._bundle
+        prompts = jnp.asarray(prompts, jnp.int32)
+        params = self._live[1]
+        max_len = prompts.shape[1] + int(max_new)
+        key = (prompts.shape[1], int(max_new))
+        if key not in self._gen_fns:
+            self._gen_fns[key] = (
+                jax.jit(lambda p, t: b.prefill(p, {"tokens": t},
+                                               max_len=max_len)),
+                jax.jit(lambda p, c, t: b.decode_step(p, c, t)))
+        prefill, decode = self._gen_fns[key]
+        logits, cache = prefill(params, prompts)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None] \
+            .astype(jnp.int32)
+        out = [tok]
+        for _ in range(int(max_new) - 1):
+            logits, cache = decode(params, cache, tok)
+            tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None] \
+                .astype(jnp.int32)
+            out.append(tok)
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    # -- snapshot / resume -------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        """Everything the next upload depends on — restoring into a
+        service built from the SAME spec continues the trajectory
+        bitwise (tests/test_serve_service.py)."""
+        host = lambda t: jax.tree_util.tree_map(  # noqa: E731
+            lambda x: np.asarray(jax.device_get(x)), t)
+        return {"format": SERVE_STATE_FORMAT,
+                "spec": self.spec.to_dict(),
+                "version": self.version,
+                "agg_index": self.agg_index,
+                "draining": self.draining,
+                "params": host(self._live[1]),
+                "server_state": host(self.server_state),
+                "buffer": self.buffer.state_dict(),
+                "client_rounds": list(self.client_rounds),
+                "rejections": [dict(r) for r in self.rejections],
+                "history": [dict(h) for h in self.history]}
+
+    def load_state_dict(self, state: Mapping[str, Any]) -> None:
+        fmt = state.get("format")
+        if fmt != SERVE_STATE_FORMAT:
+            raise ValueError(
+                f"unsupported service state format {fmt!r} (this build "
+                f"writes {SERVE_STATE_FORMAT})")
+        if state["spec"] != self.spec.to_dict():
+            raise ValueError(
+                "snapshot was taken under a different spec; resume "
+                "never reinterprets — rebuild the service from the "
+                "snapshot's spec")
+        dev = lambda t: jax.tree_util.tree_map(jnp.asarray, t)  # noqa: E731
+        self.version = int(state["version"])
+        self.agg_index = int(state["agg_index"])
+        self.draining = bool(state["draining"])
+        self.server_state = dev(state["server_state"])
+        self.buffer.load_state_dict(state["buffer"])
+        self.client_rounds = [int(t) for t in state["client_rounds"]]
+        self.rejections = [dict(r) for r in state["rejections"]]
+        self.history = [dict(h) for h in state["history"]]
+        self._live = (self.version, dev(state["params"]))
+
+    def save_state(self, path: str) -> str:
+        """Atomic pickle of :meth:`state_dict` (trusted-input format)."""
+        return atomic_write(
+            path, lambda f: pickle.dump(self.state_dict(), f),
+            binary=True)
+
+    def load_state(self, path: str) -> None:
+        with open(path, "rb") as f:
+            self.load_state_dict(pickle.load(f))
+
+    def export_federation_state(self) -> Dict[str, Any]:
+        """The live global model as a SYNC ``Federation.state_dict()``
+        snapshot — the hot-swap/checkpoint format: any sync tooling
+        (``Federation.load_state_dict``, ``evaluate``) can open what the
+        service publishes.  The embedded spec is the sync twin and the
+        round counter is the aggregation index."""
+        eng = self._fed.engine
+        eng.params = self._live[1]
+        eng.server_state = self.server_state
+        eng._round = self.agg_index
+        return self._fed.state_dict()
+
+    def save_checkpoint(self, path: str) -> str:
+        """Atomic ``Federation``-format checkpoint of the live model."""
+        return atomic_write(
+            path,
+            lambda f: pickle.dump(self.export_federation_state(), f),
+            binary=True)
+
+    def evaluate(self) -> Dict[str, float]:
+        """Held-out metrics of the live global model (the sync twin's
+        ``Federation.evaluate`` over the published params)."""
+        self._fed.engine.params = self._live[1]
+        return self._fed.evaluate()

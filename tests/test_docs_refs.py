@@ -1,0 +1,19 @@
+"""Docs stay live: every intra-repo reference in README.md, DESIGN.md
+and docs/*.md must resolve (markdown links, backtick file paths, and
+`file.py:symbol` anchors).  Tier-1 wrapper over the CI step
+`benchmarks/check_docs.py` so a rename that orphans a doc reference
+fails the fast suite, not just the workflow."""
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_all_doc_references_resolve():
+    sys.path.insert(0, REPO_ROOT)
+    try:
+        from benchmarks.check_docs import check_docs
+    finally:
+        sys.path.pop(0)
+    problems = check_docs(REPO_ROOT)
+    assert not problems, "\n".join(problems)

@@ -174,6 +174,30 @@ def test_combine_arrivals_validates_inputs():
         combine_arrivals([], 0.5)
 
 
+def test_combine_arrivals_refuses_duplicate_clients():
+    """REGRESSION (PR-9 bugfix): two weight>0 arrivals from one client
+    id in a single delivery window double-count that client's Eq. (2)
+    weight.  The engine supersedes in-flight deltas at message time
+    (newest wins), so a duplicate reaching the combine is a routing bug
+    and must be refused, never averaged."""
+    delta = {"w": jnp.ones((2,), jnp.float32)}
+    arrivals = [(0, delta, 1.0), (1, delta, 2.0), (0, delta, 3.0)]
+    with pytest.raises(ValueError, match="client\\(s\\) \\[2\\]"):
+        combine_arrivals(arrivals, 0.5, clients=[2, 5, 2])
+    # misaligned ids are refused too — silent zip-truncation would
+    # disarm the guard exactly when the caller miscounted
+    with pytest.raises(ValueError, match="alignment"):
+        combine_arrivals(arrivals, 0.5, clients=[2, 5])
+    # a zero-weight duplicate is ABSENT (the fused path's padding
+    # contract), so it must NOT trip the guard
+    out = combine_arrivals([(0, delta, 1.0), (0, delta, 0.0)], 0.5,
+                           clients=[2, 2])
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0, rtol=1e-6)
+    # distinct clients pass through unchanged
+    out = combine_arrivals(arrivals, 0.5, clients=[0, 1, 2])
+    assert np.isfinite(np.asarray(out["w"])).all()
+
+
 def test_engine_refuses_unimplemented_privacy_features(setup):
     """Grad-level privacy knobs must not be silently dropped."""
     cfg, loss, init, clients = setup

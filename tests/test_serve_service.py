@@ -1,0 +1,339 @@
+"""Buffered-async federation service (PR 9 acceptance pins).
+
+The contracts of docs/serving.md and DESIGN.md §6: the M=K /
+staleness-0 sync-equivalence anchor, the rejection ledger (stale /
+superseded / unknown / draining / zero-weight / bad-version /
+upload-failed — all recorded, never silent), upload retry with
+exponential backoff, drain-on-shutdown, bitwise snapshot/resume, the
+serve surface (live posteriors + LM generation), and the
+construction-time refusals in both directions.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (DataSpec, ExecutionSpec, Federation, FederationSpec,
+                       ModelSpec, ScheduleSpec, build_corpus, scenario_spec,
+                       spec_replace)
+from repro.serve import (REJECT_REASONS, DeltaBuffer, FederationService,
+                         UploadTimeout, run_traffic, sync_twin_spec)
+from conftest import max_param_dev
+
+
+def _async_spec(**overrides):
+    base = spec_replace(
+        FederationSpec(
+            model=ModelSpec(vocab=64, topics=4, hidden=16),
+            data=DataSpec(num_clients=3, docs_per_node=40,
+                          val_docs_per_node=8),
+            schedule=ScheduleSpec(rounds=3),
+            execution=ExecutionSpec(batch_size=16, learning_rate=2e-4)),
+        {"schedule.mode": "buffered_async",
+         "execution.exec_mode": "loop"})
+    return spec_replace(base, overrides) if overrides else base
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return build_corpus(sync_twin_spec(_async_spec()))
+
+
+# ---------------------------------------------------------------------------
+# acceptance pin: the sync-equivalence anchor (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+def test_sync_equivalence_anchor(corpus):
+    """M=K, max_staleness=0, in-order arrivals: the buffered-async
+    trajectory reproduces synchronous FedAvg within the repo-wide
+    bound.  The residual deviation is reduction order only (the
+    service combines through the jitted kernels/ops.py path, the loop
+    engine through the host reference)."""
+    spec = _async_spec()
+    fed = Federation.from_spec(sync_twin_spec(spec), corpus=corpus)
+    fed.run()
+    svc = FederationService.from_spec(spec, corpus=corpus)
+    for _ in range(3):
+        for c in range(3):
+            assert svc.upload(c)["accepted"]
+    assert svc.version == 3 and svc.agg_index == 3
+    assert max_param_dev(fed.engine.params, svc._live[1]) <= 1e-5
+    assert svc.rejections == []
+
+
+def test_fetch_reflects_hot_swap(corpus):
+    svc = FederationService.from_spec(_async_spec(), corpus=corpus)
+    v0, p0 = svc.fetch_model()
+    assert v0 == 0
+    for c in range(3):
+        svc.upload(c)
+    v1, p1 = svc.fetch_model()
+    assert v1 == 1
+    assert max_param_dev(p0, p1) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# construction refusals, both directions + spec surface
+# ---------------------------------------------------------------------------
+def test_federation_refuses_async_and_service_refuses_sync(corpus):
+    with pytest.raises(ValueError, match="FederationService"):
+        Federation.from_spec(_async_spec(), corpus=corpus)
+    with pytest.raises(ValueError, match="buffered_async"):
+        FederationService.from_spec(sync_twin_spec(_async_spec()),
+                                    corpus=corpus)
+
+
+@pytest.mark.parametrize("overrides,match", [
+    ({"transforms.names": ("secure",)}, "secure"),
+    ({"schedule.buffer_size": 7}, "buffer"),
+    ({"execution.exec_mode": "vmap"}, "vmap"),
+    ({"execution.mesh": {"data": 2}}, "mesh"),
+    ({"schedule.straggler_prob": 0.3, "schedule.max_staleness": 2},
+     "straggler_prob"),
+])
+def test_async_spec_refusals(overrides, match):
+    with pytest.raises(ValueError, match=match):
+        _async_spec(**overrides)
+
+
+def test_sync_spec_refuses_async_knobs():
+    """Async knobs on a sync spec are refused, never silently dropped."""
+    with pytest.raises(ValueError, match="buffer_size"):
+        spec_replace(FederationSpec(), {"schedule.buffer_size": 2})
+    with pytest.raises(ValueError, match="staleness_policy"):
+        spec_replace(FederationSpec(),
+                     {"schedule.staleness_policy": "polynomial"})
+
+
+def test_resolved_buffer_and_policy_defaults():
+    spec = _async_spec()
+    assert spec.resolved_buffer_size == 3          # M defaults to K
+    assert spec.resolved_staleness_policy == "exponential"
+    spec = _async_spec(**{"schedule.buffer_size": 2,
+                          "schedule.max_staleness": 1,
+                          "schedule.staleness_policy": "polynomial"})
+    assert spec.resolved_buffer_size == 2
+    assert spec.resolved_staleness_policy == "polynomial"
+
+
+def test_registry_async_scenarios_build(corpus):
+    for name in ("buffered_async", "buffered_async_eq"):
+        spec = spec_replace(scenario_spec(name), {
+            "model.vocab": 64, "model.topics": 4, "model.hidden": 16,
+            "data.num_clients": 3, "data.docs_per_node": 40,
+            "data.val_docs_per_node": 8,
+            "execution.batch_size": 16})
+        svc = FederationService.from_spec(spec, corpus=corpus)
+        assert svc.upload(0)["accepted"]
+
+
+# ---------------------------------------------------------------------------
+# the rejection ledger
+# ---------------------------------------------------------------------------
+def test_stale_delta_rejected_and_recorded(corpus):
+    spec = _async_spec(**{"schedule.buffer_size": 2})   # staleness 0
+    svc = FederationService.from_spec(spec, corpus=corpus)
+    bv, delta, w = svc.client_update(0)
+    for c in (1, 2):                 # fill the buffer -> version 1
+        svc.upload(c)
+    assert svc.version == 1
+    r = svc.submit(0, delta, w, base_version=bv)
+    assert not r["accepted"] and r["reason"] == "stale"
+    assert svc.rejections[-1] == {"client": 0, "base_version": 0,
+                                  "at_version": 1, "reason": "stale"}
+
+
+def test_duplicate_upload_supersedes_last_write_wins(corpus):
+    spec = _async_spec(**{"schedule.buffer_size": 3,
+                          "schedule.max_staleness": 2})
+    svc = FederationService.from_spec(spec, corpus=corpus)
+    bv, d1, w1 = svc.client_update(0)
+    assert svc.submit(0, d1, w1, base_version=bv)["accepted"]
+    bv2, d2, w2 = svc.client_update(0)
+    r = svc.submit(0, d2, w2, base_version=bv2)
+    assert r["accepted"] and r["superseded_previous"]
+    assert r["slot"] == 0                      # overwrote IN PLACE
+    assert svc.buffer.count == 1               # never double-buffered
+    assert svc.rejection_counts == {"superseded": 1}
+    # the surviving slot holds the NEWER delta
+    deltas, weights, clients, _ = svc.buffer.stacked()
+    got = jax.tree_util.tree_map(lambda x: np.asarray(x[0]), deltas)
+    assert max_param_dev(got, d2) == 0.0
+
+
+def test_unknown_zero_weight_bad_version_rejections(corpus):
+    svc = FederationService.from_spec(_async_spec(), corpus=corpus)
+    bv, delta, w = svc.client_update(0)
+    assert svc.submit(9, delta, w, base_version=bv)["reason"] \
+        == "unknown_client"
+    assert svc.submit(0, delta, 0.0, base_version=bv)["reason"] \
+        == "zero_weight"
+    assert svc.submit(0, delta, w, base_version=-1)["reason"] \
+        == "bad_version"
+    assert svc.submit(0, delta, w, base_version=99)["reason"] \
+        == "bad_version"
+    with pytest.raises(ValueError, match="clients 0..2"):
+        svc.client_update(7)
+    assert set(svc.rejection_counts) <= set(REJECT_REASONS)
+
+
+def test_upload_retry_backoff_and_exhaustion(corpus):
+    svc = FederationService.from_spec(_async_spec(), corpus=corpus)
+    sleeps, fails = [], {"n": 2}
+
+    def flaky(client, attempt):
+        if fails["n"]:
+            fails["n"] -= 1
+            raise UploadTimeout("wire dropped")
+
+    r = svc.upload(0, backoff_s=0.01, transport=flaky,
+                   sleep_fn=sleeps.append)
+    assert r["accepted"]
+    assert sleeps == [0.01, 0.02]              # exponential backoff
+
+    def dead(client, attempt):
+        raise UploadTimeout("wire gone")
+
+    r = svc.upload(1, max_retries=3, backoff_s=0.01, transport=dead,
+                   sleep_fn=sleeps.append)
+    assert not r["accepted"] and r["reason"] == "upload_failed"
+    assert svc.rejection_counts["upload_failed"] == 1
+
+
+def test_drain_on_shutdown_then_draining(corpus):
+    spec = _async_spec(**{"schedule.buffer_size": 3,
+                          "schedule.max_staleness": 1})
+    svc = FederationService.from_spec(spec, corpus=corpus)
+    svc.upload(0)                              # partial buffer
+    before = svc._live[1]
+    summary = svc.shutdown(drain=True)
+    assert summary["flushed"] == 1 and svc.version == 1
+    assert max_param_dev(before, svc._live[1]) > 0.0   # partial combine
+    r = svc.upload(1)
+    assert not r["accepted"] and r["reason"] == "draining"
+    assert svc.rejection_counts["draining"] == 1
+
+
+# ---------------------------------------------------------------------------
+# staleness discount policies
+# ---------------------------------------------------------------------------
+def test_stale_delta_is_discounted(corpus):
+    """A stale delta moves the model less under the sharper discount:
+    at age 2 exponential(γ=0.5) scales by 0.25, polynomial (FedBuff's
+    1/sqrt(1+age)) by 0.577 — with fedavg the applied step is linear in
+    the discount, so the exponential run must move strictly less."""
+    moved = {}
+    for policy in ("exponential", "polynomial"):
+        spec = _async_spec(**{"schedule.buffer_size": 1,
+                              "schedule.max_staleness": 3,
+                              "schedule.staleness_policy": policy})
+        svc = FederationService.from_spec(spec, corpus=corpus)
+        bv, delta, w = svc.client_update(0)    # computed at version 0
+        svc.upload(1)                          # M=1: version -> 1
+        svc.upload(2)                          # version -> 2
+        anchor = svc._live[1]
+        r = svc.submit(0, delta, w, base_version=bv)  # age 2, aggregates
+        assert r["accepted"]
+        assert svc.history[-1] == {"agg": 2, "version": 3, "arrivals": 1,
+                                   "mean_age": 2.0, "max_age": 2}
+        moved[policy] = max_param_dev(anchor, svc._live[1])
+    assert moved["exponential"] > 0.0
+    # discounts 0.25 vs 1/sqrt(3)=0.577: ratio ~2.3 on the same delta
+    assert moved["polynomial"] > 1.5 * moved["exponential"]
+
+
+def test_traffic_driver_is_deterministic(corpus):
+    spec = _async_spec(**{"schedule.buffer_size": 2,
+                          "schedule.max_staleness": 2})
+    runs, params = [], []
+    for _ in range(2):
+        svc = FederationService.from_spec(spec, corpus=corpus)
+        stats = run_traffic(svc, sweeps=3, order_seed=7, hold_prob=0.3,
+                            duplicate_prob=0.3)
+        runs.append((stats["accepted"], stats["aggregations"],
+                     stats["version"], stats["rejections"]))
+        params.append(svc._live[1])
+    assert runs[0] == runs[1]
+    assert max_param_dev(params[0], params[1]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# snapshot / resume / checkpoint
+# ---------------------------------------------------------------------------
+def test_bitwise_resume(corpus, tmp_path):
+    spec = _async_spec(**{"schedule.buffer_size": 2,
+                          "schedule.max_staleness": 2})
+    a = FederationService.from_spec(spec, corpus=corpus)
+    run_traffic(a, sweeps=2, order_seed=3, hold_prob=0.3)
+    path = str(tmp_path / "svc.pkl")
+    a.save_state(path)
+    b = FederationService.from_spec(spec, corpus=corpus)
+    b.load_state(path)
+    assert max_param_dev(a._live[1], b._live[1]) == 0.0
+    for svc in (a, b):
+        run_traffic(svc, sweeps=2, order_seed=11, hold_prob=0.3)
+    assert a.version == b.version and a.agg_index == b.agg_index
+    assert max_param_dev(a._live[1], b._live[1]) == 0.0
+    assert a.rejection_counts == b.rejection_counts
+
+
+def test_resume_refuses_wrong_spec_or_format(corpus):
+    svc = FederationService.from_spec(_async_spec(), corpus=corpus)
+    state = svc.state_dict()
+    other = FederationService.from_spec(
+        _async_spec(**{"schedule.max_staleness": 1}), corpus=corpus)
+    with pytest.raises(ValueError, match="different spec"):
+        other.load_state_dict(state)
+    with pytest.raises(ValueError, match="state format"):
+        svc.load_state_dict({**state, "format": 99})
+    with pytest.raises(ValueError, match="capacity"):
+        DeltaBuffer(svc._live[1], 2).load_state_dict(
+            state["buffer"])
+
+
+def test_checkpoint_opens_as_sync_federation(corpus, tmp_path):
+    """The hot-swap/checkpoint format IS Federation.state_dict(): sync
+    tooling opens what the service publishes."""
+    spec = _async_spec()
+    svc = FederationService.from_spec(spec, corpus=corpus)
+    for c in range(3):
+        svc.upload(c)
+    path = str(tmp_path / "ckpt.pkl")
+    svc.save_checkpoint(path)
+    fed = Federation.from_spec(sync_twin_spec(spec), corpus=corpus)
+    fed.load_state(path)
+    assert max_param_dev(fed.engine.params, svc._live[1]) == 0.0
+    assert np.isfinite(fed.evaluate()["heldout_perplexity"])
+
+
+# ---------------------------------------------------------------------------
+# the serve surface
+# ---------------------------------------------------------------------------
+def test_infer_serves_posteriors_and_refuses_generate(corpus):
+    svc = FederationService.from_spec(_async_spec(), corpus=corpus)
+    bow = np.random.default_rng(0).poisson(
+        1.0, (5, 64)).astype(np.float32)
+    theta = np.asarray(svc.infer(bow))
+    assert theta.shape == (5, 4)
+    np.testing.assert_allclose(theta.sum(axis=1), 1.0, rtol=1e-5)
+    with pytest.raises(ValueError, match="infer"):
+        svc.generate(np.zeros((1, 4), np.int32))
+
+
+def test_lm_service_generates_and_refuses_infer():
+    spec = spec_replace(_async_spec(), {
+        "model.family": "lm", "model.arch": "phi3-mini-3.8b",
+        "model.vocab": 128, "model.seq_len": 16,
+        "model.topics": 10, "model.hidden": 64,
+        "data.docs_per_node": 24, "execution.batch_size": 8,
+        "execution.learning_rate": 0.1})
+    svc = FederationService.from_spec(spec)
+    for c in range(3):
+        assert svc.upload(c)["accepted"]
+    prompts = np.random.default_rng(0).integers(
+        0, 128, (2, 8)).astype(np.int32)
+    out = svc.generate(prompts, max_new=4)
+    assert out.shape == (2, 4) and out.dtype == np.int32
+    assert (out >= 0).all() and (out < 128).all()
+    # greedy decode from a fixed model is deterministic
+    np.testing.assert_array_equal(out, svc.generate(prompts, max_new=4))
+    with pytest.raises(ValueError, match="generate"):
+        svc.infer(np.zeros((1, 128), np.float32))
