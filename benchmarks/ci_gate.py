@@ -1,11 +1,11 @@
 """CI perf/regression gate for the scenario- and kernel-suite payloads.
 
 Compares a freshly-produced bench JSON (``bench_scenarios``,
-``bench_kernels`` or ``bench_serve`` — the gate is suite-aware, keyed
-on which of ``results`` / ``kernel_results`` / ``serve_results`` the
-payload carries; the single committed baseline
-``benchmarks/baselines/BENCH_scenarios_ci.json`` holds ALL THREE) and
-enforces a two-tier policy:
+``bench_kernels``, ``bench_serve`` or ``bench_load`` — the gate is
+suite-aware, keyed on which of ``results`` / ``kernel_results`` /
+``serve_results`` / ``load_results`` the payload carries; the single
+committed baseline ``benchmarks/baselines/BENCH_scenarios_ci.json``
+holds ALL FOUR) and enforces a two-tier policy:
 
   * HARD FAIL (exit 1) — correctness/privacy invariants.  These do not
     drift with runner noise, so any violation is a real regression:
@@ -42,6 +42,14 @@ enforces a two-tier policy:
         FedAvg trajectory, DESIGN.md §6), a serve cell recording a
         rejection reason outside ``repro.serve.REJECT_REASONS``, zero
         aggregations, or a train-serve cell with zero inference calls;
+      - the load suite's ``wire-sync-equivalence`` anchor missing or its
+        ``final_param_dev >= 1e-5`` (the same anchor crossed over a real
+        localhost socket through the repro.net codec), a ``load_results``
+        cell recording an unnamed rejection reason or zero aggregations,
+        or the ``wire-load`` cell running under 4 client processes,
+        recording zero inference calls, or missing any of its
+        p50/p95/p99 upload/infer latency columns (the SLO measurement
+        silently stopped);
       - a scenario or kernel cell present in the baseline missing from
         the current payload (a silently-shrunk grid reads as "all
         green"); baseline ``mesh-*`` cells are exempt only on hosts
@@ -70,6 +78,8 @@ Usage (what .github/workflows/ci.yml runs):
     python -m benchmarks.ci_gate experiments/bench_kernels_ci.json \\
         benchmarks/baselines/BENCH_scenarios_ci.json
     python -m benchmarks.ci_gate experiments/bench_serve_ci.json \\
+        benchmarks/baselines/BENCH_scenarios_ci.json
+    python -m benchmarks.ci_gate experiments/bench_load_ci.json \\
         benchmarks/baselines/BENCH_scenarios_ci.json
     python -m benchmarks.ci_gate --spec-validate
 """
@@ -122,10 +132,11 @@ def _gate_kernels(current: dict, baseline: dict, *, dev_bound: float,
 
 # the documented rejection ledger of the buffered-async service; kept
 # importable-free (the trend gate's stdlib-only contract) with the live
-# tuple preferred when repro IS on the path
+# tuple preferred when repro IS on the path.  malformed / wire_version
+# are the net layer's decode refusals (repro.net.codec).
 _REJECT_REASONS_FALLBACK = ("stale", "superseded", "unknown_client",
                             "draining", "zero_weight", "bad_version",
-                            "upload_failed")
+                            "upload_failed", "malformed", "wire_version")
 
 
 def _gate_serve(current: dict, baseline: dict, *, dev_bound: float,
@@ -190,12 +201,104 @@ def _gate_serve(current: dict, baseline: dict, *, dev_bound: float,
     return failures
 
 
+def _gate_load(current: dict, baseline: dict, *, dev_bound: float,
+               timing_slack: float) -> list:
+    """Hard/warn policy for a ``bench_load`` payload: the over-the-wire
+    sync-equivalence anchor, rejection-ledger naming, >= 4 concurrent
+    processes and latency-column presence are hard; the latency and
+    throughput VALUES trend warn-only (shared runners are noisy)."""
+    failures = []
+    try:
+        from repro.serve import REJECT_REASONS
+    except ImportError:
+        REJECT_REASONS = _REJECT_REASONS_FALLBACK
+        _warn("repro.serve not importable (set PYTHONPATH=src) — gating "
+              "rejection reasons against the vendored fallback tuple")
+    cur = {r["cell"]: r for r in current.get("load_results", [])}
+    base = {r["cell"]: r for r in baseline.get("load_results", [])}
+    for name in base:
+        if name not in cur:
+            failures.append(f"load cell {name!r} present in baseline "
+                            "but missing from the current payload")
+    eq = cur.get("wire-sync-equivalence")
+    if eq is None:
+        failures.append("load payload carries no 'wire-sync-equivalence' "
+                        "cell — the anchor must cross the wire every run")
+    else:
+        dev = eq.get("final_param_dev")
+        if dev is None or not dev < dev_bound:
+            failures.append(
+                f"wire-sync-equivalence: final_param_dev={dev!r} (bound "
+                f"{dev_bound:g}) — M=K / staleness-0 / in-order localhost "
+                "uploads must reproduce the sync FedAvg trajectory "
+                "through encode -> TCP -> decode (DESIGN.md §6)")
+    for name, r in cur.items():
+        unknown = sorted(set(r.get("rejections", {})) -
+                         set(REJECT_REASONS))
+        if unknown:
+            failures.append(
+                f"{name}: rejection reason(s) {unknown} are not in "
+                "repro.serve.REJECT_REASONS — every rejection path must "
+                "be named and documented")
+        if not r.get("aggregations"):
+            failures.append(f"{name}: zero aggregations — the service "
+                            "never advanced the model")
+        if name == "wire-load":
+            if (r.get("procs") or 0) < 4:
+                failures.append(
+                    f"wire-load: {r.get('procs')!r} client processes — "
+                    "the latency-under-load SLO is defined under >= 4 "
+                    "concurrent processes")
+            if not r.get("infer_calls"):
+                failures.append("wire-load: zero inference calls recorded "
+                                "— the serve-side measurement silently "
+                                "stopped")
+            for key in ("upload_p50_s", "upload_p95_s", "upload_p99_s",
+                        "infer_p50_s", "infer_p95_s", "infer_p99_s"):
+                if not r.get(key):
+                    failures.append(
+                        f"wire-load: {key} missing — the SLO columns "
+                        "must be measured every run (their values trend "
+                        "warn-only, their presence is the contract)")
+        b = base.get(name)
+        if not b:
+            continue
+        for key, worse_is in (("aggs_per_s", "lower"),
+                              ("uploads_per_s", "lower"),
+                              ("upload_p50_s", "higher"),
+                              ("upload_p95_s", "higher"),
+                              ("upload_p99_s", "higher"),
+                              ("infer_p50_s", "higher")):
+            c_v, b_v = r.get(key), b.get(key)
+            if not (c_v and b_v):
+                continue
+            degraded = (c_v > timing_slack * b_v if worse_is == "higher"
+                        else c_v * timing_slack < b_v)
+            if degraded:
+                _warn(f"{name}: {key} {c_v:.4g} vs baseline {b_v:.4g} "
+                      f"(beyond {timing_slack:g}x slack)")
+    return failures
+
+
 def gate(current: dict, baseline: dict, *,
          dev_bound: float = DEV_BOUND,
          timing_slack: float = TIMING_SLACK) -> int:
     # suite dispatch: a bench_serve payload carries serve_results, a
-    # bench_kernels payload kernel_results (and no scenario results) —
-    # both gate against the SAME baseline file's matching block
+    # bench_load payload load_results, a bench_kernels payload
+    # kernel_results (and no scenario results) — all gate against the
+    # SAME baseline file's matching block
+    if "load_results" in current and "results" not in current:
+        failures = _gate_load(current, baseline, dev_bound=dev_bound,
+                              timing_slack=timing_slack)
+        if failures:
+            for f in failures:
+                print(f"FAIL: {f}", file=sys.stderr)
+            return 1
+        n = len(current.get("load_results", []))
+        print(f"ci_gate: {n} load cells pass (wire anchor "
+              f"dev<{dev_bound:g}, >=4-process SLO columns measured, "
+              "rejection ledger fully named); latency deltas warn-only")
+        return 0
     if "serve_results" in current and "results" not in current:
         failures = _gate_serve(current, baseline, dev_bound=dev_bound,
                                timing_slack=timing_slack)

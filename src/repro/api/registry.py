@@ -168,6 +168,16 @@ SCENARIOS: Dict[str, Overrides] = {
     "buffered_async_eq": {"schedule.mode": "buffered_async",
                           "schedule.max_staleness": 0,
                           "execution.exec_mode": "loop"},
+    # the FedBuff preset behind the repro.net wire front-end: a serving
+    # section (ephemeral localhost port, fp32 deltas) makes it bootable
+    # by launch/federate_load.py and repro.net.server.run_server
+    "buffered_async_net": {"schedule.mode": "buffered_async",
+                           "schedule.buffer_size": 2,
+                           "schedule.max_staleness": 2,
+                           "schedule.staleness_policy": "polynomial",
+                           "execution.exec_mode": "loop",
+                           "serving": {"host": "127.0.0.1", "port": 0,
+                                       "wire_precision": "fp32"}},
 }
 
 # the scenario-bench sweep, in sweep order — bench_scenarios.py and the

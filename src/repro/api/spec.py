@@ -67,6 +67,9 @@ SCHEDULE_MODES = ("sync", "buffered_async")
 # staleness-discount policies for buffered-async aggregation: the
 # discount scales the DELTA, never the Eq. (2) weight (DESIGN.md §6)
 STALENESS_POLICIES = ("exponential", "polynomial")
+# delta payload formats on the repro.net wire (serving.wire_precision):
+# bf16 halves upload bytes with the `precision` transform's cast rule
+WIRE_PRECISIONS = ("fp32", "bf16")
 
 
 def _require(cond: bool, msg: str) -> None:
@@ -614,6 +617,52 @@ class ExecutionSpec:
             self.mesh._validate()
 
 
+@dataclass(frozen=True)
+class ServingSpec:
+    """``serving`` section (optional): the repro.net wire front-end.
+
+    Describes where the buffered-async service listens and what format
+    delta uploads travel in (``repro.net``, docs/serving.md).  ``None``
+    (the :class:`FederationSpec` default) means no wire — the service
+    is driven in-process.  ``port=0`` binds an ephemeral port (the
+    test/bench default; the bound port is reported by the server).
+    ``wire_precision="bf16"`` halves upload payloads using the
+    ``precision`` transform's cast rule (down to bfloat16 on encode,
+    straight back to float32 on decode).  Only buffered-async specs may
+    carry the section — a sync spec has no server, and the section is
+    never silently dropped.
+    """
+    host: str = "127.0.0.1"
+    port: int = 0
+    wire_precision: str = "fp32"
+
+    @classmethod
+    def from_value(cls, v, where: str = "serving"):
+        if v is None or isinstance(v, cls):
+            return v
+        if isinstance(v, Mapping):
+            fields = {f.name for f in dataclasses.fields(cls)}
+            unknown = sorted(set(v) - fields)
+            if unknown:
+                raise ValueError(f"unknown key(s) {unknown} in {where}; "
+                                 f"known: {sorted(fields)}")
+            return cls(**dict(v))
+        raise ValueError(
+            f"{where} must be null or a {{host, port, wire_precision}} "
+            f"mapping, got {type(v).__name__}")
+
+    def _validate(self) -> None:
+        _require(isinstance(self.host, str) and self.host != "",
+                 f"serving.host must be a non-empty string, got "
+                 f"{self.host!r}")
+        _check_int(self.port, "serving.port", 0)
+        _require(self.port <= 65535,
+                 f"serving.port must be <= 65535, got {self.port}")
+        _require(self.wire_precision in WIRE_PRECISIONS,
+                 f"serving.wire_precision {self.wire_precision!r} is not "
+                 f"one of {WIRE_PRECISIONS}")
+
+
 _SECTIONS = {
     "model": ModelSpec,
     "data": DataSpec,
@@ -644,6 +693,8 @@ class FederationSpec:
     transforms: TransformsSpec = field(default_factory=TransformsSpec)
     server_opt: ServerOptSpec = field(default_factory=ServerOptSpec)
     execution: ExecutionSpec = field(default_factory=ExecutionSpec)
+    # optional wire front-end (repro.net); None = in-process only
+    serving: Optional[ServingSpec] = None
 
     def __post_init__(self):
         self.validate()
@@ -664,6 +715,17 @@ class FederationSpec:
                      f"section {sect!r} must be a {cls.__name__}, got "
                      f"{type(v).__name__}")
             v._validate()
+        _require(self.serving is None
+                 or isinstance(self.serving, ServingSpec),
+                 "section 'serving' must be null or a ServingSpec (or "
+                 "the mapping form accepted by from_dict)")
+        if self.serving is not None:
+            self.serving._validate()
+            _require(self.schedule.mode == "buffered_async",
+                     "the serving section configures the repro.net wire "
+                     "front-end of the buffered-async FederationService "
+                     "(docs/serving.md) — a sync spec has no server; "
+                     "remove the section (it is never silently dropped)")
         # cross-section coherence (mirrors core/engine.py refusals so a
         # bad spec fails at validation time, not engine-construction time)
         if self.model.family == "lm":
@@ -871,7 +933,7 @@ class FederationSpec:
         if not isinstance(d, Mapping):
             raise ValueError("FederationSpec.from_dict needs a mapping, "
                              f"got {type(d).__name__}")
-        known = set(_SECTIONS) | {"version", "name"}
+        known = set(_SECTIONS) | {"version", "name", "serving"}
         unknown = sorted(set(d) - known)
         if unknown:
             raise ValueError(f"unknown top-level spec key(s) {unknown}; "
@@ -887,6 +949,8 @@ class FederationSpec:
         for sect, sect_cls in _SECTIONS.items():
             if sect in d:
                 kw[sect] = _section_from_dict(sect_cls, d[sect], sect)
+        if "serving" in d:
+            kw["serving"] = ServingSpec.from_value(d["serving"])
         return cls(**kw)
 
     def to_json(self, *, indent: int = 2) -> str:
@@ -968,21 +1032,41 @@ def spec_replace(spec: FederationSpec,
     """
     top: Dict[str, Any] = {}
     by_section: Dict[str, Dict[str, Any]] = {}
+    serving_updates: Dict[str, Any] = {}
     for key, v in overrides.items():
         if "." in key:
             sect, _, fname = key.partition(".")
+            if sect == "serving":
+                serving_fields = {f.name
+                                  for f in dataclasses.fields(ServingSpec)}
+                if fname not in serving_fields:
+                    raise ValueError(
+                        f"unknown key {fname!r} in spec section "
+                        f"'serving'; known: {sorted(serving_fields)}")
+                serving_updates[fname] = v
+                continue
             if sect not in _SECTIONS:
                 raise ValueError(f"unknown spec section {sect!r} in "
                                  f"override {key!r}; known: "
-                                 f"{sorted(_SECTIONS)}")
+                                 f"{sorted(set(_SECTIONS) | {'serving'})}")
             by_section.setdefault(sect, {})[fname] = v
+        elif key == "serving":
+            top[key] = ServingSpec.from_value(v)
         elif key in _SECTIONS or key in ("name", "version"):
             top[key] = v
         else:
             raise ValueError(f"unknown spec override {key!r}; use "
                              "'section.field' dotted paths or one of "
-                             f"{sorted(set(_SECTIONS) | {'name', 'version'})}")
+                             f"{sorted(set(_SECTIONS) | {'name', 'version', 'serving'})}")
     kw = dict(top)
+    if serving_updates:
+        # build on the whole-section override if one rode along, else on
+        # the spec's current serving section; a nested update on a spec
+        # without one creates the section (ServingSpec defaults + updates)
+        base_serving = top.get("serving", spec.serving)
+        kw["serving"] = ServingSpec(**serving_updates) \
+            if base_serving is None \
+            else dataclasses.replace(base_serving, **serving_updates)
     for sect, updates in by_section.items():
         cls = _SECTIONS[sect]
         fields = {f.name for f in dataclasses.fields(cls)}

@@ -1,0 +1,27 @@
+"""`repro.net` — the concurrent transport layer of the federation service.
+
+The wire counterpart of :mod:`repro.serve`: a handcoded asyncio
+HTTP/1.1 front-end (:class:`repro.net.server.NetServer`) exposing the
+buffered-async :class:`repro.serve.FederationService` to real sockets —
+`POST /v1/upload` deltas funnel through ONE aggregation worker (the
+jitted FedBuff combine stays serialized) while `POST /v1/infer` /
+`POST /v1/generate` read the atomic ``_live`` hot swap fully
+concurrently from a thread pool.  Payloads cross in the versioned
+binary codec of :mod:`repro.net.codec` (fp32/bf16 delta arrays, strict
+decode refusals mapped onto the service's rejection ledger as
+``malformed`` / ``wire_version``).  :class:`repro.net.client.
+ServiceClient` is the `run_traffic`-compatible remote view — local
+updates on a sync-twin replica, only deltas on the wire — and
+``launch/federate_load.py`` drives N of them from separate processes.
+Protocol reference: docs/serving.md ("The wire").
+"""
+from repro.net.codec import (WIRE_VERSION, WireError, WireFormatError,
+                             WireVersionError, decode_message,
+                             encode_message)
+from repro.net.client import HttpClient, NetError, ServiceClient
+from repro.net.server import BackgroundServer, NetServer, run_server
+
+__all__ = ["WIRE_VERSION", "WireError", "WireFormatError",
+           "WireVersionError", "decode_message", "encode_message",
+           "HttpClient", "NetError", "ServiceClient",
+           "BackgroundServer", "NetServer", "run_server"]

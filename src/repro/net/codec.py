@@ -1,0 +1,245 @@
+"""Versioned binary wire codec for the federation transport.
+
+One message = one frame::
+
+    MAGIC(4) | wire_version(1, u8) | header_len(4, u32 BE) | header JSON | arrays
+
+The header is UTF-8 JSON with exactly four keys: ``kind`` (message
+type), ``meta`` (small JSON metadata — client id, base_version, weight,
+model version), ``tree`` (the skeleton of the pytree, arrays replaced
+by indices), and ``arrays`` (the manifest: per-array wire dtype +
+shape, payloads concatenated in order after the header).  The skeleton
+preserves container types exactly — a tuple decodes as a tuple, not a
+list — so a decoded delta is `tree_map`-compatible with the service's
+parameter tree.
+
+Precision: ``encode_message(..., precision="bf16")`` casts floating
+payloads to bfloat16 on the wire and the decoder upcasts them back to
+float32 — the same quantization rule as the ``precision`` transform
+(`core/transforms.py:make_precision_transform`, cast down then
+straight back up).  Integer and bool leaves always travel unchanged.
+
+Decoding is strict and total: anything that does not parse raises
+:class:`WireFormatError` (service ledger reason ``malformed``); a
+parseable frame from a different protocol generation raises
+:class:`WireVersionError` (reason ``wire_version``).  The decoder never
+guesses — unknown header keys, unknown dtypes, out-of-range array
+indices, unused or reused payload arrays, and length mismatches are
+all refusals, because a silently mis-decoded delta would corrupt the
+global model rather than crash.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+try:  # numpy has no native bfloat16; ml_dtypes ships with jax.
+    import ml_dtypes
+
+    _BFLOAT16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - ml_dtypes is a jax dependency
+    _BFLOAT16 = None
+
+from repro.api.spec import WIRE_PRECISIONS  # serving.wire_precision values
+
+MAGIC = b"RPFN"
+WIRE_VERSION = 1
+
+_HEADER_KEYS = frozenset({"kind", "meta", "tree", "arrays"})
+# Wire dtypes the decoder will materialize. Anything else is a refusal.
+_WIRE_DTYPES = ("float32", "float64", "bfloat16", "int32", "int64",
+                "uint8", "int8", "bool")
+_PREFIX = struct.Struct(">4sBI")
+
+
+class WireError(ValueError):
+    """Base class for wire refusals."""
+
+
+class WireFormatError(WireError):
+    """Frame does not parse / violates the codec contract (-> ``malformed``)."""
+
+
+class WireVersionError(WireError):
+    """Frame is from a different wire generation (-> ``wire_version``)."""
+
+
+def _np_dtype(name: str) -> np.dtype:
+    if name == "bfloat16":
+        if _BFLOAT16 is None:  # pragma: no cover
+            raise WireFormatError("bfloat16 payload but ml_dtypes is unavailable")
+        return _BFLOAT16
+    return np.dtype(name)
+
+
+def _encode_node(node: Any, manifest: List[Dict[str, Any]],
+                 payloads: List[bytes], precision: str) -> Any:
+    """Map a pytree node to its skeleton form, appending array payloads."""
+    if node is None:
+        return {"z": 0}
+    if isinstance(node, dict):
+        for k in node:
+            if not isinstance(k, str):
+                raise WireFormatError(
+                    f"wire trees require string dict keys, got {type(k).__name__}")
+        return {"d": {k: _encode_node(v, manifest, payloads, precision)
+                      for k, v in node.items()}}
+    if isinstance(node, tuple):
+        return {"t": [_encode_node(v, manifest, payloads, precision) for v in node]}
+    if isinstance(node, list):
+        return {"l": [_encode_node(v, manifest, payloads, precision) for v in node]}
+    if isinstance(node, (bool, int, float, str)):
+        return {"s": node}
+    arr = np.asarray(node)
+    if arr.dtype == np.float64:
+        arr = arr.astype(np.float32)
+    if precision == "bf16" and np.issubdtype(arr.dtype, np.floating):
+        if _BFLOAT16 is None:  # pragma: no cover
+            raise WireFormatError("bf16 wire precision requires ml_dtypes")
+        arr = arr.astype(_BFLOAT16)
+    name = "bfloat16" if (_BFLOAT16 is not None and arr.dtype == _BFLOAT16) \
+        else arr.dtype.name
+    if name not in _WIRE_DTYPES:
+        raise WireFormatError(f"dtype {name} is not wire-encodable")
+    manifest.append({"dtype": name, "shape": [int(s) for s in arr.shape]})
+    payloads.append(np.ascontiguousarray(arr).tobytes())
+    return {"a": len(manifest) - 1}
+
+
+def encode_message(kind: str, meta: Dict[str, Any], tree: Any = None, *,
+                   precision: str = "fp32") -> bytes:
+    """Serialize one message. ``tree`` may be None for array-free messages."""
+    if precision not in WIRE_PRECISIONS:
+        raise ValueError(f"wire precision must be one of {WIRE_PRECISIONS}, "
+                         f"got {precision!r}")
+    manifest: List[Dict[str, Any]] = []
+    payloads: List[bytes] = []
+    skeleton = (None if tree is None
+                else _encode_node(tree, manifest, payloads, precision))
+    header = json.dumps({"kind": str(kind), "meta": meta, "tree": skeleton,
+                         "arrays": manifest}, separators=(",", ":")).encode("utf-8")
+    return b"".join([_PREFIX.pack(MAGIC, WIRE_VERSION, len(header)), header,
+                     *payloads])
+
+
+def _decode_node(node: Any, arrays: List[np.ndarray], used: List[bool]) -> Any:
+    if not isinstance(node, dict) or len(node) != 1:
+        raise WireFormatError(f"malformed skeleton node: {node!r}")
+    tag, val = next(iter(node.items()))
+    if tag == "z":
+        return None
+    if tag == "s":
+        if not isinstance(val, (bool, int, float, str)):
+            raise WireFormatError(f"malformed scalar node: {val!r}")
+        return val
+    if tag == "d":
+        if not isinstance(val, dict):
+            raise WireFormatError("dict node payload must be an object")
+        return {k: _decode_node(v, arrays, used) for k, v in val.items()}
+    if tag in ("t", "l"):
+        if not isinstance(val, list):
+            raise WireFormatError(f"{tag!r} node payload must be a list")
+        items = [_decode_node(v, arrays, used) for v in val]
+        return tuple(items) if tag == "t" else items
+    if tag == "a":
+        if not isinstance(val, int) or isinstance(val, bool) \
+                or not 0 <= val < len(arrays):
+            raise WireFormatError(f"array index {val!r} out of range")
+        if used[val]:
+            raise WireFormatError(f"array {val} referenced twice")
+        used[val] = True
+        return arrays[val]
+    raise WireFormatError(f"unknown skeleton tag {tag!r}")
+
+
+def decode_message(buf: bytes) -> Dict[str, Any]:
+    """Parse one frame -> ``{"kind", "meta", "tree"}`` (tree leaves are
+    numpy arrays; bfloat16 payloads come back upcast to float32)."""
+    if not isinstance(buf, (bytes, bytearray, memoryview)):
+        raise WireFormatError("wire frame must be bytes")
+    buf = bytes(buf)
+    if len(buf) < _PREFIX.size:
+        raise WireFormatError(f"truncated frame: {len(buf)} bytes")
+    magic, version, header_len = _PREFIX.unpack_from(buf)
+    if magic != MAGIC:
+        raise WireFormatError(f"bad magic {magic!r}")
+    if version != WIRE_VERSION:
+        raise WireVersionError(
+            f"wire version {version} (this build speaks {WIRE_VERSION})")
+    if len(buf) < _PREFIX.size + header_len:
+        raise WireFormatError("truncated header")
+    try:
+        header = json.loads(buf[_PREFIX.size:_PREFIX.size + header_len]
+                            .decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise WireFormatError(f"header is not JSON: {e}") from e
+    if not isinstance(header, dict) or set(header) != _HEADER_KEYS:
+        raise WireFormatError("header must carry exactly kind/meta/tree/arrays")
+    kind, meta = header["kind"], header["meta"]
+    if not isinstance(kind, str) or not isinstance(meta, dict):
+        raise WireFormatError("kind must be a string and meta an object")
+    manifest = header["arrays"]
+    if not isinstance(manifest, list):
+        raise WireFormatError("arrays manifest must be a list")
+
+    payload = buf[_PREFIX.size + header_len:]
+    arrays: List[np.ndarray] = []
+    offset = 0
+    for i, entry in enumerate(manifest):
+        if (not isinstance(entry, dict) or set(entry) != {"dtype", "shape"}
+                or entry["dtype"] not in _WIRE_DTYPES
+                or not isinstance(entry["shape"], list)
+                or not all(isinstance(s, int) and not isinstance(s, bool)
+                           and s >= 0 for s in entry["shape"])):
+            raise WireFormatError(f"malformed manifest entry {i}: {entry!r}")
+        dtype = _np_dtype(entry["dtype"])
+        shape = tuple(entry["shape"])
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+        if offset + nbytes > len(payload):
+            raise WireFormatError(f"payload truncated at array {i}")
+        arr = np.frombuffer(payload, dtype=dtype, count=int(np.prod(
+            shape, dtype=np.int64)), offset=offset).reshape(shape)
+        if entry["dtype"] == "bfloat16":
+            arr = arr.astype(np.float32)
+        arrays.append(arr)
+        offset += nbytes
+    if offset != len(payload):
+        raise WireFormatError(
+            f"{len(payload) - offset} trailing payload bytes")
+
+    skeleton = header["tree"]
+    used = [False] * len(arrays)
+    tree = None if skeleton is None else _decode_node(skeleton, arrays, used)
+    if not all(used):
+        raise WireFormatError("manifest carries arrays the tree never uses")
+    return {"kind": kind, "meta": meta, "tree": tree}
+
+
+def delta_nbytes(tree: Any, *, precision: str = "fp32") -> int:
+    """Wire payload size of a tree's arrays (header excluded) — used by
+    the load driver to report bytes-on-the-wire per upload."""
+    total = 0
+    for leaf in _iter_arrays(tree):
+        arr = np.asarray(leaf)
+        itemsize = 2 if (precision == "bf16"
+                         and np.issubdtype(arr.dtype, np.floating)) \
+            else np.dtype(np.float32).itemsize if arr.dtype == np.float64 \
+            else arr.dtype.itemsize
+        total += arr.size * itemsize
+    return total
+
+
+def _iter_arrays(node: Any):
+    if node is None or isinstance(node, (bool, int, float, str)):
+        return
+    if isinstance(node, dict):
+        for v in node.values():
+            yield from _iter_arrays(v)
+    elif isinstance(node, (list, tuple)):
+        for v in node:
+            yield from _iter_arrays(v)
+    else:
+        yield node

@@ -9,9 +9,11 @@ global model to inference traffic from the same process.  Specs with
 DESIGN.md §6 for the correctness contract.
 """
 from repro.serve.buffer import DeltaBuffer
-from repro.serve.service import (REJECT_REASONS, FederationService,
-                                 UploadTimeout, sync_twin_spec)
+from repro.serve.service import (REJECT_REASONS, REJECTION_LEDGER_CAP,
+                                 FederationService, UploadTimeout,
+                                 sync_twin_spec)
 from repro.serve.traffic import run_traffic
 
 __all__ = ["DeltaBuffer", "FederationService", "UploadTimeout",
-           "REJECT_REASONS", "sync_twin_spec", "run_traffic"]
+           "REJECT_REASONS", "REJECTION_LEDGER_CAP", "sync_twin_spec",
+           "run_traffic"]

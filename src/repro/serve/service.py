@@ -53,11 +53,19 @@ from repro.kernels import ops as kops
 from repro.serve.buffer import DeltaBuffer
 
 # every rejection the service can record; ci_gate.py hard-fails a bench
-# payload whose rejection ledger carries a reason outside this set
+# payload whose rejection ledger carries a reason outside this set.
+# malformed / wire_version are the net layer's decode refusals
+# (repro.net.codec) routed through the same ledger.
 REJECT_REASONS = ("stale", "superseded", "unknown_client", "draining",
-                  "zero_weight", "bad_version", "upload_failed")
+                  "zero_weight", "bad_version", "upload_failed",
+                  "malformed", "wire_version")
 
-SERVE_STATE_FORMAT = 1
+# the ledger keeps only the newest records (a hostile/buggy client must
+# not grow server memory without bound); per-reason totals in
+# `rejection_totals` are monotonic and survive eviction
+REJECTION_LEDGER_CAP = 256
+
+SERVE_STATE_FORMAT = 2
 
 
 class UploadTimeout(RuntimeError):
@@ -70,11 +78,14 @@ def sync_twin_spec(spec: FederationSpec) -> FederationSpec:
     schedule knobs reset.  The service wires its model, corpus, clients
     and server optimizer through ``Federation.from_spec(twin)``, and the
     M=K/staleness-0 anchor test compares against ``twin.run()`` — one
-    construction path, so service and simulator can never drift."""
+    construction path, so service and simulator can never drift.  The
+    optional ``serving`` section (the repro.net wire) is dropped: the
+    twin is a simulator, and a sync spec refuses the section."""
     return spec_replace(spec, {"schedule.mode": "sync",
                                "schedule.buffer_size": 0,
                                "schedule.staleness_policy": "",
-                               "schedule.max_staleness": 0})
+                               "schedule.max_staleness": 0,
+                               "serving": None})
 
 
 class FederationService:
@@ -100,6 +111,7 @@ class FederationService:
         self.buffer = DeltaBuffer(eng.params, self.buffer_size)
         self.client_rounds = [0] * spec.data.num_clients
         self.rejections: List[Dict[str, Any]] = []
+        self.rejection_totals: Dict[str, int] = {}
         self.history: List[Dict[str, Any]] = []
         # the serving reference: ONE attribute holding (version, params).
         # Aggregation publishes by rebinding it — a single atomic swap,
@@ -249,12 +261,29 @@ class FederationService:
         The delta is computed ONCE — a retry resubmits the same bytes,
         and the staleness check runs at submit time, so a delta that
         went stale while retrying is rejected as ``stale``.
+
+        ``max_retries=0`` is the single-shot path: the transport runs
+        EXACTLY once and no backoff schedule is ever constructed
+        (regression-pinned in tests/test_serve_service.py).
         """
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         if self.draining:
             receipt = {"client": int(client), "accepted": False,
                        "reason": None, "version": self.version, "slot": -1}
             return self._reject(receipt, self.version, "draining")
         base_version, delta, weight = self.client_update(client)
+        if max_retries == 0:
+            try:
+                if transport is not None:
+                    transport(int(client), 0)
+            except UploadTimeout:
+                receipt = {"client": int(client), "accepted": False,
+                           "reason": None, "version": self.version,
+                           "slot": -1}
+                return self._reject(receipt, base_version, "upload_failed")
+            return self.submit(client, delta, weight,
+                               base_version=base_version)
         sleep = sleep_fn if sleep_fn is not None else time.sleep
         attempt = 0
         while True:
@@ -281,17 +310,51 @@ class FederationService:
 
     def _record(self, client: int, base_version, reason: str) -> None:
         assert reason in REJECT_REASONS, reason
+        self.rejection_totals[reason] = \
+            self.rejection_totals.get(reason, 0) + 1
         self.rejections.append({"client": int(client),
                                 "base_version": int(base_version),
                                 "at_version": self.version,
                                 "reason": reason})
+        overflow = len(self.rejections) - REJECTION_LEDGER_CAP
+        if overflow > 0:
+            del self.rejections[:overflow]
+
+    def record_rejection(self, client: int, base_version,
+                         reason: str) -> Dict[str, Any]:
+        """Record a rejection that never reached the buffer (the net
+        layer's decode refusals: ``malformed`` frames carry client -1
+        because an unparseable upload has no trusted client id).
+        Returns a ``submit``-shaped receipt."""
+        if reason not in REJECT_REASONS:
+            raise ValueError(f"unknown rejection reason {reason!r}; the "
+                             f"ledger records {REJECT_REASONS}")
+        receipt: Dict[str, Any] = {"client": int(client), "accepted": False,
+                                   "reason": None, "version": self.version,
+                                   "slot": -1}
+        return self._reject(receipt, int(base_version), reason)
 
     @property
     def rejection_counts(self) -> Dict[str, int]:
-        counts: Dict[str, int] = {}
-        for r in self.rejections:
-            counts[r["reason"]] = counts.get(r["reason"], 0) + 1
-        return counts
+        """Monotonic per-reason totals — unlike :attr:`rejections`
+        (capped at :data:`REJECTION_LEDGER_CAP` records) these never
+        lose counts to eviction."""
+        return dict(self.rejection_totals)
+
+    def status(self) -> Dict[str, Any]:
+        """The ``GET /v1/status`` payload: counters only, JSON-safe."""
+        return {"version": self.version,
+                "aggregations": self.agg_index,
+                "draining": self.draining,
+                "buffer_count": self.buffer.count,
+                "buffer_size": self.buffer_size,
+                "max_staleness": self.max_staleness,
+                "num_clients": self.spec.data.num_clients,
+                "model_family": self.spec.model.family,
+                "rejections": dict(self.rejection_totals),
+                "rejection_records": len(self.rejections),
+                "rejection_ledger_cap": REJECTION_LEDGER_CAP,
+                "history": [dict(h) for h in self.history]}
 
     def _aggregate(self) -> None:
         """One FedBuff aggregation: discount, combine, server step,
@@ -400,6 +463,7 @@ class FederationService:
                 "buffer": self.buffer.state_dict(),
                 "client_rounds": list(self.client_rounds),
                 "rejections": [dict(r) for r in self.rejections],
+                "rejection_totals": dict(self.rejection_totals),
                 "history": [dict(h) for h in self.history]}
 
     def load_state_dict(self, state: Mapping[str, Any]) -> None:
@@ -421,6 +485,8 @@ class FederationService:
         self.buffer.load_state_dict(state["buffer"])
         self.client_rounds = [int(t) for t in state["client_rounds"]]
         self.rejections = [dict(r) for r in state["rejections"]]
+        self.rejection_totals = {str(k): int(v) for k, v in
+                                 state["rejection_totals"].items()}
         self.history = [dict(h) for h in state["history"]]
         self._live = (self.version, dev(state["params"]))
 

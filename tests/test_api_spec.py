@@ -417,3 +417,63 @@ def test_canonical_transform_import_does_not_warn():
         warnings.simplefilter("error", DeprecationWarning)
         from repro.core.transforms import TRANSFORMS  # noqa: F401
         from repro.core import TRANSFORMS as t2  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# the optional `serving` section (PR 10: the repro.net wire front-end)
+# ---------------------------------------------------------------------------
+def test_serving_section_roundtrips(tmp_path):
+    from repro.api.spec import ServingSpec
+    spec = spec_replace(_tiny_spec(), {
+        "schedule.mode": "buffered_async", "execution.exec_mode": "loop",
+        "serving": {"host": "0.0.0.0", "port": 8080,
+                    "wire_precision": "bf16"}})
+    assert spec.serving == ServingSpec("0.0.0.0", 8080, "bf16")
+    d = spec.to_dict()
+    assert d["serving"] == {"host": "0.0.0.0", "port": 8080,
+                            "wire_precision": "bf16"}
+    assert FederationSpec.from_dict(d) == spec
+    p = tmp_path / "serving.json"
+    p.write_text(spec.to_json())
+    assert FederationSpec.from_json(p.read_text()) == spec
+    # the default (no section) round-trips as absent, not as a stub
+    assert _tiny_spec().serving is None
+    assert FederationSpec.from_dict(_tiny_spec().to_dict()).serving is None
+
+
+def test_serving_section_refusals():
+    async_ov = {"schedule.mode": "buffered_async",
+                "execution.exec_mode": "loop"}
+    # a sync spec has no server — the section is never silently dropped
+    with pytest.raises(ValueError, match="never silently dropped"):
+        spec_replace(_tiny_spec(), {"serving": {"port": 1}}).validate()
+    with pytest.raises(ValueError, match="unknown key"):
+        spec_replace(_tiny_spec(), {**async_ov,
+                                    "serving": {"portt": 1}})
+    for bad, match in [({"port": 70000}, "serving.port"),
+                       ({"port": -1}, "serving.port"),
+                       ({"host": ""}, "serving.host"),
+                       ({"wire_precision": "fp8"},
+                        "serving.wire_precision")]:
+        with pytest.raises(ValueError, match=match):
+            spec_replace(_tiny_spec(), {**async_ov,
+                                        "serving": bad}).validate()
+
+
+def test_spec_replace_serving_dotted_paths():
+    async_ov = {"schedule.mode": "buffered_async",
+                "execution.exec_mode": "loop"}
+    base = spec_replace(_tiny_spec(), async_ov)
+    assert base.serving is None
+    # dotted path materializes the section from defaults
+    s1 = spec_replace(base, {"serving.port": 9000})
+    assert (s1.serving.host, s1.serving.port,
+            s1.serving.wire_precision) == ("127.0.0.1", 9000, "fp32")
+    # ... and edits an existing one field-wise
+    s2 = spec_replace(s1, {"serving.wire_precision": "bf16"})
+    assert s2.serving.port == 9000
+    assert s2.serving.wire_precision == "bf16"
+    # top-level None removes the section
+    assert spec_replace(s2, {"serving": None}).serving is None
+    with pytest.raises(ValueError, match="unknown key 'socket'"):
+        spec_replace(base, {"serving.socket": 1})

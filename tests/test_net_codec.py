@@ -1,0 +1,189 @@
+"""Wire codec contract (repro/net/codec.py, PR 10 acceptance pins).
+
+Round-trip exactness over the container types a parameter pytree uses
+(dict / tuple / list / None / scalars), the bf16 wire-precision rule
+(byte-identical to the ``precision`` transform's cast-down-cast-up),
+and the strict-decode refusals: a frame that does not parse raises
+``WireFormatError`` (service ledger reason ``malformed``), a frame
+from another protocol generation raises ``WireVersionError``
+(``wire_version``), and the decoder never guesses.
+"""
+import json
+import struct
+
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.net import (WIRE_VERSION, WireError, WireFormatError,
+                       WireVersionError, decode_message, encode_message)
+from repro.net.codec import MAGIC, delta_nbytes
+
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+_PREFIX = struct.Struct(">4sBI")
+
+
+def _frame(header: dict, payload: bytes = b"", *,
+           magic: bytes = MAGIC, version: int = WIRE_VERSION) -> bytes:
+    """Hand-build a frame, bypassing encode_message's validation —
+    the decoder must refuse these on its own."""
+    raw = json.dumps(header, separators=(",", ":")).encode("utf-8")
+    return _PREFIX.pack(magic, version, len(raw)) + raw + payload
+
+
+def _tree():
+    rng = np.random.default_rng(7)
+    return {"beta": rng.normal(size=(4, 8)).astype(np.float32),
+            "enc": ({"w": rng.normal(size=(8, 3)).astype(np.float32),
+                     "b": np.zeros((3,), np.float32)},
+                    {"w": rng.normal(size=(3, 3)).astype(np.float32)}),
+            "steps": np.arange(5, dtype=np.int32),
+            "mask": np.array([True, False, True]),
+            "extras": [np.float32(1.5), None, "tag", 3, False]}
+
+
+def test_roundtrip_preserves_containers_values_and_dtypes():
+    tree = _tree()
+    msg = decode_message(encode_message(
+        "upload", {"client": 2, "base_version": 5, "weight": 40.0},
+        tree=tree))
+    assert msg["kind"] == "upload"
+    assert msg["meta"] == {"client": 2, "base_version": 5, "weight": 40.0}
+    out = msg["tree"]
+    assert isinstance(out["enc"], tuple)          # tuple stays tuple
+    assert isinstance(out["extras"], list)        # list stays list
+    assert out["extras"][1] is None and out["extras"][2] == "tag"
+    assert out["extras"][3] == 3 and out["extras"][4] is False
+    np.testing.assert_array_equal(out["beta"], tree["beta"])  # exact
+    np.testing.assert_array_equal(out["steps"], tree["steps"])
+    np.testing.assert_array_equal(out["mask"], tree["mask"])
+    assert out["beta"].dtype == np.float32
+    assert out["steps"].dtype == np.int32 and out["mask"].dtype == np.bool_
+
+
+def test_treeless_and_empty_messages():
+    msg = decode_message(encode_message("status", {"q": 1}))
+    assert msg == {"kind": "status", "meta": {"q": 1}, "tree": None}
+    # zero-size arrays are legal payloads
+    out = decode_message(encode_message(
+        "upload", {}, tree={"e": np.zeros((0, 4), np.float32)}))["tree"]
+    assert out["e"].shape == (0, 4)
+
+
+def test_float64_narrows_to_float32_on_the_wire():
+    out = decode_message(encode_message(
+        "upload", {}, tree=np.array([1.0, 2.0], np.float64)))["tree"]
+    assert out.dtype == np.float32
+
+
+def test_bf16_matches_the_precision_transform_cast_rule():
+    """precision='bf16' must reproduce the ``precision`` transform's
+    quantization exactly: cast to bfloat16, straight back to float32
+    (core/transforms.py:make_precision_transform)."""
+    g = np.random.default_rng(3).normal(size=(16, 16)).astype(np.float32)
+    out = decode_message(encode_message(
+        "upload", {}, tree={"g": g, "n": np.arange(4, dtype=np.int32)},
+        precision="bf16"))["tree"]
+    np.testing.assert_array_equal(out["g"],
+                                  g.astype(_BF16).astype(np.float32))
+    assert out["g"].dtype == np.float32           # decoder upcasts
+    # integer leaves always travel unchanged
+    np.testing.assert_array_equal(out["n"], np.arange(4, dtype=np.int32))
+    assert out["n"].dtype == np.int32
+
+
+def test_bf16_halves_the_float_payload():
+    tree = {"g": np.zeros((8, 8), np.float32),
+            "n": np.zeros((4,), np.int32)}
+    assert delta_nbytes(tree, precision="fp32") == 8 * 8 * 4 + 4 * 4
+    assert delta_nbytes(tree, precision="bf16") == 8 * 8 * 2 + 4 * 4
+
+
+def test_encode_refusals():
+    with pytest.raises(ValueError, match="wire precision"):
+        encode_message("upload", {}, tree=None, precision="fp8")
+    with pytest.raises(WireFormatError, match="string dict keys"):
+        encode_message("upload", {}, tree={1: np.zeros(2, np.float32)})
+    with pytest.raises(WireFormatError, match="not wire-encodable"):
+        encode_message("upload", {}, tree=np.zeros(2, np.complex64))
+
+
+def test_wrong_wire_version_is_its_own_refusal():
+    """A parseable frame from another generation must raise
+    WireVersionError (ledger reason ``wire_version``), distinct from
+    the catch-all malformed class."""
+    good = encode_message("upload", {}, tree=np.zeros(2, np.float32))
+    bumped = good[:4] + bytes([99]) + good[5:]
+    with pytest.raises(WireVersionError, match="wire version 99"):
+        decode_message(bumped)
+    assert issubclass(WireVersionError, WireError)
+    assert not issubclass(WireVersionError, WireFormatError)
+    assert issubclass(WireError, ValueError)
+
+
+@pytest.mark.parametrize("buf, match", [
+    (b"", "truncated frame"),
+    (b"RPFN\x01", "truncated frame"),
+    (b"XXXX" + encode_message("s", {})[4:], "bad magic"),
+    (_PREFIX.pack(MAGIC, WIRE_VERSION, 500) + b"{}", "truncated header"),
+    (_frame({"kind": "s", "meta": {}, "tree": None, "arrays": [],
+             "extra": 1}), "exactly kind/meta/tree/arrays"),
+    (_frame({"kind": "s", "meta": {}, "tree": None}),
+     "exactly kind/meta/tree/arrays"),
+    (_frame({"kind": 7, "meta": {}, "tree": None, "arrays": []}),
+     "kind must be a string"),
+    (_frame({"kind": "s", "meta": [], "tree": None, "arrays": []}),
+     "meta an object"),
+    (_frame({"kind": "s", "meta": {}, "tree": None, "arrays": {}}),
+     "manifest must be a list"),
+    (_PREFIX.pack(MAGIC, WIRE_VERSION, 4) + b"@@@@", "not JSON"),
+])
+def test_malformed_frames_refused(buf, match):
+    with pytest.raises(WireFormatError, match=match):
+        decode_message(buf)
+
+
+@pytest.mark.parametrize("header, payload, match", [
+    # unknown dtype in the manifest
+    ({"kind": "u", "meta": {}, "tree": {"a": 0},
+      "arrays": [{"dtype": "float16", "shape": [2]}]},
+     b"\x00" * 4, "malformed manifest"),
+    # manifest entry with extra keys
+    ({"kind": "u", "meta": {}, "tree": {"a": 0},
+      "arrays": [{"dtype": "float32", "shape": [1], "x": 1}]},
+     b"\x00" * 4, "malformed manifest"),
+    # negative / non-int shape
+    ({"kind": "u", "meta": {}, "tree": {"a": 0},
+      "arrays": [{"dtype": "float32", "shape": [-1]}]},
+     b"", "malformed manifest"),
+    # payload shorter than the manifest promises
+    ({"kind": "u", "meta": {}, "tree": {"a": 0},
+      "arrays": [{"dtype": "float32", "shape": [4]}]},
+     b"\x00" * 8, "payload truncated"),
+    # payload longer than the manifest accounts for
+    ({"kind": "u", "meta": {}, "tree": {"a": 0},
+      "arrays": [{"dtype": "float32", "shape": [1]}]},
+     b"\x00" * 8, "trailing payload"),
+    # array index out of range
+    ({"kind": "u", "meta": {}, "tree": {"a": 3},
+      "arrays": [{"dtype": "float32", "shape": [1]}]},
+     b"\x00" * 4, "out of range"),
+    # the same array referenced twice
+    ({"kind": "u", "meta": {}, "tree": {"t": [{"a": 0}, {"a": 0}]},
+      "arrays": [{"dtype": "float32", "shape": [1]}]},
+     b"\x00" * 4, "referenced twice"),
+    # an array the tree never uses
+    ({"kind": "u", "meta": {}, "tree": None,
+      "arrays": [{"dtype": "float32", "shape": [1]}]},
+     b"\x00" * 4, "never uses"),
+    # unknown skeleton tag / malformed nodes
+    ({"kind": "u", "meta": {}, "tree": {"q": 0}, "arrays": []},
+     b"", "unknown skeleton tag"),
+    ({"kind": "u", "meta": {}, "tree": {"s": [1, 2]}, "arrays": []},
+     b"", "malformed scalar"),
+    ({"kind": "u", "meta": {}, "tree": {"a": 0, "s": 1}, "arrays": []},
+     b"", "malformed skeleton node"),
+])
+def test_strict_decode_refusals(header, payload, match):
+    with pytest.raises(WireFormatError, match=match):
+        decode_message(_frame(header, payload))

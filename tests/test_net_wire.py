@@ -1,0 +1,255 @@
+"""The federation wire end to end (repro/net, PR 10 acceptance pins).
+
+A real :class:`BackgroundServer` on a real localhost socket, driven by
+the real :class:`ServiceClient` — no mocked transport anywhere.  Pins:
+the DESIGN.md §6 sync-equivalence anchor survives the wire at the
+repo-wide 1e-5 bound; a `run_traffic` schedule replayed through
+`net/client.py` reproduces the in-process trajectory (final params AND
+the rejection ledger, reason for reason); unparseable frames and
+foreign wire versions come back as 400 receipts recorded in the ledger
+(client -1); the HTTP surface refuses unknown routes/methods; drain
+works over the wire.  Everything runs in-thread (the daemon-thread
+server) — the multi-process drivers live in launch/federate_load.py
+and the CI serve-load leg, outside tier-1.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (DataSpec, ExecutionSpec, Federation, FederationSpec,
+                       ModelSpec, ScheduleSpec, build_corpus, spec_replace)
+from repro.net import BackgroundServer, HttpClient, ServiceClient
+from repro.net.codec import decode_message
+from repro.serve import FederationService, run_traffic, sync_twin_spec
+from conftest import max_param_dev
+
+
+def _wire_spec(**overrides):
+    base = spec_replace(
+        FederationSpec(
+            model=ModelSpec(vocab=64, topics=4, hidden=16),
+            data=DataSpec(num_clients=3, docs_per_node=40,
+                          val_docs_per_node=8),
+            schedule=ScheduleSpec(rounds=3),
+            execution=ExecutionSpec(batch_size=16, learning_rate=2e-4)),
+        {"schedule.mode": "buffered_async",
+         "execution.exec_mode": "loop",
+         "serving": {"host": "127.0.0.1", "port": 0,
+                     "wire_precision": "fp32"}})
+    return spec_replace(base, overrides) if overrides else base
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return build_corpus(sync_twin_spec(_wire_spec()))
+
+
+# ---------------------------------------------------------------------------
+# acceptance pin: the sync-equivalence anchor over the wire
+# ---------------------------------------------------------------------------
+def test_wire_anchor_sync_equivalence(corpus):
+    """M=K, max_staleness=0, in-order uploads THROUGH encode -> TCP ->
+    decode reproduce the sync twin's ``Federation.run()`` within the
+    repo-wide bound — the wire is numerically invisible at fp32."""
+    spec = _wire_spec()
+    twin = Federation.from_spec(sync_twin_spec(spec), corpus=corpus)
+    twin.run()
+    svc = FederationService.from_spec(spec, corpus=corpus)
+    with BackgroundServer(svc) as bg:
+        cl = ServiceClient(spec, bg.host, bg.port, corpus=corpus)
+        for _ in range(3):
+            for c in range(3):
+                assert cl.upload(c)["accepted"]
+        version, wire_params = cl.fetch_model()
+        assert version == 3 and cl.agg_index == 3
+        assert cl.rejection_counts == {}
+        cl.close()
+    assert max_param_dev(twin.engine.params, wire_params) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# acceptance pin: run_traffic wire parity (in-process vs over the socket)
+# ---------------------------------------------------------------------------
+def test_run_traffic_wire_parity(corpus):
+    """The same `run_traffic` schedule — holds, duplicates, interleaved
+    inference, staleness pressure (max_staleness=0 under holds forces
+    genuine ``stale`` AND ``superseded`` rejections) — driven once
+    in-process and once through `net/client.py` over localhost:
+    identical traffic stats, identical rejection ledger reason for
+    reason, final params within 1e-5."""
+    spec = _wire_spec(**{"schedule.buffer_size": 2,
+                         "schedule.max_staleness": 0,
+                         "schedule.staleness_policy": "polynomial"})
+    knobs = dict(sweeps=3, order_seed=7, hold_prob=0.5,
+                 duplicate_prob=0.5, infer_every=3, infer_batch=4)
+
+    local = FederationService.from_spec(spec, corpus=corpus)
+    local_stats = run_traffic(local, **knobs)
+
+    svc = FederationService.from_spec(spec, corpus=corpus)
+    with BackgroundServer(svc) as bg:
+        cl = ServiceClient(spec, bg.host, bg.port, corpus=corpus)
+        wire_stats = run_traffic(cl, **knobs)
+        _, wire_params = cl.fetch_model()
+        cl.close()
+
+    # the schedule saw staleness pressure — the ledgers must agree on it
+    assert set(local_stats["rejections"]) == {"stale", "superseded"}
+    assert wire_stats["rejections"] == local_stats["rejections"]
+    for k in ("steps", "uploads", "accepted", "held", "duplicates",
+              "aggregations", "version", "infer_calls"):
+        assert wire_stats[k] == local_stats[k], k
+    assert max_param_dev(svc._live[1], wire_params) == 0.0  # same object
+    assert max_param_dev(local._live[1], wire_params) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# the wire-refusal contract: malformed / wire_version -> 400 + ledger
+# ---------------------------------------------------------------------------
+def test_malformed_and_foreign_version_frames(corpus):
+    svc = FederationService.from_spec(_wire_spec(), corpus=corpus)
+    with BackgroundServer(svc) as bg:
+        http = HttpClient(bg.host, bg.port)
+        binary = "application/x-repro-wire"
+
+        status, resp = http.request("POST", "/v1/upload",
+                                    b"not a frame at all",
+                                    content_type=binary)
+        receipt = json.loads(resp)
+        assert status == 400 and not receipt["accepted"]
+        assert receipt["reason"] == "malformed" and receipt["client"] == -1
+
+        cl = ServiceClient(_wire_spec(), bg.host, bg.port, corpus=corpus)
+        _, delta, w = cl.client_update(0)
+        from repro.net.codec import encode_message
+        good = encode_message("upload",
+                              {"client": 0, "base_version": 0,
+                               "weight": w}, tree=delta)
+        foreign = good[:4] + bytes([99]) + good[5:]
+        status, resp = http.request("POST", "/v1/upload", foreign,
+                                    content_type=binary)
+        receipt = json.loads(resp)
+        assert status == 400 and receipt["reason"] == "wire_version"
+        assert receipt["client"] == -1
+
+        # a frame with a non-upload kind is malformed ON THIS ROUTE
+        status, resp = http.request(
+            "POST", "/v1/upload",
+            encode_message("status", {"client": 0, "base_version": 0,
+                                      "weight": 1.0}, tree=delta),
+            content_type=binary)
+        assert json.loads(resp)["reason"] == "malformed"
+
+        st = cl.status()
+        assert st["rejections"] == {"malformed": 2, "wire_version": 1}
+        assert st["rejection_records"] == 3    # ledger length (counters
+        cl.close()                             # only on the wire)
+        http.close()
+    # the in-process ledger carries the receipts, client pinned to -1
+    # (an unparseable frame has no trustworthy client id)
+    assert all(r["client"] == -1 for r in svc.rejections)
+    assert [r["reason"] for r in svc.rejections] == \
+        ["malformed", "wire_version", "malformed"]
+
+
+def test_http_surface_refusals_and_status(corpus):
+    svc = FederationService.from_spec(_wire_spec(), corpus=corpus)
+    with BackgroundServer(svc) as bg:
+        http = HttpClient(bg.host, bg.port)
+        status, resp = http.request("GET", "/v1/nope")
+        assert status == 404
+        assert "unknown endpoint" in json.loads(resp)["error"]
+        status, resp = http.request("GET", "/v1/upload")
+        assert status == 405
+        status, resp = http.request("POST", "/v1/infer", b"{}")
+        assert status == 400          # missing "bow"
+        status, resp = http.request("POST", "/v1/shutdown?drain=maybe")
+        assert status == 400
+        status, resp = http.request("GET", "/v1/status")
+        st = json.loads(resp)
+        assert status == 200
+        assert st["wire_precision"] == "fp32"
+        assert st["rejection_ledger_cap"] >= 1
+        assert st["version"] == 0 and st["draining"] is False
+        http.close()
+
+
+def test_model_endpoint_always_serves_fp32(corpus):
+    """wire_precision quantizes UPLOADS; the model clients train
+    against is always the fp32 snapshot (a bf16 base model would break
+    the sync-equivalence anchor)."""
+    spec = _wire_spec(**{"serving.wire_precision": "bf16"})
+    svc = FederationService.from_spec(spec, corpus=corpus)
+    with BackgroundServer(svc) as bg:
+        http = HttpClient(bg.host, bg.port)
+        status, resp = http.request("GET", "/v1/model")
+        assert status == 200
+        msg = decode_message(resp)
+        assert msg["kind"] == "model" and msg["meta"]["version"] == 0
+        import jax
+        for leaf in jax.tree_util.tree_leaves(msg["tree"]):
+            if np.issubdtype(np.asarray(leaf).dtype, np.floating):
+                assert np.asarray(leaf).dtype == np.float32
+        # a bf16 client still trains and uploads acceptably
+        cl = ServiceClient(spec, bg.host, bg.port, corpus=corpus)
+        assert cl.wire_precision == "bf16"
+        assert cl.upload(0)["accepted"]
+        http.close()
+        cl.close()
+
+
+def test_draining_receipts_cross_the_wire(corpus):
+    """An in-process drain (checkpoint/rollover, server still up):
+    later wire uploads come back as ``draining`` receipts."""
+    spec = _wire_spec(**{"schedule.buffer_size": 3,
+                         "schedule.max_staleness": 1})
+    svc = FederationService.from_spec(spec, corpus=corpus)
+    with BackgroundServer(svc) as bg:
+        cl = ServiceClient(spec, bg.host, bg.port, corpus=corpus)
+        assert cl.upload(0)["accepted"]           # partial buffer
+        svc.shutdown(drain=True)
+        r = cl.upload(1)
+        assert not r["accepted"] and r["reason"] == "draining"
+        assert cl.rejection_counts == {"draining": 1}
+        cl.close()
+    assert svc.version == 1 and svc.draining
+
+
+def test_wire_shutdown_drains_and_stops_serving(corpus):
+    """``POST /v1/shutdown?drain=true`` flushes the partial buffer,
+    answers with the summary, and THEN tears the listener down — the
+    wire analogue of ``FederationService.shutdown``."""
+    spec = _wire_spec(**{"schedule.buffer_size": 3,
+                         "schedule.max_staleness": 1})
+    svc = FederationService.from_spec(spec, corpus=corpus)
+    bg = BackgroundServer(svc).start()
+    cl = ServiceClient(spec, bg.host, bg.port, corpus=corpus)
+    assert cl.upload(0)["accepted"]               # partial buffer
+    summary = cl.shutdown(drain=True)
+    assert summary["flushed"] == 1
+    cl.close()
+    bg.stop()                                     # joins the dead loop
+    assert svc.version == 1 and svc.draining
+    fresh = HttpClient(bg.host, bg.port, timeout=5)
+    with pytest.raises(OSError):
+        fresh.request("GET", "/v1/status")
+
+
+def test_infer_over_the_wire_matches_in_process(corpus):
+    svc = FederationService.from_spec(_wire_spec(), corpus=corpus)
+    bow = np.random.default_rng(0).poisson(
+        1.0, (4, 64)).astype(np.float32)
+    with BackgroundServer(svc) as bg:
+        cl = ServiceClient(_wire_spec(), bg.host, bg.port, corpus=corpus)
+        theta = cl.infer(bow)
+        cl.close()
+    np.testing.assert_allclose(theta, np.asarray(svc.infer(bow)),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(theta.sum(axis=1), 1.0, atol=1e-5)
+
+
+def test_service_client_refuses_sync_specs(corpus):
+    sync = sync_twin_spec(_wire_spec())
+    with pytest.raises(ValueError, match="buffered_async"):
+        ServiceClient(sync, "127.0.0.1", 1)

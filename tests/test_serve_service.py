@@ -337,3 +337,112 @@ def test_lm_service_generates_and_refuses_infer():
     np.testing.assert_array_equal(out, svc.generate(prompts, max_new=4))
     with pytest.raises(ValueError, match="generate"):
         svc.infer(np.zeros((1, 128), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# PR 10 satellites: ledger cap, single-shot upload, the atomic hot swap
+# under concurrent readers
+# ---------------------------------------------------------------------------
+def test_rejection_ledger_is_capped_counters_are_not(corpus):
+    """The receipt ring keeps the LAST ``REJECTION_LEDGER_CAP`` records
+    (oldest evicted first, a long-running server never grows without
+    bound) while ``rejection_counts`` stays monotonic over everything
+    ever rejected — the two surfaces ``GET /v1/status`` reports."""
+    from repro.serve import REJECTION_LEDGER_CAP
+    svc = FederationService.from_spec(_async_spec(), corpus=corpus)
+    extra = 50
+    for i in range(REJECTION_LEDGER_CAP + extra):
+        svc.record_rejection(i, -1, "malformed")
+    assert len(svc.rejections) == REJECTION_LEDGER_CAP
+    assert svc.rejection_counts["malformed"] == REJECTION_LEDGER_CAP + extra
+    # the ring holds the most recent receipts: the first `extra` evicted
+    assert svc.rejections[0]["client"] == extra
+    assert svc.rejections[-1]["client"] == REJECTION_LEDGER_CAP + extra - 1
+    assert isinstance(svc.rejections, list)     # still the plain-list pin
+    st = svc.status()
+    assert st["rejection_records"] == REJECTION_LEDGER_CAP
+    assert st["rejection_ledger_cap"] == REJECTION_LEDGER_CAP
+    # totals survive snapshot/restore even after the ring dropped them
+    twin = FederationService.from_spec(_async_spec(), corpus=corpus)
+    twin.load_state_dict(svc.state_dict())
+    assert twin.rejection_counts["malformed"] \
+        == REJECTION_LEDGER_CAP + extra
+
+
+def test_record_rejection_validates_reason(corpus):
+    svc = FederationService.from_spec(_async_spec(), corpus=corpus)
+    with pytest.raises(ValueError, match="unknown rejection reason"):
+        svc.record_rejection(-1, -1, "gremlins")
+
+
+def test_upload_retries_zero_is_single_shot(corpus):
+    """``max_retries=0``: the transport runs EXACTLY once and no
+    backoff is ever scheduled — the wire front-end's mode, where the
+    HTTP client owns retries and a double-send would double-count the
+    delta."""
+    svc = FederationService.from_spec(_async_spec(), corpus=corpus)
+    calls, sleeps = [], []
+
+    r = svc.upload(0, max_retries=0,
+                   transport=lambda c, a: calls.append((c, a)),
+                   sleep_fn=sleeps.append)
+    assert r["accepted"] and calls == [(0, 0)] and sleeps == []
+
+    def dead(client, attempt):
+        calls.append((client, attempt))
+        raise UploadTimeout("wire gone")
+
+    calls.clear()
+    r = svc.upload(1, max_retries=0, transport=dead,
+                   sleep_fn=sleeps.append)
+    assert not r["accepted"] and r["reason"] == "upload_failed"
+    assert calls == [(1, 0)] and sleeps == []   # once, no backoff
+    assert svc.rejection_counts["upload_failed"] == 1
+
+    with pytest.raises(ValueError, match="max_retries"):
+        svc.upload(2, max_retries=-1)
+
+
+def test_live_snapshot_is_consistent_under_reader_hammer(corpus):
+    """Satellite pin for the atomic ``_live`` hot swap: N reader
+    threads hammer ``fetch_model`` while the writer aggregates on every
+    upload (M=1).  Every observed ``(version, params)`` pair must be
+    one the writer actually published — a torn read (new version, old
+    params, or vice versa) fails the fingerprint match."""
+    import threading
+
+    def fingerprint(params):
+        return float(sum(float(np.sum(np.asarray(leaf)))
+                         for leaf in jax.tree_util.tree_leaves(params)))
+
+    spec = _async_spec(**{"schedule.buffer_size": 1,
+                          "schedule.max_staleness": 8})
+    svc = FederationService.from_spec(spec, corpus=corpus)
+    published = {0: fingerprint(svc._live[1])}
+    done = threading.Event()
+    observed, errors = [], []
+
+    def reader():
+        try:
+            while not done.is_set():
+                version, params = svc.fetch_model()
+                observed.append((version, fingerprint(params)))
+        except BaseException as e:   # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for _ in range(4):               # 12 uploads -> 12 aggregations
+        for c in range(3):
+            assert svc.upload(c)["accepted"]
+            published[svc._live[0]] = fingerprint(svc._live[1])
+    done.set()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors
+    assert svc.version == 12 and len(published) == 13
+    assert len(observed) > 0
+    for version, fp in observed:
+        assert published[version] == fp, \
+            f"torn read at version {version}"
